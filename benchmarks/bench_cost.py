@@ -1,0 +1,77 @@
+"""Table 3: communication cost per client per round + aggregation compute.
+
+Communication is exact (bytes of the factors each method moves, from the
+real adapter shapes of the model); computation is the measured wall time of
+one server aggregation over M=10 uploads, for the dense (paper-faithful),
+factored (beyond-paper QR-SVD) and Pallas-kernel backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import Aggregator
+from repro.core.lora import adapter_paths
+from repro.configs import LoRAConfig, get_config
+
+
+def comm_bytes_per_client(cfg, lora: LoRAConfig, method: str, m: int,
+                          rank: int, dtype_bytes: int = 4) -> int:
+    """Upload + download volume per client per round (Table 1 column)."""
+    from repro.models import build_model
+    model = build_model(cfg, lora, dtype=jnp.float32, remat=False)
+    shapes = model.param_shapes()
+    per_rank_elems = 0  # elements per unit rank across all adapters
+    for ab in adapter_paths(shapes).values():
+        r_max, d_in = ab["a"].shape[-2:]
+        d_out = ab["b"].shape[-2]
+        layers = int(np.prod(ab["a"].shape[:-2])) or 1
+        per_rank_elems += layers * (d_in + d_out)
+    up = per_rank_elems * rank * dtype_bytes
+    if method == "flora":
+        # stacked matrices of ALL selected clients are broadcast down
+        down = per_rank_elems * rank * m * dtype_bytes
+    else:
+        down = per_rank_elems * rank * dtype_bytes
+    return up + down
+
+
+def run():
+    lora = LoRAConfig()  # paper ranks {8..64}
+    m = 10
+    avg_rank = int(np.mean(lora.rank_levels))
+    for arch in ("vit-base", "llama3.1-8b"):
+        cfg = get_config(arch)
+        for method in ("hetlora", "flora", "flexlora", "raflora"):
+            comm = comm_bytes_per_client(cfg, lora, method, m, avg_rank)
+            emit(f"table3_comm/{arch}/{method}", 0.0,
+                 f"{comm / 1e6:.1f}MB")
+
+    # aggregation compute: one layer of vit-base scale (768x768), M=10
+    key = jax.random.PRNGKey(0)
+    d = n = 768
+    ranks = list(np.random.default_rng(0).choice(lora.rank_levels, size=m))
+    factors = []
+    for i, r in enumerate(ranks):
+        kb, ka = jax.random.split(jax.random.fold_in(key, i))
+        factors.append((jax.random.normal(kb, (d, int(r))),
+                        jax.random.normal(ka, (int(r), n))))
+    n_k = [100.0] * m
+    gb = jnp.zeros((d, lora.r_max))
+    ga = jnp.zeros((lora.r_max, n))
+    for backend in ("dense", "factored", "kernel"):
+        agg = Aggregator("raflora", lora.rank_levels, backend=backend)
+
+        def call():
+            res = agg.aggregate_layer(factors, ranks, n_k, gb, ga)
+            jax.block_until_ready(res.b_g)
+            return res
+
+        _, us = timed(call)
+        emit(f"table3_comp/aggregate_layer_768/{backend}", us,
+             f"{us / 1e3:.2f}ms")
+    return True
+
+
+if __name__ == "__main__":
+    run()

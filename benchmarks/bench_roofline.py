@@ -1,0 +1,42 @@
+"""Roofline table (deliverable g): reads the dry-run artifacts and prints
+the three-term roofline per (arch x shape x mesh) -- the §Roofline source.
+"""
+import json
+import os
+
+from benchmarks.common import emit
+
+FILES = {
+    "16x16": "dryrun_single_pod.json",
+    "2x16x16": "dryrun_multi_pod.json",
+}
+
+
+def run(root: str = None):
+    root = root or os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    found = False
+    for mesh, fname in FILES.items():
+        path = os.path.join(root, fname)
+        if not os.path.exists(path):
+            print(f"# {fname} missing -- run repro.launch.dryrun first")
+            continue
+        found = True
+        rows = json.load(open(path))
+        for r in rows:
+            if r.get("status") != "OK":
+                emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}", 0.0,
+                     r["status"], reason=r.get("reason", r.get("error", "")))
+                continue
+            dom = r["bottleneck"]
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                 r.get("compile_s", 0) * 1e6,
+                 f"{dom}",
+                 t_compute_ms=round(r["t_compute_s"] * 1e3, 3),
+                 t_memory_ms=round(r["t_memory_s"] * 1e3, 3),
+                 t_collective_ms=round(r["t_collective_s"] * 1e3, 3),
+                 useful_ratio=round(r.get("useful_ratio", 0), 4))
+    return found
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # full sweep (~10 min)
+  PYTHONPATH=src python -m benchmarks.run --quick    # core subset (~3 min)
+  PYTHONPATH=src python -m benchmarks.run --only accuracy,kernels
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
+"""
+import argparse
+import sys
+import time
+
+BENCHES = {
+    "kernels": "benchmarks.bench_kernels",          # kernel validation/cost
+    "cost": "benchmarks.bench_cost",                # Table 3
+    "energy": "benchmarks.bench_energy_dynamics",   # Fig 2a/2b
+    "accuracy": "benchmarks.bench_accuracy",        # Table 2
+    "sensitivity": "benchmarks.bench_sensitivity",  # Fig 2c/2d/5a/6a-d, Tbl 4
+    "variants": "benchmarks.bench_lora_variants",   # Table 5 (QLoRA/DoRA)
+    "roofline": "benchmarks.bench_roofline",        # §Roofline table
+}
+
+QUICK = ("kernels", "cost", "energy", "roofline")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark keys")
+    args = ap.parse_args(argv)
+
+    if args.only:
+        names = args.only.split(",")
+    elif args.quick:
+        names = list(QUICK)
+    else:
+        names = list(BENCHES)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failed = []
+    for name in names:
+        mod_name = BENCHES[name]
+        print(f"# --- {name} ({mod_name}) ---", flush=True)
+        try:
+            import importlib
+            mod = importlib.import_module(mod_name)
+            mod.run()
+        except Exception as e:  # pragma: no cover
+            failed.append(name)
+            print(f"# FAILED {name}: {type(e).__name__}: {e}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s; failed={failed or 'none'}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

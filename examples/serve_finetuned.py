@@ -1,0 +1,11 @@
+"""Serving example (deliverable b): batched greedy decoding for a decoder
+arch from the assigned pool, exercising prefill -> KV-cache -> serve_step.
+
+  PYTHONPATH=src python examples/serve_finetuned.py --arch mamba2-1.3b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main())

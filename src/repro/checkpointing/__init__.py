@@ -1,0 +1,4 @@
+from repro.checkpointing.checkpoint import (load_metadata, load_pytree,
+                                            save_pytree)
+
+__all__ = ["load_metadata", "load_pytree", "save_pytree"]

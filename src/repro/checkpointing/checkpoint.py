@@ -1,0 +1,65 @@
+"""Round-resumable checkpointing: pytrees <-> npz with path-keyed arrays."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def visit(path, x):
+        if x is None:
+            return x
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(x)
+        return x
+
+    jax.tree_util.tree_map_with_path(visit, tree,
+                                     is_leaf=lambda x: x is None)
+    return flat
+
+
+def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f)
+
+
+def load_pytree(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+
+    def fetch(p, x):
+        if x is None:
+            return None
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        assert arr.shape == tuple(x.shape), (key, arr.shape, x.shape)
+        return jax.numpy.asarray(arr, dtype=x.dtype)
+
+    return jax.tree_util.tree_map_with_path(fetch, like,
+                                            is_leaf=lambda x: x is None)
+
+
+def load_metadata(path: str) -> Optional[dict]:
+    meta_path = (path if path.endswith(".npz") else path + ".npz") + ".meta.json"
+    meta_path = meta_path.replace(".npz.meta.json", ".meta.json") \
+        if not os.path.exists(meta_path) else meta_path
+    candidates = [path + ".meta.json", meta_path]
+    for c in candidates:
+        if os.path.exists(c):
+            with open(c) as f:
+                return json.load(f)
+    return None

@@ -1,0 +1,27 @@
+"""Architecture + experiment configuration registry."""
+from repro.configs.base import (ARCH_KINDS, INPUT_SHAPES, DECODE_32K,
+                                FLConfig, FrontendConfig, LONG_500K,
+                                LoRAConfig, MLAConfig, MoEConfig, ModelConfig,
+                                PREFILL_32K, SSMConfig, ShapeConfig, TRAIN_4K,
+                                get_config, list_configs, register)
+
+# The ten architectures assigned to this paper from the public pool.
+ASSIGNED_ARCHS = (
+    "mamba2-1.3b",
+    "nemotron-4-340b",
+    "qwen2-vl-7b",
+    "hymba-1.5b",
+    "deepseek-v2-236b",
+    "gemma-2b",
+    "hubert-xlarge",
+    "granite-3-8b",
+    "llama4-maverick-400b-a17b",
+    "qwen2-7b",
+)
+
+__all__ = [
+    "ARCH_KINDS", "ASSIGNED_ARCHS", "INPUT_SHAPES", "DECODE_32K", "FLConfig",
+    "FrontendConfig", "LONG_500K", "LoRAConfig", "MLAConfig", "MoEConfig",
+    "ModelConfig", "PREFILL_32K", "SSMConfig", "ShapeConfig", "TRAIN_4K",
+    "get_config", "list_configs", "register",
+]

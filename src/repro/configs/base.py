@@ -1,0 +1,403 @@
+"""Configuration system for the raFLoRA reproduction framework.
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``;
+federated fine-tuning settings live in ``FLConfig``; LoRA adapter settings in
+``LoRAConfig``; the four assigned input shapes in ``ShapeConfig``.
+
+Configs are plain frozen dataclasses so they hash, compare, and serialize
+cleanly, and so that jit caches key on them without surprises.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture kinds
+# ---------------------------------------------------------------------------
+
+ARCH_KINDS = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+# Attention flavours -- selected per config.
+ATTN_FULL = "full"          # causal full attention
+ATTN_SLIDING = "sliding"    # sliding-window causal attention
+ATTN_BIDIR = "bidirectional"  # encoder-only (hubert)
+
+# Activation functions for the FFN.
+ACT_GELU = "gelu"
+ACT_GEGLU = "geglu"
+ACT_SWIGLU = "swiglu"
+ACT_RELU2 = "relu2"         # squared ReLU (nemotron)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings (deepseek-v2, llama4-maverick)."""
+
+    num_experts: int
+    top_k: int
+    num_shared_experts: int = 0
+    expert_d_ff: int = 0          # per-expert FFN hidden size
+    shared_d_ff: int = 0          # shared-expert FFN hidden size
+    router_aux_loss_coef: float = 0.001
+    # llama4 interleaves dense and MoE layers; period=1 means every layer MoE.
+    moe_layer_period: int = 1
+    moe_layer_offset: int = 0
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        return (layer_idx % self.moe_layer_period) == self.moe_layer_offset
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (deepseek-v2)."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0           # 0 => full-rank q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD mixer settings."""
+
+    state_dim: int = 128           # N: SSM state size per head
+    num_heads: int = 0             # SSD heads (0 -> derived d_inner // head_dim)
+    head_dim: int = 64             # P: channels per head
+    expand: int = 2                # d_inner = expand * d_model
+    conv_dim: int = 4              # short causal conv width
+    chunk_size: int = 256          # SSD chunk length (dual form)
+    ngroups: int = 1               # B/C groups (GVA-style)
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Stub modality frontend (audio frames / vision patches).
+
+    Per the assignment, the conv codec / ViT is NOT implemented; instead
+    ``input_specs`` produces precomputed embeddings with these shapes.
+    """
+
+    kind: str = "none"             # "audio" | "vision" | "none"
+    embed_dim: int = 0             # dimension of the precomputed embeddings
+    tokens_per_item: int = 0       # e.g. patches per image (vlm interleave)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture from the assigned pool (or a paper-side model)."""
+
+    name: str
+    kind: str                       # one of ARCH_KINDS
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // num_heads
+    activation: str = ACT_SWIGLU
+    attn_type: str = ATTN_FULL
+    sliding_window: int = 0         # 0 -> no window; used when attn_type=sliding
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rope_type: str = "default"      # "default" | "mrope" | "none"
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    rms_norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # sub-configs; None where not applicable
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    frontend: FrontendConfig = field(default_factory=FrontendConfig)
+    # hybrid (hymba): parallel attention + ssm heads within one mixer
+    hybrid_attn_ratio: float = 0.5  # fraction of mixer output from attention
+    # which layers use full attention when attn_type == "sliding"
+    # (hymba/llama4 keep a few global layers)
+    global_attn_every: int = 0      # 0 -> none; n -> every n-th layer full attn
+    # LoRA injection points (module names understood by models/lora_points.py)
+    lora_targets: Tuple[str, ...] = ("q_proj", "v_proj")
+    # citation for the config values
+    source: str = ""
+
+    # ---- derived ---------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return self.attn_type == ATTN_BIDIR
+
+    @property
+    def supports_decode(self) -> bool:
+        return not self.is_encoder_only
+
+    def supports_long_context(self) -> bool:
+        """True if decode at 500k context is sub-quadratic / bounded memory."""
+        if self.kind in ("ssm", "hybrid"):
+            return True
+        # attention archs qualify via the sliding-window variant
+        return self.sliding_window > 0
+
+    def num_params(self) -> int:
+        """Approximate parameter count (embedding + blocks + head)."""
+        d, v, L = self.d_model, self.vocab_size, self.num_layers
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d  # lm head
+        total += sum(self._params_per_layer(i) for i in range(L))
+        total += d  # final norm
+        return total
+
+    def _params_per_layer(self, layer_idx: int = 0) -> int:
+        d = self.d_model
+        hd = self.resolved_head_dim
+        p = 2 * d  # two rms norms
+        # --- mixer ---
+        if self.kind == "ssm":
+            assert self.ssm is not None
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = s.num_heads or d_in // s.head_dim
+            conv_ch = d_in + 2 * s.ngroups * s.state_dim
+            p += d * (2 * d_in + 2 * s.ngroups * s.state_dim + nheads)  # in_proj
+            p += conv_ch * s.conv_dim  # conv
+            p += nheads * 2            # A_log, D
+            p += d_in * d              # out_proj
+        elif self.mla is not None:
+            m = self.mla
+            qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+            if m.q_lora_rank:
+                p += d * m.q_lora_rank + m.q_lora_rank * self.num_heads * qk_dim
+            else:
+                p += d * self.num_heads * qk_dim
+            p += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            p += m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            p += self.num_heads * m.v_head_dim * d
+        else:
+            q_out = self.num_heads * hd
+            kv_out = self.num_kv_heads * hd
+            p += d * (q_out + 2 * kv_out) + q_out * d
+            if self.kind == "hybrid":
+                assert self.ssm is not None
+                s = self.ssm
+                d_in = s.expand * d
+                nheads = s.num_heads or d_in // s.head_dim
+                p += d * (2 * d_in + 2 * s.ngroups * s.state_dim + nheads)
+                p += (d_in + 2 * s.ngroups * s.state_dim) * s.conv_dim
+                p += nheads * 2 + d_in * d
+        # --- ffn ---
+        if self.kind == "ssm":
+            pass  # mamba2 has no separate FFN
+        elif self.moe is not None and not self.moe.is_moe_layer(layer_idx):
+            gated = self.activation in (ACT_GEGLU, ACT_SWIGLU)
+            dense_ff = self.moe.expert_d_ff * 2 if self.moe.expert_d_ff else self.d_ff
+            p += d * dense_ff * (3 if gated else 2)
+        elif self.moe is not None:
+            mo = self.moe
+            e_ff = mo.expert_d_ff or self.d_ff
+            gated = self.activation in (ACT_GEGLU, ACT_SWIGLU)
+            per_expert = d * e_ff * (3 if gated else 2)
+            p += mo.num_experts * per_expert
+            p += mo.num_shared_experts * d * (mo.shared_d_ff or e_ff) * (3 if gated else 2)
+            p += d * mo.num_experts  # router
+        else:
+            gated = self.activation in (ACT_GEGLU, ACT_SWIGLU)
+            p += d * self.d_ff * (3 if gated else 2)
+        return p
+
+    def reduced(self, num_layers: int = 2, d_model: int = 256,
+                vocab_size: int = 512, max_experts: int = 4) -> "ModelConfig":
+        """A smoke-test variant of the same family (<=2 layers, d<=512)."""
+        d_model = min(d_model, 512)
+        scale = d_model / self.d_model
+        num_heads = max(2, min(self.num_heads, 4))
+        num_kv = max(1, min(self.num_kv_heads, num_heads))
+        while num_heads % num_kv:
+            num_kv -= 1
+        head_dim = max(16, d_model // num_heads)
+        d_ff = max(32, int(self.d_ff * scale)) if self.d_ff else 0
+        moe = None
+        if self.moe is not None:
+            n_e = min(self.moe.num_experts, max_experts)
+            moe = dataclasses.replace(
+                self.moe,
+                num_experts=n_e,
+                top_k=min(self.moe.top_k, n_e),
+                num_shared_experts=min(self.moe.num_shared_experts, 1),
+                expert_d_ff=max(32, int((self.moe.expert_d_ff or self.d_ff) * scale)),
+                shared_d_ff=max(32, int((self.moe.shared_d_ff or self.d_ff) * scale)),
+            )
+        mla = None
+        if self.mla is not None:
+            mla = dataclasses.replace(
+                self.mla, kv_lora_rank=64, q_lora_rank=0,
+                qk_nope_head_dim=head_dim, qk_rope_head_dim=max(8, head_dim // 2),
+                v_head_dim=head_dim)
+        ssm = None
+        if self.ssm is not None:
+            ssm = dataclasses.replace(
+                self.ssm, state_dim=min(self.ssm.state_dim, 16),
+                head_dim=32, chunk_size=32)
+        frontend = self.frontend
+        if frontend.kind != "none":
+            frontend = dataclasses.replace(
+                frontend, embed_dim=d_model,
+                tokens_per_item=min(frontend.tokens_per_item, 16) or 16)
+        mrope_sections = self.mrope_sections
+        if self.rope_type == "mrope":
+            half = head_dim // 2
+            s1 = max(1, half // 4)
+            s2 = (half - s1) // 2
+            s3 = half - s1 - s2
+            mrope_sections = (s1, s2, s3)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=num_layers,
+            d_model=d_model,
+            num_heads=num_heads,
+            num_kv_heads=num_kv,
+            head_dim=head_dim,
+            d_ff=d_ff,
+            vocab_size=vocab_size,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            mrope_sections=mrope_sections,
+            moe=moe,
+            mla=mla,
+            ssm=ssm,
+            frontend=frontend,
+        )
+
+    def with_sliding_window(self, window: int = 8192,
+                            global_every: int = 0) -> "ModelConfig":
+        """Sliding-window variant (enables long_500k for attention archs)."""
+        return dataclasses.replace(
+            self, name=self.name + "-swa", attn_type=ATTN_SLIDING,
+            sliding_window=window, global_attn_every=global_every)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+# ---------------------------------------------------------------------------
+# LoRA + federated learning configs (paper settings as defaults)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LoRAConfig:
+    """Heterogeneous-rank LoRA settings (paper Table 6-9 defaults)."""
+
+    rank_levels: Tuple[int, ...] = (8, 16, 32, 48, 64)
+    rank_probs: Tuple[float, ...] = (0.2, 0.2, 0.2, 0.2, 0.2)
+    alpha_equals_rank: bool = True   # LoRA alpha = r_k -> unit scaling
+    alpha: float = 0.0               # used when alpha_equals_rank=False
+    dropout: float = 0.0
+    init_b_zero: bool = True         # standard LoRA init: B=0, A ~ N(0, 1/r)
+    # PEFT variant (paper Table 5): "lora" | "dora" | "qlora"
+    variant: str = "lora"
+    quant_bits: int = 4              # qlora fake-quant bits for the base
+
+    @property
+    def r_max(self) -> int:
+        return max(self.rank_levels)
+
+    @property
+    def r_min(self) -> int:
+        return min(self.rank_levels)
+
+    def scaling(self, rank: int) -> float:
+        if self.alpha_equals_rank:
+            return 1.0
+        return self.alpha / rank
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    """Federated fine-tuning settings (paper Section 6.1 defaults)."""
+
+    num_clients: int = 100
+    participation: float = 0.10      # fraction of clients per round
+    num_rounds: int = 100
+    local_epochs: int = 1
+    local_batch_size: int = 32
+    learning_rate: float = 5e-4
+    lr_schedule: str = "linear"      # linear decay over rounds
+    weight_decay: float = 0.0
+    aggregator: str = "raflora"      # fedavg|hetlora|flora|flexlora|raflora
+    seed: int = 0
+    # data partitioning
+    partition: str = "dirichlet"     # "iid" | "dirichlet" | "pathological"
+    dirichlet_alpha: float = 1.0
+    labels_per_client: int = 20      # for pathological c<labels>(alpha)
+
+    @property
+    def clients_per_round(self) -> int:
+        return max(1, int(round(self.num_clients * self.participation)))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(config: ModelConfig) -> ModelConfig:
+    if config.name in _REGISTRY:
+        raise ValueError(f"duplicate architecture {config.name!r}")
+    _REGISTRY[config.name] = config
+    return config
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown architecture {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> Sequence[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    # import registers each architecture
+    from repro.configs import (  # noqa: F401
+        mamba2_1p3b, nemotron_4_340b, qwen2_vl_7b, hymba_1p5b,
+        deepseek_v2_236b, gemma_2b, hubert_xlarge, granite_3_8b,
+        llama4_maverick_400b_a17b, qwen2_7b, paper_models,
+    )
+    _LOADED = True

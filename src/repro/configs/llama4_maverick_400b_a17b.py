@@ -1,0 +1,36 @@
+"""llama4-maverick-400b-a17b — MoE 128e top-1, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E]
+
+Llama-4 interleaves dense and MoE FFN layers and uses chunked/sliding
+attention on most layers for long context; we model the latter with the
+sliding-window variant (window=8192) for the long_500k shape.
+"""
+from repro.configs.base import (ACT_SWIGLU, FrontendConfig, MoEConfig,
+                                ModelConfig, register)
+
+LLAMA4_MAVERICK = register(ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    kind="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,            # GQA kv=8
+    head_dim=128,
+    d_ff=8192,                 # expert intermediate size
+    vocab_size=202048,
+    activation=ACT_SWIGLU,
+    rope_theta=500_000.0,
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=1,               # top-1 routing
+        num_shared_experts=1,  # llama4 keeps one shared expert
+        expert_d_ff=8192,
+        shared_d_ff=8192,
+        moe_layer_period=2,    # interleaved dense/MoE layers
+        moe_layer_offset=1,
+    ),
+    # early fusion: image patches enter the token stream directly
+    frontend=FrontendConfig(kind="vision", embed_dim=5120, tokens_per_item=144),
+    lora_targets=("q_proj", "k_proj", "v_proj", "o_proj"),
+    source="Llama-4 Maverick [hf:meta-llama/Llama-4-Scout-17B-16E]; MoE top-1, early fusion",
+))

@@ -1,0 +1,27 @@
+"""The paper's contribution: rank-partitioned aggregation for FedLoRA."""
+from repro.core.aggregation import (AggregationResult, Aggregator, METHODS,
+                                    aggregate_flexlora, aggregate_flora,
+                                    aggregate_hetlora, aggregate_raflora,
+                                    pad_stack)
+from repro.core.energy import (EnergyTrace, effective_rank, energies,
+                               energy_breakdown, higher_rank_energy_ratio,
+                               rho)
+from repro.core.partitions import (boundaries, boundary_of_index, coverage,
+                                   omega_flexlora, omega_raflora,
+                                   partition_bounds, prev_boundary)
+from repro.core.svd import svd_realloc_dense, svd_realloc_factored
+from repro.core.theory import (SampledSim, collapse_bound,
+                               contraction_factors, h_sampling,
+                               mean_field_floor, mean_field_step,
+                               rho_series, simulate_expected)
+
+__all__ = [
+    "AggregationResult", "Aggregator", "METHODS", "EnergyTrace", "SampledSim",
+    "aggregate_flexlora", "aggregate_flora", "aggregate_hetlora",
+    "aggregate_raflora", "boundaries", "boundary_of_index", "collapse_bound",
+    "contraction_factors", "coverage", "effective_rank", "energies",
+    "energy_breakdown", "h_sampling", "higher_rank_energy_ratio",
+    "mean_field_floor", "mean_field_step", "omega_flexlora", "omega_raflora",
+    "pad_stack", "partition_bounds", "prev_boundary", "rho", "rho_series",
+    "simulate_expected", "svd_realloc_dense", "svd_realloc_factored",
+]

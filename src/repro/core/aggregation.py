@@ -1,0 +1,242 @@
+"""Server-side aggregation rules for heterogeneous-rank FedLoRA.
+
+Implements the paper's method and every baseline it compares against
+(Table 1), all over one stacked-factor representation:
+
+  bs    (M, d, r_max)   client B factors, zero-padded above r_k
+  as_   (M, r_max, n)   client A factors, zero-padded below r_k
+  ranks (M,)            client ranks
+  n_k   (M,)            client sample counts
+
+Methods
+  fedavg    -- homogeneous FedAvg of factors (FedIT); requires equal ranks
+  hetlora   -- zero-pad, average B and A SEPARATELY (aggregation bias!)
+  flora     -- stacking: dW = sum w_k B_k A_k merged into the base weights,
+               adapters re-initialized (cold start) -- bias-free, expensive
+  flexlora  -- dW = sum (n_k/N) B_k A_k, SVD realloc (rank collapse!)
+  raflora   -- rank-partitioned dW (Eq. 8), SVD realloc  <- the paper
+
+``backend="dense"`` materializes dW (paper-faithful); ``backend="factored"``
+uses the QR low-rank SVD (beyond-paper, bit-compatible up to float error);
+``backend="kernel"`` routes the weighted contraction through the Pallas
+rank-partition kernel (TPU path, interpret-mode on CPU).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partitions as parts
+from repro.core.svd import (dense_from_weighted, factored_from_weighted,
+                            svd_realloc_dense, svd_realloc_factored)
+
+
+@dataclass
+class AggregationResult:
+    b_g: jnp.ndarray                  # (d, r_max)
+    a_g: jnp.ndarray                  # (r_max, n)
+    sigma: Optional[jnp.ndarray]      # singular values (r_max,) or None
+    merge_delta: Optional[jnp.ndarray] = None  # FLoRA: dW folded into base
+
+
+def pad_stack(factors: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
+              r_max: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[(B_k (d, r_k), A_k (r_k, n))] -> padded stacks (M,d,r_max),(M,r_max,n)."""
+    bs, as_ = [], []
+    for b, a in factors:
+        r = b.shape[-1]
+        pad_b = [(0, 0)] * b.ndim
+        pad_b[-1] = (0, r_max - r)
+        pad_a = [(0, 0)] * a.ndim
+        pad_a[-2] = (0, r_max - r)
+        bs.append(jnp.pad(b, pad_b))
+        as_.append(jnp.pad(a, pad_a))
+    return jnp.stack(bs), jnp.stack(as_)
+
+
+def _weights(n_k: Sequence[float]) -> np.ndarray:
+    n = np.asarray(n_k, dtype=np.float64)
+    return n / n.sum()
+
+
+# ---------------------------------------------------------------------------
+# aggregation rules
+# ---------------------------------------------------------------------------
+
+def aggregate_fedavg(bs, as_, ranks, n_k) -> AggregationResult:
+    """Homogeneous FedAvg of the raw factors (FedIT). Biased mixing of
+    B and A -- included as the homogeneous baseline."""
+    ranks = np.asarray(ranks)
+    assert (ranks == ranks[0]).all(), "fedavg requires homogeneous ranks"
+    w = jnp.asarray(_weights(n_k), dtype=bs.dtype)
+    wshape = (-1,) + (1,) * (bs.ndim - 1)
+    b_g = (w.reshape(wshape) * bs).sum(0)
+    a_g = (w.reshape(wshape) * as_).sum(0)
+    return AggregationResult(b_g, a_g, None)
+
+
+def aggregate_hetlora(bs, as_, ranks, n_k) -> AggregationResult:
+    """HetLoRA: zero-padding alignment, separate averaging of B and A.
+    E[B]E[A] != E[BA] -- the aggregation bias the later methods remove."""
+    w = jnp.asarray(_weights(n_k), dtype=bs.dtype)
+    wshape = (-1,) + (1,) * (bs.ndim - 1)
+    b_g = (w.reshape(wshape) * bs).sum(0)
+    a_g = (w.reshape(wshape) * as_).sum(0)
+    return AggregationResult(b_g, a_g, None)
+
+
+def aggregate_flora(bs, as_, ranks, n_k) -> AggregationResult:
+    """FLoRA: stacking-based, bias-free. The aggregate dW = sum w_k B_k A_k
+    is merged into the base weights and adapters restart from scratch
+    (cold start). Communication cost O(M (d+n) r) is charged by the cost
+    model in benchmarks/bench_cost.py."""
+    w = jnp.asarray(_weights(n_k), dtype=jnp.float32)
+    dw = jnp.einsum("m,m...dr,m...rn->...dn", w, bs.astype(jnp.float32),
+                    as_.astype(jnp.float32))
+    r_max = bs.shape[-1]
+    d, n = bs.shape[-2], as_.shape[-1]
+    lead = bs.shape[1:-2]
+    # cold start: fresh (zero) global adapter; dW returned for base merge
+    b_g = jnp.zeros(lead + (d, r_max), jnp.float32)
+    a_g = jnp.zeros(lead + (r_max, n), jnp.float32)
+    return AggregationResult(b_g, a_g, None, merge_delta=dw)
+
+
+def aggregate_flexlora(bs, as_, ranks, n_k, *, backend: str = "factored"
+                       ) -> AggregationResult:
+    """FlexLoRA: rank-agnostic weighted sum + SVD realloc (Eqs. 2-4)."""
+    r_max = bs.shape[-1]
+    omega = jnp.asarray(parts.omega_flexlora(ranks, n_k, r_max))
+    return _weighted_svd(bs, as_, omega, None, None, None, r_max, backend)
+
+
+def aggregate_raflora(bs, as_, ranks, n_k, *, rank_levels: Sequence[int],
+                      global_b=None, global_a=None,
+                      backend: str = "factored") -> AggregationResult:
+    """raFLoRA: rank-partitioned aggregation (Eq. 8 / Algorithm 1)."""
+    r_max = max(rank_levels)
+    omega_np, fallback_np = parts.omega_raflora(ranks, n_k, rank_levels)
+    omega = jnp.asarray(omega_np)
+    fallback = jnp.asarray(fallback_np)
+    if not np.any(fallback_np):
+        fallback = None
+    return _weighted_svd(bs, as_, omega, global_b, global_a, fallback,
+                         r_max, backend)
+
+
+def _weighted_svd(bs, as_, omega, global_b, global_a, fallback, r_max,
+                  backend) -> AggregationResult:
+    """Weighted-diagonal contraction + SVD realloc.
+
+    Accepts either unstacked factors (M, d, r) or layer-stacked (M, L, d, r)
+    -- the latter vmaps the whole pipeline over the layer axis (our models
+    stack per-layer params for lax.scan).
+    """
+    if bs.ndim == 4:  # (M, L, d, r): vmap over the layer axis
+        def one_layer(bs_l, as_l, gb_l, ga_l):
+            res = _weighted_svd(bs_l, as_l, omega, gb_l, ga_l, fallback,
+                                r_max, backend)
+            sig = res.sigma if res.sigma is not None else jnp.zeros((r_max,))
+            return res.b_g, res.a_g, sig
+        gb = global_b if global_b is not None else \
+            jnp.zeros((bs.shape[1], bs.shape[2], r_max), jnp.float32)
+        ga = global_a if global_a is not None else \
+            jnp.zeros((as_.shape[1], r_max, as_.shape[3]), jnp.float32)
+        b_g, a_g, sigma = jax.vmap(one_layer, in_axes=(1, 1, 0, 0))(
+            bs, as_, gb, ga)
+        return AggregationResult(b_g, a_g, sigma)
+    if backend == "dense":
+        dw = dense_from_weighted(bs, as_, omega, global_b, global_a, fallback)
+        b_g, a_g, sigma = svd_realloc_dense(dw, r_max)
+    elif backend == "factored":
+        u_c, v_c = factored_from_weighted(bs, as_, omega, global_b, global_a,
+                                          fallback)
+        b_g, a_g, sigma = svd_realloc_factored(u_c, v_c, r_max)
+    elif backend == "kernel":
+        from repro.kernels import ops as kernel_ops
+        dw = kernel_ops.rank_partition_agg(bs, as_, omega, global_b, global_a,
+                                           fallback)
+        b_g, a_g, sigma = svd_realloc_dense(dw, r_max)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return AggregationResult(b_g, a_g, sigma)
+
+
+# ---------------------------------------------------------------------------
+# method registry + per-adapter driver
+# ---------------------------------------------------------------------------
+
+METHODS = ("fedavg", "hetlora", "flora", "flexlora", "raflora", "ffa")
+
+
+def aggregate_ffa(bs, as_, ranks, n_k, *, global_b) -> AggregationResult:
+    """FFA-LoRA (paper ref [9]): the random-init DOWN factor is FROZEN at
+    its shared global value; only the UP factor is trained and averaged --
+    removes the E[B]E[A] != E[BA] bias in the homogeneous setting.
+
+    Layout note: the server maps model lora_a -> first factor here, so the
+    FROZEN factor is ``bs``/``global_b`` and the averaged one is ``as_``.
+    Heterogeneous ranks: zero-padded averaging (HetLoRA-style) on the
+    trained factor.
+    """
+    w = jnp.asarray(_weights(n_k), dtype=as_.dtype)
+    wshape = (-1,) + (1,) * (as_.ndim - 1)
+    a_g = (w.reshape(wshape) * as_).sum(0)
+    return AggregationResult(global_b, a_g, None)
+
+
+@dataclass
+class Aggregator:
+    """Aggregates a round of client adapter uploads, layer by layer."""
+
+    method: str
+    rank_levels: Sequence[int]
+    backend: str = "factored"
+    # raFLoRA partial variants (Fig. 5a): apply effective-contributor
+    # weighting only up to this boundary; higher partitions use FlexLoRA
+    # weights. None = full raFLoRA.
+    partial_up_to: Optional[int] = None
+
+    def __post_init__(self):
+        assert self.method in METHODS, self.method
+
+    def aggregate_layer(self, factors, ranks, n_k, global_b=None,
+                        global_a=None) -> AggregationResult:
+        """factors: [(B_k (d, r_k), A_k (r_k, n))] for one adapter layer."""
+        r_max = max(self.rank_levels)
+        bs, as_ = pad_stack(factors, r_max)
+        if self.method == "fedavg":
+            return aggregate_fedavg(bs, as_, ranks, n_k)
+        if self.method == "hetlora":
+            return aggregate_hetlora(bs, as_, ranks, n_k)
+        if self.method == "ffa":
+            return aggregate_ffa(bs, as_, ranks, n_k, global_b=global_b)
+        if self.method == "flora":
+            return aggregate_flora(bs, as_, ranks, n_k)
+        if self.method == "flexlora":
+            return aggregate_flexlora(bs, as_, ranks, n_k,
+                                      backend=self.backend)
+        # raflora (optionally partial)
+        if self.partial_up_to is None:
+            return aggregate_raflora(
+                bs, as_, ranks, n_k, rank_levels=self.rank_levels,
+                global_b=global_b, global_a=global_a, backend=self.backend)
+        return self._aggregate_partial(bs, as_, ranks, n_k, global_b, global_a)
+
+    def _aggregate_partial(self, bs, as_, ranks, n_k, global_b, global_a
+                           ) -> AggregationResult:
+        """raFLoRA-a/b/c variants: rank-aware weights for partitions up to
+        ``partial_up_to``; FlexLoRA weights above (Fig. 5a)."""
+        r_max = max(self.rank_levels)
+        om_ra, fb = parts.omega_raflora(ranks, n_k, self.rank_levels)
+        om_flex = parts.omega_flexlora(ranks, n_k, r_max)
+        cut = self.partial_up_to
+        omega = np.concatenate([om_ra[:, :cut], om_flex[:, cut:]], axis=1)
+        fb = np.concatenate([fb[:cut], np.zeros(r_max - cut)])
+        fallback = jnp.asarray(fb) if fb.any() else None
+        return _weighted_svd(bs, as_, jnp.asarray(omega), global_b, global_a,
+                             fallback, r_max, self.backend)

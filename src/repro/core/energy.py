@@ -1,0 +1,83 @@
+"""Energy-spectrum metrics (Section 3 / Definition 1 of the paper).
+
+"Energy" = squared singular values. ``rho_r`` is the normalized cumulative
+energy ratio; rank collapse = (1 - rho_{r_1}) -> 0 over rounds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def energies(sigma: jnp.ndarray) -> jnp.ndarray:
+    """e_i = sigma_i^2 (descending order preserved)."""
+    return jnp.square(sigma.astype(jnp.float32))
+
+
+def cumulative_energy(sigma: jnp.ndarray, r: int) -> jnp.ndarray:
+    """E_r = sum_{i<=r} e_i."""
+    return energies(sigma)[:r].sum()
+
+
+def rho(sigma: jnp.ndarray, r: int) -> jnp.ndarray:
+    """rho_r = E_r / E_{r_max} in [0, 1]."""
+    e = energies(sigma)
+    total = e.sum()
+    return jnp.where(total > 0, e[:r].sum() / jnp.maximum(total, 1e-30), 0.0)
+
+
+def higher_rank_energy_ratio(sigma: jnp.ndarray, r1: int) -> jnp.ndarray:
+    """1 - rho_{r1}: the quantity whose decay defines rank collapse."""
+    return 1.0 - rho(sigma, r1)
+
+
+def effective_rank(sigma: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """Entropy-based effective rank (Roy & Vetterli): exp(H(p)), p = e/sum e."""
+    e = energies(sigma)
+    p = e / jnp.maximum(e.sum(), eps)
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, eps)), 0.0))
+    return jnp.exp(h)
+
+
+def energy_breakdown(sigma: jnp.ndarray,
+                     rank_levels: Sequence[int]) -> dict:
+    """Per-partition energy fractions (the stacked bars of Figure 2a/2b)."""
+    from repro.core.partitions import partition_bounds
+    e = np.asarray(energies(sigma))
+    total = max(float(e.sum()), 1e-30)
+    out = {}
+    for (l, h) in partition_bounds(rank_levels):
+        out[f"rank_{l}_{h}"] = float(e[l - 1:h].sum() / total)
+    return out
+
+
+@dataclass
+class EnergyTrace:
+    """Round-by-round energy statistics of one adapter (or model average)."""
+
+    rank_levels: Sequence[int]
+    rho_r1: list = None
+    eff_rank: list = None
+    breakdown: list = None
+
+    def __post_init__(self):
+        self.rho_r1 = []
+        self.eff_rank = []
+        self.breakdown = []
+
+    def record(self, sigma) -> None:
+        r1 = min(self.rank_levels)
+        self.rho_r1.append(float(rho(sigma, r1)))
+        self.eff_rank.append(float(effective_rank(sigma)))
+        self.breakdown.append(energy_breakdown(sigma, self.rank_levels))
+
+    @property
+    def higher_rank_ratio(self) -> np.ndarray:
+        return 1.0 - np.asarray(self.rho_r1)
+
+    def collapsed(self, threshold: float = 0.05) -> bool:
+        """Definition 1: higher-rank energy has become negligible."""
+        return bool(self.higher_rank_ratio[-1] < threshold)

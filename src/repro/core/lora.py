@@ -1,0 +1,136 @@
+"""LoRA adapter tree utilities.
+
+Adapters live inline in the model params as ``lora_a`` (r_max, in) /
+``lora_b`` (out, r_max) leaves. The federation layer needs to
+
+  * split params into (base, lora) so clients optimize only adapters;
+  * truncate adapters to a client rank r_k (broadcast, Alg. 1 line 4);
+  * pad trained rank-r_k adapters back to r_max (upload);
+  * enumerate adapters as {path: (B, A)} for the aggregators.
+
+Note the model convention is A: (r, d_in), B: (d_out, r), update = B @ A --
+matching the paper's dW = B A with B in R^{d x r}, A in R^{r x n} after the
+obvious transpose bookkeeping.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LORA_KEYS = ("lora_a", "lora_b", "lora_m")  # lora_m: DoRA magnitude
+
+
+def _is_lora_path(path) -> bool:
+    last = path[-1]
+    key = getattr(last, "key", None)
+    return key in LORA_KEYS
+
+
+def split_lora(params) -> Tuple[Any, Any]:
+    """(base, lora) trees with the SAME structure; non-members are None."""
+    base = jax.tree_util.tree_map_with_path(
+        lambda p, x: None if _is_lora_path(p) else x, params)
+    lora = jax.tree_util.tree_map_with_path(
+        lambda p, x: x if _is_lora_path(p) else None, params)
+    return base, lora
+
+
+def merge_lora(base, lora):
+    """Inverse of split_lora."""
+    return jax.tree.map(lambda b, l: b if l is None else l, base, lora,
+                        is_leaf=lambda x: x is None)
+
+
+def lora_only(params):
+    """Prune the tree down to only adapter leaves (for optimizer state)."""
+    _, lora = split_lora(params)
+    return lora
+
+
+def adapter_paths(params) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """{dotted/path: {"a": A, "b": B}} for every adapter in the tree."""
+    out: Dict[str, Dict[str, jnp.ndarray]] = {}
+
+    def visit(path, x):
+        if _is_lora_path(path):
+            parent = "/".join(str(getattr(p, "key", p)) for p in path[:-1])
+            kind = "a" if path[-1].key == "lora_a" else "b"
+            out.setdefault(parent, {})[kind] = x
+        return x
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return out
+
+
+def truncate_adapters(lora_tree, rank: int):
+    """Broadcast step: slice every adapter to the client's rank r_k."""
+
+    def trunc(path, x):
+        if x is None:
+            return None
+        if path[-1].key == "lora_m":
+            return x                      # magnitudes are not rank-indexed
+        if path[-1].key == "lora_a":
+            return x[..., :rank, :]
+        return x[..., :, :rank]
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: trunc(p, x) if x is not None else None, lora_tree,
+        is_leaf=lambda x: x is None)
+
+
+def pad_adapters(lora_tree, r_max: int):
+    """Upload step: zero-pad rank-r_k adapters back to r_max."""
+
+    def pad(path, x):
+        if x is None:
+            return None
+        if path[-1].key == "lora_m":
+            return x
+        if path[-1].key == "lora_a":
+            r = x.shape[-2]
+            if r == r_max:
+                return x
+            cfgpad = [(0, 0)] * x.ndim
+            cfgpad[-2] = (0, r_max - r)
+            return jnp.pad(x, cfgpad)
+        r = x.shape[-1]
+        if r == r_max:
+            return x
+        cfgpad = [(0, 0)] * x.ndim
+        cfgpad[-1] = (0, r_max - r)
+        return jnp.pad(x, cfgpad)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: pad(p, x) if x is not None else None, lora_tree,
+        is_leaf=lambda x: x is None)
+
+
+def map_adapters(fn: Callable, lora_tree):
+    """Apply fn(parent_path, {"a": A, "b": B}) -> {"a": A', "b": B'} to every
+    adapter pair in the tree; returns a new tree."""
+    # collect pairs
+    pairs: Dict[str, Dict[str, Any]] = {}
+
+    def collect(path, x):
+        if x is not None and _is_lora_path(path):
+            parent = tuple(path[:-1])
+            kind = "a" if path[-1].key == "lora_a" else "b"
+            pairs.setdefault(parent, {})[kind] = x
+        return x
+
+    jax.tree_util.tree_map_with_path(collect, lora_tree,
+                                     is_leaf=lambda x: x is None)
+    results = {parent: fn(parent, ab) for parent, ab in pairs.items()}
+
+    def rebuild(path, x):
+        if x is None or not _is_lora_path(path):
+            return x
+        parent = tuple(path[:-1])
+        kind = "a" if path[-1].key == "lora_a" else "b"
+        return results[parent][kind]
+
+    return jax.tree_util.tree_map_with_path(rebuild, lora_tree,
+                                            is_leaf=lambda x: x is None)

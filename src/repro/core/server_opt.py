@@ -1,0 +1,74 @@
+"""Server-side optimization on LOW-RANK factors (beyond-paper).
+
+FedOpt-style server momentum normally operates on the dense pseudo-gradient
+Delta_t = W_g^{t+1} - W_g^t -- at LoRA scale that would materialize d x n
+buffers per layer per round. Here momentum itself stays FACTORED: every
+quantity (momentum m_t, update delta, new global) is a rank-r_max (B, A)
+pair maintained by stacked-QR-SVD truncation:
+
+    Delta_t = B'A' - BA                      (rank <= 2 r_max, as a stack)
+    m_t     = trunc_svd([sqrt(beta) B_m | B' | B],
+                        [sqrt(beta) A_m ; A' ; -A])       (rank r_max)
+    W^{t+1} = trunc_svd([B | eta B_m^t], [A ; A_m^t])     (rank r_max)
+
+The SVD truncations introduce the same rank-r_max projection the base
+method already applies each round, so the approximation error is of the
+same order as FlexLoRA/raFLoRA's own reallocation. Composes with any
+aggregation method; exercised in tests/test_server_opt.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.svd import svd_realloc_factored
+
+
+def _stack(*pairs):
+    """pairs of (B (…, d, r), A (…, r, n)) -> concatenated factors."""
+    us = jnp.concatenate([b for b, _ in pairs], axis=-1)
+    vs = jnp.concatenate([a for _, a in pairs], axis=-2)
+    return us, vs
+
+
+def _trunc(u, v, r_max):
+    if u.ndim == 3:  # layer-stacked: vmap
+        import jax
+        b, a, _ = jax.vmap(lambda uu, vv: svd_realloc_factored(uu, vv, r_max)
+                           )(u, v)
+        return b, a
+    b, a, _ = svd_realloc_factored(u, v, r_max)
+    return b, a
+
+
+@dataclass
+class FactoredServerMomentum:
+    """FedAvgM on factored adapters. state: {adapter: (B_m, A_m)}."""
+
+    beta: float = 0.9
+    eta: float = 1.0
+    state: Optional[Dict] = None
+
+    def apply(self, adapter_key, old_ba: Tuple, new_ba: Tuple,
+              r_max: int) -> Tuple:
+        """old/new (B, A) for one adapter; returns momentum-corrected (B, A).
+        """
+        if self.state is None:
+            self.state = {}
+        b_old, a_old = old_ba
+        b_new, a_new = new_ba
+        # delta = new - old as a factor stack (sign folded into A)
+        du, dv = _stack((b_new, a_new), (b_old, -a_old))
+        if adapter_key in self.state:
+            b_m, a_m = self.state[adapter_key]
+            sq = self.beta ** 0.5
+            mu, mv = _stack((sq * b_m, sq * a_m), (du, dv))
+        else:
+            mu, mv = du, dv
+        b_m, a_m = _trunc(mu, mv, r_max)
+        self.state[adapter_key] = (b_m, a_m)
+        # W_new = W_old + eta * m
+        gu, gv = _stack((b_old, a_old), (self.eta * b_m, a_m))
+        return _trunc(gu, gv, r_max)

@@ -1,0 +1,106 @@
+"""SVD-based rank reallocation (FlexLoRA Eq. 3-4) -- dense and factored.
+
+``svd_realloc_dense`` is the paper-faithful path: materialize the d x n
+aggregate, full SVD, truncate to r_max. O(d*n*min(d,n)) flops, O(d*n) memory.
+
+``svd_realloc_factored`` is our beyond-paper path (DESIGN.md §4.2): the
+aggregate is ALWAYS of the form U_c @ V_c with U_c (d, R), V_c (R, n),
+R = sum_k r_k << min(d, n), because it is a weighted sum of client low-rank
+products. QR-reduce both sides, SVD only the (R x R) core:
+
+    U_c = Q_u R_u,  V_c^T = Q_v R_v
+    U_c V_c = Q_u (R_u R_v^T) Q_v^T = Q_u (U_s S V_s^T) Q_v^T
+
+=> singular values of the aggregate are exactly those of the small core.
+O((d+n) R^2 + R^3) flops, O((d+n) R) memory -- for nemotron's FFN layer
+(18432 x 73728, R ~ 168*... per-round stack) this is ~60x less compute and
+~260x less memory than the dense path, with IDENTICAL results up to float
+round-off (validated in tests/test_svd.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def svd_realloc_dense(dw: jnp.ndarray, r_max: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paper-faithful: SVD the dense aggregate. Returns (B_g, A_g, sigma).
+
+    B_g = U[:, :r] * sigma (d, r_max); A_g = V^T[:r] (r_max, n).
+    """
+    u, s, vt = jnp.linalg.svd(dw.astype(jnp.float32), full_matrices=False)
+    u, s, vt = u[:, :r_max], s[:r_max], vt[:r_max]
+    return u * s[None, :], vt, s
+
+
+def svd_realloc_factored(u_c: jnp.ndarray, v_c: jnp.ndarray, r_max: int
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Factored: SVD of U_c @ V_c without materializing it.
+
+    u_c (d, R); v_c (R, n). Returns (B_g (d, r_max), A_g (r_max, n), sigma).
+    If R < r_max the trailing singular values are exactly zero and the
+    factors are zero-padded (the aggregate has algebraic rank <= R).
+    """
+    u_c = u_c.astype(jnp.float32)
+    v_c = v_c.astype(jnp.float32)
+    q_u, r_u = jnp.linalg.qr(u_c)            # (d, R), (R, R)
+    q_v, r_v = jnp.linalg.qr(v_c.T)          # (n, R), (R, R)
+    core = r_u @ r_v.T                        # (R, R)
+    u_s, s, vt_s = jnp.linalg.svd(core, full_matrices=False)
+    u_full = q_u @ u_s                        # (d, R)
+    vt_full = vt_s @ q_v.T                    # (R, n)
+    r = u_c.shape[1]
+    if r >= r_max:
+        u_full, s, vt_full = u_full[:, :r_max], s[:r_max], vt_full[:r_max]
+    else:
+        pad = r_max - r
+        u_full = jnp.pad(u_full, ((0, 0), (0, pad)))
+        vt_full = jnp.pad(vt_full, ((0, pad), (0, 0)))
+        s = jnp.pad(s, (0, pad))
+    return u_full * s[None, :], vt_full, s
+
+
+def factored_from_weighted(bs: jnp.ndarray, as_: jnp.ndarray,
+                           omega: jnp.ndarray,
+                           global_b: Optional[jnp.ndarray] = None,
+                           global_a: Optional[jnp.ndarray] = None,
+                           fallback: Optional[jnp.ndarray] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build the stacked factors of sum_k B_k diag(omega_k) A_k [+ fallback].
+
+    bs (M, d, r_max); as_ (M, r_max, n); omega (M, r_max).
+    The per-client diagonal is split sqrt-symmetrically between the two
+    factors so the stack stays well-conditioned for QR.
+    Returns u_c (d, M*r_max [+ r_max]), v_c (matching, n).
+    """
+    m, d, r = bs.shape
+    n = as_.shape[-1]
+    sq = jnp.sqrt(jnp.maximum(omega, 0.0)).astype(jnp.float32)  # (M, r)
+    u_parts = (bs.astype(jnp.float32) * sq[:, None, :])          # (M, d, r)
+    v_parts = (as_.astype(jnp.float32) * sq[:, :, None])         # (M, r, n)
+    u_c = jnp.moveaxis(u_parts, 0, 1).reshape(d, m * r)
+    v_c = v_parts.reshape(m * r, n)
+    if fallback is not None and global_b is not None:
+        fb = jnp.sqrt(jnp.maximum(fallback, 0.0)).astype(jnp.float32)
+        u_c = jnp.concatenate([u_c, global_b.astype(jnp.float32) * fb[None, :]],
+                              axis=1)
+        v_c = jnp.concatenate([v_c, global_a.astype(jnp.float32) * fb[:, None]],
+                              axis=0)
+    return u_c, v_c
+
+
+def dense_from_weighted(bs: jnp.ndarray, as_: jnp.ndarray, omega: jnp.ndarray,
+                        global_b: Optional[jnp.ndarray] = None,
+                        global_a: Optional[jnp.ndarray] = None,
+                        fallback: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Materialize sum_k B_k diag(omega_k) A_k (+ global fallback slices)."""
+    dw = jnp.einsum("mdr,mr,mrn->dn", bs.astype(jnp.float32),
+                    omega.astype(jnp.float32), as_.astype(jnp.float32))
+    if fallback is not None and global_b is not None:
+        dw = dw + jnp.einsum("dr,r,rn->dn", global_b.astype(jnp.float32),
+                             fallback.astype(jnp.float32),
+                             global_a.astype(jnp.float32))
+    return dw

@@ -1,0 +1,7 @@
+from repro.data.partition import (dirichlet_partition, iid_partition,
+                                  make_partition, pathological_partition)
+from repro.data.synthetic import ClusterClassification, SequenceCopy, batches
+
+__all__ = ["ClusterClassification", "SequenceCopy", "batches",
+           "dirichlet_partition", "iid_partition", "make_partition",
+           "pathological_partition"]

@@ -1,0 +1,5 @@
+from repro.federation.client import LocalTrainer
+from repro.federation.server import FederatedLoRA, RoundStats
+from repro.federation.topology import ClientRegistry
+
+__all__ = ["ClientRegistry", "FederatedLoRA", "LocalTrainer", "RoundStats"]

@@ -1,0 +1,76 @@
+"""Client-side local fine-tuning: LoRA-only gradients, AdamW, jitted per rank.
+
+The client receives the (conceptually truncated) global adapters; we keep
+the r_max-sized factors resident and run with static ``lora_rank=r_k``, which
+slices the factors inside the forward -- mathematically identical to
+truncate-then-train (gradients outside the slice are exactly zero) while
+keeping one params pytree shape for all clients. The jit cache keys on r_k,
+so there are at most |rank_levels| compilations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import merge_lora, split_lora
+from repro.models.transformer import Model
+from repro.optim import AdamW
+
+
+class LocalTrainer:
+    def __init__(self, model: Model, *, weight_decay: float = 0.0,
+                 freeze_a: bool = False):
+        self.model = model
+        self.opt = AdamW(weight_decay=weight_decay)
+        self.freeze_a = freeze_a   # FFA-LoRA: train only the B factors
+        self._step_cache: Dict[int, Callable] = {}
+
+    def _make_step(self, rank: int) -> Callable:
+        model, opt = self.model, self.opt
+        scale = (self.model.lora.scaling(rank)
+                 if self.model.lora is not None else 1.0)
+
+        def loss_fn(lora, base, batch):
+            params = merge_lora(base, lora)
+            loss, metrics = model.train_loss(params, batch, lora_rank=rank,
+                                             lora_scale=scale)
+            return loss, metrics
+
+        freeze_a = self.freeze_a
+
+        @jax.jit
+        def step(lora, opt_state, base, batch, lr):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(lora, base, batch)
+            if freeze_a:  # FFA-LoRA: zero the A-factor gradients
+                import jax.tree_util as jtu
+                grads = jtu.tree_map_with_path(
+                    lambda p, g: (jnp.zeros_like(g)
+                                  if g is not None
+                                  and getattr(p[-1], "key", "") == "lora_a"
+                                  else g),
+                    grads, is_leaf=lambda x: x is None)
+            lora, opt_state = opt.update(grads, opt_state, lora, lr)
+            return lora, opt_state, metrics
+
+        return step
+
+    def step_fn(self, rank: int) -> Callable:
+        if rank not in self._step_cache:
+            self._step_cache[rank] = self._make_step(rank)
+        return self._step_cache[rank]
+
+    def train(self, base, global_lora, rank: int,
+              batch_iter: Iterable[dict], lr: float) -> Tuple[dict, dict]:
+        """Run local epochs; returns (trained lora tree, last metrics)."""
+        step = self.step_fn(int(rank))
+        opt_state = self.opt.init(global_lora)
+        lora = global_lora
+        metrics = {}
+        for batch in batch_iter:
+            lora, opt_state, metrics = step(lora, opt_state, base, batch,
+                                            jnp.float32(lr))
+        return lora, metrics

@@ -1,0 +1,245 @@
+"""Federated server: Algorithm 1 round loop with pluggable aggregation.
+
+Per round: uniform client sampling -> broadcast (rank-truncated adapters) ->
+parallel local training -> rank-partitioned (or baseline) aggregation ->
+SVD reallocation -> energy bookkeeping. The server state is checkpointable
+and the whole loop is architecture-agnostic: it sees only adapter factor
+trees from ``repro.core.lora``.
+
+TPU mapping note (DESIGN.md §5): in the simulated runtime clients execute
+sequentially on one device; on a pod, client local steps are data-parallel
+over the ``data`` mesh axis and the stacked-factor contraction
+sum_k B_k diag(omega_k) A_k lowers to an all-reduce of per-shard partial
+sums (see launch/fl_dryrun.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, LoRAConfig
+from repro.core.aggregation import Aggregator
+from repro.core.energy import EnergyTrace
+from repro.core.lora import merge_lora, split_lora
+from repro.federation.client import LocalTrainer
+from repro.federation.topology import ClientRegistry
+from repro.models.transformer import Model
+from repro.optim import get_schedule
+
+
+@dataclass
+class RoundStats:
+    round: int
+    clients: List[int]
+    ranks: List[int]
+    lr: float
+    mean_client_loss: float
+    sigma_probe: Optional[np.ndarray]  # singular values of probe adapter
+    wall_time_s: float
+
+
+class FederatedLoRA:
+    """End-to-end heterogeneous-rank FedLoRA driver."""
+
+    def __init__(self, model: Model, fl: FLConfig, lora: LoRAConfig,
+                 registry: ClientRegistry,
+                 batch_fn: Callable[[int, np.random.Generator], list],
+                 *, base_params=None, seed: Optional[int] = None,
+                 backend: str = "factored",
+                 partial_up_to: Optional[int] = None,
+                 server_momentum=None):
+        """batch_fn(client_id, rng) -> list of training batches (dicts)."""
+        self.model = model
+        self.fl = fl
+        self.lora_cfg = lora
+        self.registry = registry
+        self.batch_fn = batch_fn
+        self.rng = np.random.default_rng(fl.seed if seed is None else seed)
+        params = base_params if base_params is not None else model.init(
+            jax.random.PRNGKey(fl.seed))
+        self.base, self.global_lora = split_lora(params)
+        self.trainer = LocalTrainer(model, weight_decay=fl.weight_decay,
+                                    freeze_a=(fl.aggregator == "ffa"))
+        self.server_momentum = server_momentum  # FactoredServerMomentum|None
+        self.aggregator = Aggregator(fl.aggregator, lora.rank_levels,
+                                     backend=backend,
+                                     partial_up_to=partial_up_to)
+        self.schedule = get_schedule(fl.lr_schedule, fl.learning_rate,
+                                     fl.num_rounds)
+        self.round_idx = 0
+        self.energy = EnergyTrace(lora.rank_levels)
+        self.history: List[RoundStats] = []
+
+    # -- adapter plumbing ---------------------------------------------------
+
+    def _extract_factors(self, lora_tree, rank: int) -> Dict[tuple, tuple]:
+        """{adapter_path: (B (…, d_in, r_k), A (…, r_k, d_out))}.
+
+        Model layout: lora_a (…, r_max, in), lora_b (…, out, r_max).
+        Paper layout: B = lora_a^T restricted to r_k, A = lora_b^T.
+        """
+        from repro.core.lora import _is_lora_path
+        pairs: Dict[tuple, dict] = {}
+
+        def collect(path, x):
+            if x is not None and _is_lora_path(path):
+                parent = tuple(str(getattr(p, "key", p)) for p in path[:-1])
+                kind = {"lora_a": "a", "lora_b": "b",
+                        "lora_m": "m"}[path[-1].key]
+                pairs.setdefault(parent, {})[kind] = x
+            return x
+
+        jax.tree_util.tree_map_with_path(collect, lora_tree,
+                                         is_leaf=lambda x: x is None)
+        out = {}
+        for parent, ab in pairs.items():
+            a_model = ab["a"]           # (…, r_max, in)
+            b_model = ab["b"]           # (…, out, r_max)
+            b_paper = jnp.swapaxes(a_model, -2, -1)[..., :rank]   # (…, in, r_k)
+            a_paper = jnp.swapaxes(b_model, -2, -1)[..., :rank, :]  # (…, r_k, out)
+            out[parent] = (b_paper, a_paper)
+            if "m" in ab:               # DoRA magnitude: FedAvg'd separately
+                out[(parent, "m")] = ab["m"]
+        return out
+
+    def _write_factors(self, results: Dict[tuple, tuple]) -> None:
+        """Write aggregated (b_g, a_g) back into the global lora tree."""
+        from repro.core.lora import _is_lora_path
+
+        def rebuild(path, x):
+            if x is None or not _is_lora_path(path):
+                return x
+            parent = tuple(str(getattr(p, "key", p)) for p in path[:-1])
+            if path[-1].key == "lora_m":
+                m_new = results.get((parent, "m"))
+                return x if m_new is None else m_new.astype(x.dtype)
+            b_g, a_g = results[parent]
+            if path[-1].key == "lora_a":
+                return jnp.swapaxes(b_g, -2, -1).astype(x.dtype)
+            return jnp.swapaxes(a_g, -2, -1).astype(x.dtype)
+
+        self.global_lora = jax.tree_util.tree_map_with_path(
+            rebuild, self.global_lora, is_leaf=lambda x: x is None)
+
+    def _merge_flora_delta(self, deltas: Dict[tuple, jnp.ndarray]) -> None:
+        """FLoRA: fold dW into the base dense weights (cold-start restart)."""
+        def apply(path, x):
+            if x is None:
+                return x
+            key = getattr(path[-1], "key", None)
+            if key != "w":
+                return x
+            parent = tuple(str(getattr(p, "key", p)) for p in path[:-1])
+            if parent in deltas:
+                return (x.astype(jnp.float32)
+                        + deltas[parent].astype(jnp.float32)).astype(x.dtype)
+            return x
+
+        self.base = jax.tree_util.tree_map_with_path(
+            apply, self.base, is_leaf=lambda x: x is None)
+
+    # -- the round ----------------------------------------------------------
+
+    def run_round(self) -> RoundStats:
+        t0 = time.time()
+        fl = self.fl
+        m = fl.clients_per_round
+        clients = self.registry.sample_round(m, self.rng).tolist()
+        ranks = [int(self.registry.ranks[c]) for c in clients]
+        n_k = [max(self.registry.num_samples(c), 1) for c in clients]
+        lr = self.schedule(self.round_idx)
+
+        # local training (sequential simulation of the parallel clients)
+        client_factors: List[Dict[tuple, tuple]] = []
+        losses = []
+        for cid, rank in zip(clients, ranks):
+            batches = self.batch_fn(cid, self.rng)
+            trained, metrics = self.trainer.train(
+                self.base, self.global_lora, rank, batches, lr)
+            client_factors.append(self._extract_factors(trained, rank))
+            losses.append(float(metrics.get("loss", jnp.nan)))
+
+        # aggregate every adapter
+        results, deltas = {}, {}
+        sigma_probe = None
+        global_factors = self._extract_factors(self.global_lora,
+                                               self.lora_cfg.r_max)
+        w_clients = jnp.asarray(np.asarray(n_k) / np.sum(n_k))
+        for parent in client_factors[0]:
+            if isinstance(parent, tuple) and len(parent) == 2 \
+                    and parent[1] == "m":
+                # DoRA magnitudes: weighted FedAvg (not rank-structured)
+                ms = jnp.stack([cf[parent] for cf in client_factors])
+                wshape = (-1,) + (1,) * (ms.ndim - 1)
+                results[parent] = jnp.sum(
+                    w_clients.reshape(wshape) * ms, axis=0)
+                continue
+            factors = [cf[parent] for cf in client_factors]
+            g_b, g_a = global_factors[parent]
+            res = self.aggregator.aggregate_layer(factors, ranks, n_k,
+                                                  global_b=g_b, global_a=g_a)
+            if self.server_momentum is not None:
+                results[parent] = self.server_momentum.apply(
+                    parent, (g_b, g_a), (res.b_g, res.a_g),
+                    self.lora_cfg.r_max)
+            else:
+                results[parent] = (res.b_g, res.a_g)
+            if res.merge_delta is not None:
+                deltas[parent] = res.merge_delta
+            if sigma_probe is None and res.sigma is not None:
+                sig = np.asarray(res.sigma)
+                sigma_probe = sig if sig.ndim == 1 else sig.mean(axis=0)
+        self._write_factors(results)
+        if deltas:
+            self._merge_flora_delta(deltas)
+        if sigma_probe is not None:
+            self.energy.record(jnp.asarray(sigma_probe))
+
+        stats = RoundStats(
+            round=self.round_idx, clients=clients, ranks=ranks, lr=lr,
+            mean_client_loss=float(np.mean(losses)),
+            sigma_probe=sigma_probe, wall_time_s=time.time() - t0)
+        self.history.append(stats)
+        self.round_idx += 1
+        return stats
+
+    def run(self, rounds: Optional[int] = None,
+            eval_fn: Optional[Callable] = None,
+            eval_every: int = 10) -> List[RoundStats]:
+        rounds = rounds if rounds is not None else self.fl.num_rounds
+        for _ in range(rounds):
+            self.run_round()
+            if eval_fn is not None and self.round_idx % eval_every == 0:
+                eval_fn(self)
+        return self.history
+
+    # -- evaluation / state --------------------------------------------------
+
+    def global_params(self):
+        return merge_lora(self.base, self.global_lora)
+
+    def evaluate(self, batch: dict) -> dict:
+        params = self.global_params()
+        _, metrics = self.model.train_loss(params, batch,
+                                           lora_rank=self.lora_cfg.r_max)
+        return {k: float(v) for k, v in metrics.items()}
+
+    def save(self, path: str) -> None:
+        from repro.checkpointing.checkpoint import save_pytree
+        save_pytree(path + ".base", self.base)
+        save_pytree(path + ".lora", self.global_lora,
+                    metadata={"round": self.round_idx,
+                              "method": self.fl.aggregator})
+
+    def restore(self, path: str) -> None:
+        from repro.checkpointing.checkpoint import load_metadata, load_pytree
+        self.base = load_pytree(path + ".base", self.base)
+        self.global_lora = load_pytree(path + ".lora", self.global_lora)
+        meta = load_metadata(path + ".lora")
+        if meta:
+            self.round_idx = meta.get("round", self.round_idx)

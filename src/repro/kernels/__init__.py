@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute of the system.
+
+  lora_apply          -- fused dense + LoRA adapter matmul
+  rank_partition_agg  -- the paper's Eq. 8 aggregation as one contraction
+  ssd_scan            -- Mamba-2 chunked SSD (dual form)
+
+Each kernel ships with a pure-jnp oracle in ref.py and a jit'd public
+wrapper in ops.py; kernels run under interpret=True on CPU and compile via
+Mosaic on TPU.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

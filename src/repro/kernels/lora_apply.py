@@ -1,0 +1,92 @@
+"""Fused LoRA-dense matmul Pallas kernel: y = x @ W + s * (x @ A^T) @ B^T.
+
+TPU rationale (DESIGN.md §4.3): the naive three-matmul composition streams
+``x`` from HBM twice and materializes ``z = x A^T`` in HBM. Fusing lets one
+pass over x feed both the MXU main matmul and the (tall-skinny) adapter
+matmul; the rank-r bottleneck z lives entirely in a VMEM scratch
+(bm x r <= 512 x 256 floats), and the adapter correction is applied to the
+output tile while it is still resident. Block sizes default to MXU-aligned
+(512, 512, 512); r is padded to a multiple of 128 by the ops wrapper.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics) so the
+f32 accumulator and z scratch carry across the K loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific memory spaces; fall back gracefully off-TPU
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, z_ref, *,
+            scale: float, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bm, bk)
+    w = w_ref[...].astype(jnp.float32)          # (bk, bn)
+    a = a_ref[...].astype(jnp.float32)          # (r, bk)
+    acc_ref[...] += jax.lax.dot(x, w, precision=jax.lax.Precision.HIGHEST)
+    z_ref[...] += jax.lax.dot(x, a.T, precision=jax.lax.Precision.HIGHEST)
+
+    @pl.when(k == k_steps - 1)
+    def _finalize():
+        b = b_ref[...].astype(jnp.float32)      # (bn, r)
+        out = acc_ref[...] + scale * jax.lax.dot(
+            z_ref[...], b.T, precision=jax.lax.Precision.HIGHEST)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def lora_apply_pallas(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                      b: jnp.ndarray, scale: float = 1.0, *,
+                      block_m: int = 512, block_n: int = 512,
+                      block_k: int = 512,
+                      interpret: bool = True) -> jnp.ndarray:
+    """x (M, K); w (K, N); a (r, K); b (N, r). Returns (M, N) in x.dtype."""
+    m, k = x.shape
+    _, n = w.shape
+    r = a.shape[0]
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+
+    scratch_shapes = []
+    if _VMEM is not None:
+        scratch_shapes = [_VMEM((bm, bn), jnp.float32),
+                          _VMEM((bm, r), jnp.float32)]
+    else:  # pragma: no cover
+        scratch_shapes = [jax.ShapeDtypeStruct((bm, bn), jnp.float32),
+                          jax.ShapeDtypeStruct((bm, r), jnp.float32)]
+
+    kernel = functools.partial(_kernel, scale=scale, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((r, bk), lambda i, j, kk: (0, kk)),
+            pl.BlockSpec((bn, r), lambda i, j, kk: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=scratch_shapes,
+        compiler_params=dict(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if _VMEM is not None and not interpret else None,
+        interpret=interpret,
+    )(x, w, a, b)

@@ -1,0 +1,124 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Each op pads to hardware-friendly shapes, dispatches to the kernel (interpret
+mode on CPU -- the kernel body runs in Python for correctness validation;
+compiled Mosaic on real TPU), and slices back. Oracles in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lora_apply import lora_apply_pallas
+from repro.kernels.rank_partition_agg import rank_partition_agg_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+_INTERPRET = not _ON_TPU
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def lora_apply(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+               b: jnp.ndarray, scale: float = 1.0) -> jnp.ndarray:
+    """Fused y = x @ w + scale * (x @ a.T) @ b.T; x (..., K)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    # pad every dim to the kernel's tiling granularity
+    bm = 256 if m >= 256 else max(8, m)
+    x2 = _pad_to(x2, 0, bm)
+    xp = _pad_to(x2, 1, 128)
+    wp = _pad_to(_pad_to(w, 0, 128), 1, 128)
+    ap = _pad_to(_pad_to(a, 0, 8), 1, 128)
+    bp = _pad_to(_pad_to(b, 0, 128), 1, 8)
+    y = lora_apply_pallas(xp, wp, ap, bp, scale,
+                          block_m=min(256, xp.shape[0]),
+                          block_n=min(512, wp.shape[1]),
+                          block_k=min(512, xp.shape[1]),
+                          interpret=_INTERPRET)
+    return y[:m, :n].reshape(lead + (n,)).astype(x.dtype)
+
+
+@jax.jit
+def rank_partition_agg(bs: jnp.ndarray, as_: jnp.ndarray, omega: jnp.ndarray,
+                       global_b: Optional[jnp.ndarray] = None,
+                       global_a: Optional[jnp.ndarray] = None,
+                       fallback: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """dW = sum_m B_m diag(omega_m) A_m (+ fallback global slices).
+
+    bs (M, d, r); as_ (M, r, n); omega (M, r); optional global factors enter
+    as one extra "client" carrying the empty-partition fallback (Eq. 8).
+    """
+    if fallback is not None and global_b is not None:
+        bs = jnp.concatenate([bs, global_b[None].astype(bs.dtype)], axis=0)
+        as_ = jnp.concatenate([as_, global_a[None].astype(as_.dtype)], axis=0)
+        omega = jnp.concatenate(
+            [omega, fallback[None].astype(omega.dtype)], axis=0)
+    d, r = bs.shape[1], bs.shape[2]
+    n = as_.shape[-1]
+    bsp = _pad_to(_pad_to(bs, 1, 128), 2, 8)
+    asp = _pad_to(_pad_to(as_, 1, 8), 2, 128)
+    omp = _pad_to(omega, 1, 8)
+    dw = rank_partition_agg_pallas(
+        bsp, asp, omp,
+        block_d=min(256, bsp.shape[1]), block_n=min(256, asp.shape[2]),
+        interpret=_INTERPRET)
+    return dw[:d, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, d_skip: jnp.ndarray,
+             chunk: int, init_state: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Shapes as in models/layers/ssd.ssd_scan_chunked."""
+    B_, L, H, P = x.shape
+    G, N = b.shape[-2:]
+    chunk = min(chunk, L)
+    assert L % chunk == 0
+    nc = L // chunk
+    reps = H // G
+    bh = jnp.repeat(b, reps, axis=2).reshape(B_, nc, chunk, H, N)
+    ch = jnp.repeat(c, reps, axis=2).reshape(B_, nc, chunk, H, N)
+    xr = x.reshape(B_, nc, chunk, H, P)
+    dtr = dt.reshape(B_, nc, chunk, H)
+    init = (jnp.zeros((B_, H, P, N), jnp.float32)
+            if init_state is None else init_state.astype(jnp.float32))
+    block_heads = 8 if H % 8 == 0 else (4 if H % 4 == 0 else 1)
+    y, final = ssd_scan_pallas(xr, dtr, a_log.astype(jnp.float32), bh, ch,
+                               d_skip.astype(jnp.float32), init,
+                               block_heads=block_heads,
+                               interpret=_INTERPRET)
+    return y.reshape(B_, L, H, P), final
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Fused flash attention; pads sequence lengths to block multiples."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    b, lq, h, d = q.shape
+    lkv = k.shape[1]
+    bq = min(128, max(8, lq))
+    bk = min(128, max(8, lkv))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 block_q=bq, block_kv=bk,
+                                 interpret=_INTERPRET)
+    return out[:, :lq]

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_apply_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                   b: jnp.ndarray, scale: float = 1.0) -> jnp.ndarray:
+    """y = x @ w + scale * (x @ a.T) @ b.T.
+
+    x (M, K); w (K, N); a (r, K); b (N, r).
+    """
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    z = x.astype(jnp.float32) @ a.astype(jnp.float32).T
+    return (y + scale * (z @ b.astype(jnp.float32).T)).astype(x.dtype)
+
+
+def rank_partition_agg_ref(bs: jnp.ndarray, as_: jnp.ndarray,
+                           omega: jnp.ndarray) -> jnp.ndarray:
+    """dW = sum_m B_m diag(omega_m) A_m.
+
+    bs (M, d, r); as_ (M, r, n); omega (M, r). Returns (d, n) f32.
+    """
+    return jnp.einsum("mdr,mr,mrn->dn", bs.astype(jnp.float32),
+                      omega.astype(jnp.float32), as_.astype(jnp.float32))
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                 b: jnp.ndarray, c: jnp.ndarray, d_skip: jnp.ndarray,
+                 chunk: int, init_state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle = the model's chunked jnp implementation (itself validated
+    against a token-by-token recurrence in tests/test_ssd.py)."""
+    from repro.models.layers.ssd import ssd_scan_chunked
+    return ssd_scan_chunked(x, dt, a_log, b, c, d_skip, chunk,
+                            init_state=init_state)
+
+
+def ssd_scan_sequential_ref(x, dt, a_log, b, c, d_skip,
+                            init_state=None):
+    """Token-by-token recurrence: the slowest, most obviously-correct form.
+
+    Used to validate BOTH the chunked jnp path and the Pallas kernel.
+    """
+    B_, L, H, P = x.shape
+    G, N = b.shape[-2:]
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    reps = H // G
+    bh = jnp.repeat(b.astype(jnp.float32), reps, axis=2)   # (B,L,H,N)
+    ch = jnp.repeat(c.astype(jnp.float32), reps, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    state = (jnp.zeros((B_, H, P, N), jnp.float32)
+             if init_state is None else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                              # (B,H,P),(B,H),...
+        decay = jnp.exp(dtt * A[None, :])
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", bt, xt, dtt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, state)
+        return state, y
+
+    inputs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+              bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state, inputs)
+    y = ys.transpose(1, 0, 2, 3)
+    y = y + xf * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Naive softmax attention oracle for the flash kernel.
+
+    q (B, Lq, H, D); k, v (B, Lkv, KVH, D).
+    """
+    b, lq, h, d = q.shape
+    _, lkv, kvh, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(b, lq, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    qpos = jnp.arange(lq)
+    kpos = jnp.arange(lkv)
+    mask = jnp.ones((lq, lkv), bool)
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window > 0:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, lq, h, d).astype(q.dtype)

@@ -1,0 +1,125 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel.
+
+TPU rationale (DESIGN.md §4.3): the SSD *dual form* turns the selective-scan
+recurrence into per-chunk matmuls -- exactly what the MXU wants -- plus a
+tiny sequential inter-chunk state update. A GPU implementation leans on
+warp-level associative scans; on TPU the right decomposition is:
+
+  grid = (batch, head-blocks, chunks), chunk axis innermost & sequential;
+  per step:   cb   = C_q B_q^T             (Q x Q matmul, MXU)
+              y    = (cb * Lmat) X + (C decay) . state   (MXU)
+              state = chunk_decay * state + (B^T weighted X)  (MXU)
+
+The (P x N) state for the head-block lives in VMEM scratch across the chunk
+loop; nothing recurrent ever round-trips HBM. Q (chunk) and N are 128-ish;
+P=64 (mamba2) -> tiles are MXU-aligned or padded by ops.py.
+
+Layout expected by the kernel (pre-reshaped by ops.py):
+  x   (B, nc, Q, H, P)        dt (B, nc, Q, H)
+  b,c (B, nc, Q, H, N)        -- groups already expanded to heads
+  a_log (H,), d_skip (H,)     init_state (B, H, P, N)
+Outputs: y (B, nc, Q, H, P); final_state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref, init_ref,
+            y_ref, final_ref, state_ref, *, nc: int, q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = init_ref[0].astype(jnp.float32)    # (bh, P, N)
+
+    x = x_ref[0, 0].astype(jnp.float32)       # (Q, bh, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)     # (Q, bh)
+    bq = b_ref[0, 0].astype(jnp.float32)      # (Q, bh, N)
+    cq = c_ref[0, 0].astype(jnp.float32)      # (Q, bh, N)
+    alog = alog_ref[...].astype(jnp.float32)  # (bh,)
+    a_neg = -jnp.exp(alog)                    # (bh,) < 0
+
+    a_inc = dt * a_neg[None, :]               # (Q, bh)
+    cum = jnp.cumsum(a_inc, axis=0)           # inclusive, (Q, bh)
+    dtx = x * dt[:, :, None]                  # (Q, bh, P)
+
+    # intra-chunk: Lmat_ij = exp(cum_i - cum_j), i >= j (mask before exp --
+    # see models/layers/ssd.py for the where-NaN rationale)
+    diff = cum[:, None, :] - cum[None, :, :]  # (Q, Q, bh)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    causal = (idx >= jdx)[:, :, None]
+    lmat = jnp.exp(jnp.where(causal, diff, -1e30))          # (Q, Q, bh)
+    cb = jnp.einsum("ihn,jhn->ijh", cq, bq)                 # (Q, Q, bh)
+    y_intra = jnp.einsum("ijh,jhp->ihp", cb * lmat, dtx)    # (Q, bh, P)
+
+    # inter-chunk: contribution of carried state
+    state = state_ref[...]                                  # (bh, P, N)
+    decay_in = jnp.exp(cum)                                 # (Q, bh)
+    y_inter = jnp.einsum("qhn,hpn,qh->qhp", cq, state, decay_in)
+
+    # state update
+    decay_out = jnp.exp(cum[-1:, :] - cum)                  # (Q, bh)
+    new_contrib = jnp.einsum("qhn,qhp,qh->hpn", bq, dtx, decay_out)
+    chunk_decay = jnp.exp(cum[-1, :])                       # (bh,)
+    state_ref[...] = state * chunk_decay[:, None, None] + new_contrib
+
+    dskip = dskip_ref[...].astype(jnp.float32)              # (bh,)
+    y = y_intra + y_inter + x * dskip[None, :, None]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        final_ref[0] = state_ref[...]
+
+
+def ssd_scan_pallas(x, dt, a_log, b, c, d_skip, init_state, *,
+                    block_heads: int = 8,
+                    interpret: bool = True):
+    """Inputs pre-chunked & group-expanded (see module docstring)."""
+    B_, nc, q, h, p = x.shape
+    n = b.shape[-1]
+    bh = min(block_heads, h)
+    assert h % bh == 0, (h, bh)
+    grid = (B_, h // bh, nc)
+
+    scratch = [_VMEM((bh, p, n), jnp.float32)] if _VMEM is not None else \
+        [jax.ShapeDtypeStruct((bh, p, n), jnp.float32)]
+
+    kernel = functools.partial(_kernel, nc=nc, q=q)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, bh, p), lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, bh), lambda bi, hi, ci: (bi, ci, 0, hi)),
+            pl.BlockSpec((bh,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, q, bh, n), lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, bh, n), lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((bh,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, bh, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, bh, p), lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, bh, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B_, nc, q, h, p), x.dtype),
+            jax.ShapeDtypeStruct((B_, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(x, dt, a_log, b, c, d_skip, init_state)
+    return y, final

@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: repro.launch.dryrun and repro.launch.fl_dryrun set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 at import time (before
+jax initializes); import them only in dedicated processes.
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers, compiles, and fits -- with no real hardware.
+
+For each pair this driver builds the appropriate step (client train step for
+train_4k, prefill for prefill_32k, serve for decode shapes), attaches
+NamedShardings to ShapeDtypeStruct stand-ins, runs .lower().compile() on the
+16x16 production mesh (and the 2x16x16 multi-pod mesh with --multi-pod), and
+extracts memory_analysis / cost_analysis + the HLO collective schedule for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] --out results.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, LoRAConfig,
+                           get_config)
+from repro.core.lora import split_lora
+from repro.launch.hlo_analysis import (analyze_compiled, model_flops_estimate)
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (build_prefill_step, build_serve_step,
+                                build_train_step)
+from repro.models.transformer import Model
+from repro.optim import AdamW
+from repro.sharding import (batch_axes, batch_specs, cache_specs, param_specs,
+                            residual_spec)
+
+LORA = LoRAConfig()  # paper defaults: ranks {8..64}
+
+# Per-(arch) dry-run tuning: microbatch counts keep saved activations within
+# v5e HBM; values derived from the napkin math in EXPERIMENTS.md §Dry-run.
+MICROBATCHES = {
+    "nemotron-4-340b": 16,
+    "deepseek-v2-236b": 8,
+    "llama4-maverick-400b-a17b": 8,
+    "qwen2-vl-7b": 4,
+    "qwen2-7b": 4,
+    "granite-3-8b": 4,
+    "hubert-xlarge": 2,
+    "gemma-2b": 2,
+    "hymba-1.5b": 2,
+    "mamba2-1.3b": 2,
+}
+
+# long_500k needs sub-quadratic decode: SSM/hybrid run natively; attention
+# archs run their sliding-window variant (window 8192, ring KV cache).
+LONG_CTX_WINDOW = 8192
+
+
+def plan(arch: str, shape_name: str):
+    """Resolve (config, skip_reason) for a pair."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.mode == "decode" and not cfg.supports_decode:
+        return None, f"{arch} is encoder-only: no decode step exists"
+    if shape_name == "long_500k" and cfg.kind not in ("ssm", "hybrid"):
+        # attention archs: sliding-window variant (noted in DESIGN.md)
+        cfg = cfg.with_sliding_window(LONG_CTX_WINDOW, global_every=0)
+    return (cfg, shape), None
+
+
+def build_model_for(cfg, mesh, use_kernels: bool = False,
+                    shard_residuals: bool = True, mode: str = "train",
+                    global_batch: int = 0, strategy: str = "2d",
+                    residual_mode: str = "feature",
+                    moe_capacity_factor: float = 0.0,
+                    attn_repeat_kv: bool = False,
+                    bf16_scores: bool = False) -> Model:
+    """strategy: "2d" = FSDP x TP baseline; "dp" = DP-dominant (small
+    models, §Perf iteration C). residual_mode: "feature"|"sequence" (§Perf B).
+    moe_capacity_factor > 0: capacity-grouped EP dispatch (§Perf A)."""
+    baxes = batch_axes(mesh)
+    if strategy == "dp":
+        baxes = baxes + ("model",)
+    res_shard = None
+    if shard_residuals and strategy != "dp":
+        res_shard = NamedSharding(mesh, residual_spec(mesh, residual_mode))
+    # vocab-sharded logits only when the vocab divides the axis (constraint
+    # on a padded dim trips an XLA SPMD dynamic-slice verifier bug)
+    logit_shard = None
+    if strategy != "dp" and cfg.vocab_size % mesh.shape["model"] == 0:
+        if residual_mode == "sequence":
+            logit_shard = NamedSharding(mesh, P(baxes, "model", None))
+        else:
+            logit_shard = NamedSharding(mesh, P(baxes, None, "model"))
+    q_shard = None
+    if strategy != "dp":
+        q_shard = NamedSharding(mesh, P(baxes, None, "model"))
+    # expert-parallel shard_map needs the batch to split over the data axes;
+    # decode batches (<= 128, or 1 at long_500k) fall back to the GSPMD path
+    batch_div = 1
+    for a in baxes:
+        batch_div *= mesh.shape[a]
+    use_ep = (cfg.moe is not None and mode in ("train", "prefill")
+              and strategy != "dp"
+              and (global_batch == 0 or global_batch % batch_div == 0))
+    return Model(
+        cfg, LORA, dtype=jnp.bfloat16, remat=True, use_kernels=use_kernels,
+        block_q=512, block_kv=1024,
+        moe_impl="ep" if use_ep else "tp",
+        mesh=mesh, batch_axes=baxes,
+        residual_sharding=res_shard, logits_sharding=logit_shard,
+        attn_q_sharding=q_shard, moe_capacity_factor=moe_capacity_factor,
+        attn_repeat_kv=attn_repeat_kv, bf16_scores=bf16_scores)
+
+
+def _with_sharding(shapes_tree, specs_tree, mesh):
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec)),
+        shapes_tree, specs_tree)
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               model_overrides: Optional[dict] = None,
+               donate: bool = True):
+    """Lower + compile one pair; returns (lowered, compiled, meta)."""
+    planned, skip = plan(arch, shape_name)
+    if skip:
+        return None, None, {"skipped": skip}
+    cfg, shape = planned
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = dict(model_overrides or {})
+    strategy = overrides.get("strategy", "2d")
+    model = build_model_for(cfg, mesh, mode=shape.mode,
+                            global_batch=shape.global_batch, **overrides)
+    if strategy == "dp":
+        from repro.sharding.specs import dp_param_specs
+        pspecs = dp_param_specs(model, mesh)
+    else:
+        pspecs = param_specs(model, mesh)
+    pshapes = model.param_shapes()
+    params_sds = _with_sharding(pshapes, pspecs, mesh)
+    binputs = input_specs(cfg, shape, dtype=jnp.bfloat16)
+    bspecs = batch_specs(model, binputs, mesh)
+    batch_sds = {k: jax.ShapeDtypeStruct(
+        v.shape, v.dtype, sharding=NamedSharding(mesh, bspecs[k]))
+        for k, v in binputs.items()}
+    rank = LORA.r_max
+
+    if shape.mode == "train":
+        mb = MICROBATCHES.get(arch, 1)
+        step, opt = build_train_step(model, rank, num_microbatches=mb)
+        base_sds, lora_sds = split_lora(params_sds)
+        mu_sds = jax.tree.map(
+            lambda s: None if s is None else jax.ShapeDtypeStruct(
+                s.shape, jnp.float32, sharding=s.sharding),
+            lora_sds, is_leaf=lambda x: x is None)
+        opt_sds = type(opt.init(jnp.zeros(0)))(
+            jax.ShapeDtypeStruct((), jnp.int32), mu_sds, mu_sds) \
+            if False else None
+        # AdamWState is a NamedTuple; construct directly
+        from repro.optim.adamw import AdamWState
+        opt_sds = AdamWState(jax.ShapeDtypeStruct((), jnp.int32), mu_sds,
+                             mu_sds)
+        lr_sds = jax.ShapeDtypeStruct((), jnp.float32)
+        fn = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+        lowered = fn.lower(lora_sds, opt_sds, base_sds, batch_sds, lr_sds)
+        meta = {"step": "train_step", "microbatches": mb}
+    elif shape.mode == "prefill":
+        step = build_prefill_step(model, rank)
+        fn = jax.jit(step)
+        lowered = fn.lower(params_sds, batch_sds)
+        meta = {"step": "prefill_step"}
+    else:  # decode
+        step = build_serve_step(model, rank)
+        cshapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+        cspecs = cache_specs(model, cshapes, mesh)
+        cache_sds = _with_sharding(cshapes, cspecs, mesh)
+        fn = jax.jit(step, donate_argnums=(2,) if donate else ())
+        lowered = fn.lower(params_sds, batch_sds, cache_sds)
+        meta = {"step": "serve_step",
+                "cache_seq": model.cache_seq_len(shape.seq_len)}
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    meta.update(compile_s=time.time() - t0, cfg_name=cfg.name,
+                mesh="2x16x16" if multi_pod else "16x16",
+                chips=512 if multi_pod else 256)
+    return lowered, compiled, meta
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             model_overrides: Optional[dict] = None) -> dict:
+    try:
+        lowered, compiled, meta = lower_pair(arch, shape_name,
+                                             multi_pod=multi_pod,
+                                             model_overrides=model_overrides)
+    except Exception as e:  # a failure here is a bug in the system
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+    if lowered is None:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "SKIP", "reason": meta["skipped"]}
+    planned, _ = plan(arch, shape_name)
+    cfg, shape = planned
+    report = analyze_compiled(
+        lowered, compiled, arch=arch, shape=shape_name,
+        mesh_name=meta["mesh"], chips=meta["chips"],
+        model_flops=model_flops_estimate(cfg, shape))
+    row = {"arch": arch, "shape": shape_name, "status": "OK", **meta,
+           **report.row(),
+           "coll_breakdown": {k: v for k, v in
+                              report.coll_breakdown.items()},
+           "per_device_mem": report.per_device_mem}
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 512-chip mesh")
+    ap.add_argument("--out", default=None)
+    # §Perf iteration knobs
+    ap.add_argument("--strategy", default="2d", choices=["2d", "dp"])
+    ap.add_argument("--residual-mode", default="feature",
+                    choices=["feature", "sequence"])
+    ap.add_argument("--moe-capacity", type=float, default=0.0)
+    ap.add_argument("--repeat-kv", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="override MICROBATCHES for the selected arch(s)")
+    args = ap.parse_args(argv)
+    if args.microbatches:
+        for a in list(MICROBATCHES):
+            MICROBATCHES[a] = args.microbatches
+        if args.arch:
+            MICROBATCHES[args.arch] = args.microbatches
+    overrides = {}
+    if args.repeat_kv:
+        overrides["attn_repeat_kv"] = True
+    if args.strategy != "2d":
+        overrides["strategy"] = args.strategy
+    if args.residual_mode != "feature":
+        overrides["residual_mode"] = args.residual_mode
+    if args.moe_capacity:
+        overrides["moe_capacity_factor"] = args.moe_capacity
+
+    pairs = []
+    archs = list(ASSIGNED_ARCHS) if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    rows = []
+    failures = 0
+    for a, s in pairs:
+        t0 = time.time()
+        row = run_pair(a, s, multi_pod=args.multi_pod,
+                       model_overrides=overrides or None)
+        rows.append(row)
+        status = row["status"]
+        extra = ""
+        if status == "OK":
+            extra = (f"compile={row['compile_s']:.1f}s "
+                     f"bottleneck={row['bottleneck']} "
+                     f"tc={row['t_compute_s']*1e3:.2f}ms "
+                     f"tm={row['t_memory_s']*1e3:.2f}ms "
+                     f"tx={row['t_collective_s']*1e3:.2f}ms")
+        elif status == "SKIP":
+            extra = row["reason"]
+        else:
+            failures += 1
+            extra = row["error"]
+        print(f"[{status}] {a} x {s} ({row['mesh']}) {extra}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

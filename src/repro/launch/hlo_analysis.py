@@ -1,0 +1,193 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
+reported there, so we parse the optimized HLO text and sum the result-buffer
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (ring algorithms move ~(n-1)/n of that on the wire; we
+report the buffer total and note the approximation).
+
+Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of every typed array in an HLO result type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-buffer bytes per collective op kind from HLO text."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result type is everything between '=' and the op name
+        for op in COLLECTIVE_OPS:
+            # match "op(" or "op-start(" or "op-done(" (async pairs); count
+            # only starts to avoid double counting
+            token = f" {op}("
+            token_start = f" {op}-start("
+            if token in stripped or token_start in stripped:
+                eq = stripped.find("=")
+                opn = stripped.find(op, eq)
+                if eq < 0 or opn < 0:
+                    continue
+                result_type = stripped[eq + 1:opn]
+                out[op] += _shape_bytes(result_type)
+                counts[op] += 1
+                break
+    out["_counts"] = counts
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float = 0.0
+    per_device_mem: Optional[dict] = None
+    xla_cost: Optional[dict] = None   # raw cost_analysis (while-bodies-once)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "coll_bytes": self.coll_bytes,
+        }
+
+
+def analyze_compiled(lowered, compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float = 0.0) -> RooflineReport:
+    from repro.launch.hlo_walker import analyze_hlo
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    cost = cost or {}
+    hlo = compiled.as_text()
+    # trip-count-aware walker: XLA cost_analysis counts while bodies once
+    # (scan under-reporting), so the roofline terms come from the walker.
+    stats = analyze_hlo(hlo)
+    # HLO is the per-device SPMD program -> totals = per-device * chips
+    flops = stats.dot_flops * chips
+    byts = stats.hbm_bytes * chips
+    coll = {k: float(v) * chips for k, v in stats.collective_bytes.items()}
+    counts = {k: float(v) for k, v in stats.collective_counts.items()}
+    # TPU-corrected: CPU's bf16-matmul emulation inflates f32 collective
+    # shares 2x (see hlo_walker.HLOStats) -- report the corrected total
+    total_coll = float(stats.collective_bytes_tpu) * chips
+    raw_cost = {"xla_flops": float(cost.get("flops", 0.0)),
+                "xla_bytes": float(cost.get("bytes accessed", 0.0))}
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {
+                "args_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "out_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            }
+    except Exception:
+        pass
+    return RooflineReport(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                          hlo_flops=flops, hlo_bytes=byts,
+                          coll_bytes=total_coll,
+                          coll_breakdown={**coll, "counts": counts},
+                          model_flops=model_flops, per_device_mem=mem,
+                          xla_cost=raw_cost)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D for training (fwd+bwd), 2*N*D for inference,
+    with N = active params (MoE: routed top-k + shared only)."""
+    n_active = active_params(cfg)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_params(cfg) -> float:
+    """Active (per-token) parameter count: MoE experts count top_k/E."""
+    total = cfg.num_params()
+    if cfg.moe is None:
+        return float(total)
+    mo = cfg.moe
+    from repro.configs.base import ACT_GEGLU, ACT_SWIGLU
+    gated = cfg.activation in (ACT_GEGLU, ACT_SWIGLU)
+    e_ff = mo.expert_d_ff or cfg.d_ff
+    per_expert = cfg.d_model * e_ff * (3 if gated else 2)
+    n_moe_layers = sum(1 for i in range(cfg.num_layers) if mo.is_moe_layer(i))
+    inactive = (mo.num_experts - mo.top_k) * per_expert * n_moe_layers
+    return float(total - inactive)

@@ -1,0 +1,278 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's built-in cost_analysis counts each ``while`` body ONCE, so scanned
+layer stacks / microbatch loops / chunk scans under-report flops and
+collective bytes by their trip counts (verified: scan-of-10-matmuls reports
+1/10 of the unrolled flops). This walker parses the optimized HLO text,
+builds the computation call graph (while bodies x known_trip_count, fusions,
+calls), and accumulates
+
+  * dot flops         (2 * result_elems * contracted_elems)
+  * collective bytes  (result-buffer bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute)
+  * hbm bytes proxy   (result bytes of non-fusion-internal ops, x2 for
+                       write+read; fusion bodies are virtual and excluded)
+
+each multiplied by the product of enclosing loop trip counts.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*\S.*\{$")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLSITE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, int]]:
+    """All (dtype, elems) arrays in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * n for dt, n in _shape_list(type_str))
+
+
+@dataclass
+class OpInfo:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo] = field(default_factory=list)
+    # (callee, kind, trip) -- trip applies to while bodies/conds
+    calls: List[Tuple[str, str, int]] = field(default_factory=list)
+    symbol_types: Dict[str, str] = field(default_factory=dict)
+
+
+_KNOWN_OPCODES = None
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        hdr = _COMP_HDR.match(stripped)
+        if hdr and stripped.endswith("{"):
+            current = Computation(name=hdr.group(2))
+            comps[current.name] = current
+            if hdr.group(1):
+                entry_name = current.name
+            continue
+        if stripped == "}" or current is None:
+            continue
+        m = _OP_LINE.match(stripped)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result type = prefix of rhs up to the opcode token
+        # find opcode: first bare word followed by '(' after the type
+        om = re.search(r"([a-z][\w\-]*)\(", rhs)
+        if not om:
+            continue
+        opcode = om.group(1)
+        result_type = rhs[:om.start()].strip()
+        rest = rhs[om.start():]
+        op = OpInfo(name=name, result_type=result_type, opcode=opcode,
+                    rest=rest)
+        current.ops.append(op)
+        current.symbol_types[name] = result_type
+        if opcode == "while":
+            trip = 1
+            tm = _TRIP.search(rhs)
+            if tm:
+                trip = int(tm.group(1))
+            for cs in _CALLSITE.finditer(rhs):
+                comps  # noqa
+                current.calls.append((cs.group(1), "while", trip))
+        elif opcode in ("fusion", "call", "conditional", "custom-call",
+                        "reduce", "sort", "map", "scatter", "select-and-scatter",
+                        "reduce-window"):
+            for cs in _CALLSITE.finditer(rhs):
+                current.calls.append((cs.group(1), opcode, 1))
+    comps["__entry__"] = comps.get(entry_name, Computation("none"))
+    comps["__entry_name__"] = entry_name  # type: ignore
+    return comps
+
+
+@dataclass
+class HLOStats:
+    dot_flops: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    # f32-dtype share of collective bytes. XLA:CPU emulates bf16 matmuls as
+    # convert->f32 dot->convert, and SPMD often reshards the f32 side, so a
+    # bf16 model's activation collectives appear at 2x TPU bytes. The
+    # "tpu-corrected" total halves the f32 share (real TPUs move bf16).
+    collective_bytes_f32: float = 0.0
+    hbm_bytes: float = 0.0
+    while_trips: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    @property
+    def collective_bytes_tpu(self) -> float:
+        """TPU estimate: f32 collective traffic of a bf16 program halves."""
+        total = self.total_collective_bytes
+        return total - 0.5 * self.collective_bytes_f32
+
+
+def _dot_flops(op: OpInfo, comp: Computation) -> float:
+    """2 * result_elems * prod(contracting dims of lhs)."""
+    shapes = _shape_list(op.result_type)
+    if not shapes:
+        return 0.0
+    result_elems = sum(n for _, n in shapes)
+    cm = re.search(r"lhs_contracting_dims={([\d,]*)}", op.rest)
+    operands = re.findall(r"\(%?([\w\.\-]+)", op.rest[:op.rest.find(")")])
+    k = 1
+    if cm and operands:
+        lhs_type = comp.symbol_types.get(operands[0], "")
+        lhs_shapes = _SHAPE.search(lhs_type)
+        if lhs_shapes:
+            dims = [int(d) for d in lhs_shapes.group(2).split(",") if d]
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * result_elems * k
+
+
+def analyze_hlo(text: str) -> HLOStats:
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry_name__", None)
+    comps.pop("__entry__", None)
+    stats = HLOStats()
+
+    # computations reached ONLY via fusion are virtual (no HBM traffic of
+    # their internal ops); track reachable multipliers
+    mult: Dict[str, float] = defaultdict(float)
+    fusion_only: Dict[str, bool] = {}
+
+    def visit(name: str, m: float, via_fusion: bool):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] += m
+        if name in fusion_only:
+            fusion_only[name] = fusion_only[name] and via_fusion
+        else:
+            fusion_only[name] = via_fusion
+        for callee, kind, trip in comp.calls:
+            child_m = m * (trip if kind == "while" else 1)
+            visit(callee, child_m, via_fusion or kind == "fusion")
+
+    if entry:
+        visit(entry, 1.0, False)
+
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        is_virtual = fusion_only.get(name, False)
+        for op in comp.ops:
+            if op.opcode == "dot":
+                stats.dot_flops += m * _dot_flops(op, comp)
+            if op.opcode.startswith(COLLECTIVE_OPS) or any(
+                    op.opcode == c or op.opcode == c + "-start"
+                    for c in COLLECTIVE_OPS):
+                base = op.opcode.replace("-start", "")
+                if base in COLLECTIVE_OPS and not op.opcode.endswith("-done"):
+                    b = _bytes_of(op.result_type)
+                    stats.collective_bytes[base] += m * b
+                    stats.collective_counts[base] += m
+                    f32b = sum(_DTYPE_BYTES[dt] * n for dt, n in
+                               _shape_list(op.result_type) if dt == "f32")
+                    stats.collective_bytes_f32 += m * f32b
+            # HBM proxy, TPU-fusion-aware: on TPU, elementwise chains fuse
+            # into the producing dot/collective, so we count only ops that
+            # necessarily touch HBM: dots (read lhs+rhs, write out), data
+            # movement (gather/scatter/DUS/copy/transpose/reshape of big
+            # buffers), and collectives (counted via collective_bytes).
+            if op.opcode == "dot":  # dots touch HBM even when fused
+                operands = re.findall(
+                    r"\(?%([\w\.\-]+)", op.rest[:op.rest.find(")")])
+                op_bytes = sum(_bytes_of(comp.symbol_types.get(o, ""))
+                               for o in operands[:2])
+                stats.hbm_bytes += m * (op_bytes + _bytes_of(op.result_type))
+            elif not is_virtual and op.opcode in (
+                    "gather", "scatter", "dynamic-slice",
+                    "dynamic-update-slice", "copy", "transpose", "reshape",
+                    "concatenate", "pad", "slice"):
+                stats.hbm_bytes += 2.0 * m * _bytes_of(op.result_type)
+        for op in comp.ops:
+            if op.opcode == "while":
+                tm = _TRIP.search(op.rest)
+                if tm:
+                    stats.while_trips[op.name] = int(tm.group(1))
+    return stats
+
+
+def top_dots(text: str, n: int = 15):
+    """The n most expensive dot ops (flops x trip multiplier) -- the
+    profile-equivalent view for §Perf iteration on the dry-run."""
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry_name__", None)
+    comps.pop("__entry__", None)
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name, m):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] += m
+        for callee, kind, trip in comp.calls:
+            visit(callee, m * (trip if kind == "while" else 1))
+
+    if entry:
+        visit(entry, 1.0)
+    rows = []
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if not m:
+            continue
+        for op in comp.ops:
+            if op.opcode == "dot":
+                f = _dot_flops(op, comp)
+                rows.append((m * f, m, op.result_type[:48],
+                             op.rest[:100]))
+    rows.sort(reverse=True)
+    return rows[:n]

@@ -1,0 +1,50 @@
+"""ShapeDtypeStruct stand-ins for every model input -- the dry-run feeds
+these to jit(...).lower() so nothing is ever allocated."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Inputs for one (architecture, input-shape) pair.
+
+    train/prefill: full-sequence batch; decode: one token (the KV cache is
+    produced separately by Model.cache_shapes). Frontend archs receive
+    precomputed embeddings per the assignment's modality-stub carve-out.
+    """
+    b, l = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if shape.mode == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend.kind == "audio":
+        # the conv codec is stubbed: frames arrive as embeddings
+        batch["embeds"] = jax.ShapeDtypeStruct((b, l, cfg.frontend.embed_dim),
+                                               dtype)
+        if shape.mode == "train":
+            batch["targets"] = jax.ShapeDtypeStruct((b, l), i32)
+        return batch
+    if cfg.frontend.kind == "vision":
+        p = cfg.frontend.tokens_per_item
+        batch["embeds"] = jax.ShapeDtypeStruct((b, p, cfg.frontend.embed_dim),
+                                               dtype)
+        batch["tokens"] = jax.ShapeDtypeStruct((b, l - p), i32)
+        if cfg.rope_type == "mrope":
+            batch["positions"] = jax.ShapeDtypeStruct((3, b, l), i32)
+        if shape.mode == "train":
+            batch["targets"] = jax.ShapeDtypeStruct((b, l), i32)
+            batch["loss_mask"] = jax.ShapeDtypeStruct((b, l), jnp.float32)
+        return batch
+
+    batch["tokens"] = jax.ShapeDtypeStruct((b, l), i32)
+    if shape.mode == "train":
+        batch["targets"] = jax.ShapeDtypeStruct((b, l), i32)
+    return batch

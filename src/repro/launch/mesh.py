@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state -- required because the dry-run must set
+XLA_FLAGS before the first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) over ("data", "model") = 256 chips (TPU v5e pod
+    slice). Multi-pod: (2, 16, 16) over ("pod", "data", "model") = 512 chips,
+    the pod axis crossing the DCN/ICI boundary."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Degenerate mesh over however many (CPU) devices exist -- lets the
+    distributed code paths run in tests without the 512-device dry-run env."""
+    n = jax.device_count()
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))

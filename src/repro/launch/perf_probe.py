@@ -1,0 +1,92 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf profiling probe: top collectives + top dots for one (arch, shape),
+with optional iteration overrides. This is the dry-run profile equivalent.
+
+  PYTHONPATH=src python -m repro.launch.perf_probe qwen2-7b train_4k
+  PYTHONPATH=src python -m repro.launch.perf_probe deepseek-v2-236b train_4k \
+      --moe-capacity 1.25
+"""
+import argparse
+import collections
+import sys
+
+from repro.launch import hlo_walker as hw
+
+
+def top_collectives(txt, n=12):
+    comps = hw.parse_hlo(txt)
+    entry = comps.pop("__entry_name__")
+    comps.pop("__entry__")
+    mult = collections.defaultdict(float)
+
+    def visit(name, m):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] += m
+        for callee, kind, trip in comp.calls:
+            visit(callee, m * (trip if kind == "while" else 1))
+
+    visit(entry, 1.0)
+    rows = []
+    for name, comp in comps.items():
+        m = mult.get(name, 0)
+        if not m:
+            continue
+        for op in comp.ops:
+            base = op.opcode.replace("-start", "")
+            if base in hw.COLLECTIVE_OPS and not op.opcode.endswith("-done"):
+                rows.append((m * hw._bytes_of(op.result_type), m, base,
+                             op.result_type[:64]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="2d")
+    ap.add_argument("--residual-mode", default="feature")
+    ap.add_argument("--moe-capacity", type=float, default=0.0)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--repeat-kv", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.launch import dryrun
+    if args.microbatches:
+        dryrun.MICROBATCHES[args.arch] = args.microbatches
+    overrides = {}
+    if args.strategy != "2d":
+        overrides["strategy"] = args.strategy
+    if args.residual_mode != "feature":
+        overrides["residual_mode"] = args.residual_mode
+    if args.moe_capacity:
+        overrides["moe_capacity_factor"] = args.moe_capacity
+    if args.repeat_kv:
+        overrides["attn_repeat_kv"] = True
+    lowered, compiled, meta = dryrun.lower_pair(
+        args.arch, args.shape, multi_pod=args.multi_pod,
+        model_overrides=overrides or None)
+    txt = compiled.as_text()
+    st = hw.analyze_hlo(txt)
+    print(f"== {args.arch} x {args.shape} {meta.get('mesh')} "
+          f"(overrides={overrides}, mb={meta.get('microbatches')}) ==")
+    print(f"dot flops/dev: {st.dot_flops/1e12:.2f} TF   "
+          f"hbm bytes/dev: {st.hbm_bytes/1e9:.1f} GB")
+    for k, v in sorted(st.collective_bytes.items()):
+        print(f"  {k:20s} {v/1e9:10.2f} GB/dev  x{st.collective_counts[k]:.0f}")
+    print("-- top collectives (bytes x trips) --")
+    for r in top_collectives(txt):
+        print(f"  {r[0]/1e9:8.2f}GB x{r[1]:6.0f} {r[2]:18s} {r[3]}")
+    print("-- top dots --")
+    for r in hw.top_dots(txt, 8):
+        print(f"  {r[0]/1e12:8.1f}TF x{r[1]:6.0f} {r[2]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

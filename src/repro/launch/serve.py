@@ -1,0 +1,79 @@
+"""Serving driver: batched greedy decoding with the fine-tuned adapters.
+
+Demonstrates the inference side of the system -- prefill fills the KV/SSM
+cache, then serve_step decodes token-by-token for a batch of requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import LoRAConfig, get_config
+    from repro.launch.steps import build_prefill_step, build_serve_step
+    from repro.models import build_model
+
+    cfg = get_config(args.arch).reduced()
+    if not cfg.supports_decode:
+        print(f"{args.arch} is encoder-only; no decode path")
+        return 1
+    lora = LoRAConfig(rank_levels=(4, 8, 16))
+    model = build_model(cfg, lora, dtype=jnp.float32, remat=False,
+                        block_q=32, block_kv=32)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+
+    b, lp = args.batch, args.prompt_len
+    prompts = jax.random.randint(key, (b, lp), 0, cfg.vocab_size)
+    prefill = jax.jit(build_prefill_step(model, 16))
+    serve = jax.jit(build_serve_step(model, 16))
+
+    t0 = time.time()
+    logits, layer_caches = prefill(params, {"tokens": prompts})
+    max_len = lp + args.tokens
+
+    def grow(x):
+        if x.ndim >= 3 and x.shape[2] == lp:
+            pw = [(0, 0)] * x.ndim
+            pw[2] = (0, max_len - lp)
+            return jnp.pad(x, pw)
+        return x
+
+    cache = {"layers": jax.tree.map(grow, layer_caches),
+             "len": jnp.int32(lp)}
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    generated = [tok]
+    t0 = time.time()
+    for _ in range(args.tokens - 1):
+        nxt, cache = serve(params, {"token": tok}, cache)
+        tok = nxt[:, None]
+        generated.append(tok)
+    seqs = jnp.concatenate(generated, axis=1)
+    t_decode = time.time() - t0
+    print(f"arch={cfg.name} batch={b} prefill({lp} toks)={t_prefill:.2f}s "
+          f"decode({args.tokens} toks)={t_decode:.2f}s "
+          f"[{args.tokens * b / max(t_decode, 1e-9):.1f} tok/s]")
+    for i in range(min(b, 2)):
+        print(f"  req{i}: {seqs[i].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,89 @@
+"""Step builders: client train step (LoRA-only AdamW, grad accumulation),
+prefill step, and single-token serve step. Shared by the real trainer, the
+examples, and the multi-pod dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import merge_lora
+from repro.models.transformer import Model
+from repro.optim import AdamW
+
+
+def _split_microbatches(batch: dict, num: int) -> dict:
+    """Reshape the batch dim into (num, B/num). M-RoPE positions (3, B, L)
+    split on axis 1."""
+    def split(key, x):
+        if key == "positions" and x.ndim == 3 and x.shape[0] == 3:
+            return x.reshape((3, num, -1) + x.shape[2:]).transpose(1, 0, 2, 3)
+        return x.reshape((num, -1) + x.shape[1:])
+    return {k: split(k, v) for k, v in batch.items()}
+
+
+def build_train_step(model: Model, lora_rank: int, *,
+                     num_microbatches: int = 1,
+                     weight_decay: float = 0.0) -> Callable:
+    """(lora, opt_state, base, batch, lr) -> (lora, opt_state, metrics).
+
+    Gradients flow ONLY to the LoRA factors (the paper's client step); grad
+    accumulation over microbatches bounds activation memory at 340B scale.
+    """
+    opt = AdamW(weight_decay=weight_decay)
+    scale = model.lora.scaling(lora_rank) if model.lora is not None else 1.0
+
+    def loss_fn(lora, base, mb):
+        params = merge_lora(base, lora)
+        loss, metrics = model.train_loss(params, mb, lora_rank=lora_rank,
+                                         lora_scale=scale)
+        return loss, metrics["loss"]
+
+    def train_step(lora, opt_state, base, batch, lr):
+        if num_microbatches == 1:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(lora, base, batch)
+        else:
+            mbs = _split_microbatches(batch, num_microbatches)
+            g0 = jax.tree.map(
+                lambda p: None if p is None else jnp.zeros(p.shape, jnp.float32),
+                lora, is_leaf=lambda x: x is None)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(lora, base, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: None if a is None else a + b.astype(jnp.float32),
+                    g_acc, g, is_leaf=lambda x: x is None)
+                return (g_acc, l_acc + l), None
+
+            (grads, loss), _ = jax.lax.scan(acc, (g0, 0.0), mbs)
+            inv = 1.0 / num_microbatches
+            grads = jax.tree.map(
+                lambda g: None if g is None else g * inv, grads,
+                is_leaf=lambda x: x is None)
+            loss = loss * inv
+        new_lora, new_opt = opt.update(grads, opt_state, lora, lr)
+        return new_lora, new_opt, {"loss": loss}
+
+    return train_step, opt
+
+
+def build_prefill_step(model: Model, lora_rank: int) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, lora_rank=lora_rank)
+        return logits, cache
+    return prefill_step
+
+
+def build_serve_step(model: Model, lora_rank: int) -> Callable:
+    """One decode step; greedy next-token included so the step is closed."""
+    def serve_step(params, batch, cache):
+        logits, new_cache = model.decode_step(params, batch, cache,
+                                              lora_rank=lora_rank)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return serve_step

@@ -1,0 +1,4 @@
+"""Model zoo: unified architecture assembly over the assigned pool."""
+from repro.models.transformer import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,129 @@
+"""Dense projection with optional heterogeneous-rank LoRA adapter.
+
+This is the layer the paper's technique attaches to. A LoRA-augmented dense
+layer carries server-side factors sized at ``r_max``; a client with rank
+``r_k`` receives a statically-truncated slice (the broadcast step of
+Algorithm 1 line 4) and its update flows back through the aggregators in
+``repro.core.aggregation``.
+
+Parameter layout per dense layer::
+
+    {"w": (in, out) [, "b": (out,)]
+     [, "lora_a": (r, in), "lora_b": (out, r)]}
+
+LoRA forward (scaling s = alpha/r, s=1 under the paper's alpha=r setting)::
+
+    y = x @ w + s * (x @ a.T) @ b.T
+
+The fused Pallas path (kernels/lora_apply) computes the same expression with
+MXU-aligned tiling; the jnp expression here is the oracle and the CPU path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               lora_rank: int = 0, dtype=jnp.float32,
+               init_scale: Optional[float] = None) -> dict:
+    """Initialize a dense layer, optionally with LoRA factors of rank r_max."""
+    k_w, k_a = jax.random.split(key)
+    scale = init_scale if init_scale is not None else d_in ** -0.5
+    params = {"w": (jax.random.normal(k_w, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype=dtype)
+    if lora_rank > 0:
+        params.update(lora_init(k_a, d_in, d_out, lora_rank, dtype=dtype))
+    return params
+
+
+def lora_init(key, d_in: int, d_out: int, rank: int, dtype=jnp.float32) -> dict:
+    """Standard LoRA init: A ~ N(0, 1/r), B = 0 so the adapter starts at 0."""
+    a = jax.random.normal(key, (rank, d_in)) * (1.0 / rank) ** 0.5
+    return {"lora_a": a.astype(dtype),
+            "lora_b": jnp.zeros((d_out, rank), dtype=dtype)}
+
+
+def dense_apply(params: dict, x: jnp.ndarray, *, lora_rank: int = -1,
+                lora_scale: float = 1.0) -> jnp.ndarray:
+    """Apply dense + optional LoRA (or DoRA when a magnitude is present).
+
+    lora_rank: -1 -> use full factors if present; 0 -> disable adapter;
+    r > 0 -> statically truncate factors to the client rank r.
+    """
+    if lora_rank != 0 and "lora_m" in params and "lora_a" in params:
+        return _dora_apply(params, x, lora_rank=lora_rank,
+                           lora_scale=lora_scale)
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    if lora_rank != 0 and "lora_a" in params:
+        a = params["lora_a"]
+        b = params["lora_b"]
+        if lora_rank > 0:
+            a = a[:lora_rank, :]
+            b = b[:, :lora_rank]
+        # low-rank bottleneck in the params' (higher) precision, cast at ends
+        z = x @ a.astype(x.dtype).T
+        y = y + lora_scale * (z @ b.astype(x.dtype).T)
+    return y
+
+
+def _dora_apply(params: dict, x: jnp.ndarray, *, lora_rank: int,
+                lora_scale: float) -> jnp.ndarray:
+    """DoRA (arXiv:2402.09353): weight-decomposed adaptation.
+
+        W' = m * (W + s*dW) / ||W + s*dW||_col,  dW = A^T B^T (in, out)
+
+    The trainable magnitude ``lora_m`` (out,) travels with the adapters in
+    federated aggregation (FedAvg'd; it is not rank-structured). Used by the
+    paper's Table 5 extension -- FlexLoRA-DoRA degrades under rank collapse
+    because magnitude reweighting cannot recover attenuated directions.
+    """
+    a = params["lora_a"]
+    b = params["lora_b"]
+    if lora_rank > 0:
+        a = a[:lora_rank, :]
+        b = b[:, :lora_rank]
+    w = params["w"].astype(jnp.float32)
+    dw = a.astype(jnp.float32).T @ b.astype(jnp.float32).T     # (in, out)
+    adapted = w + lora_scale * dw
+    col_norm = jnp.sqrt(jnp.sum(jnp.square(adapted), axis=0) + 1e-8)
+    scaled = adapted * (params["lora_m"].astype(jnp.float32) / col_norm)[None]
+    y = x @ scaled.astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def dora_magnitude_init(w: jnp.ndarray) -> jnp.ndarray:
+    """DoRA init: m = column norms of the pretrained weight.
+
+    Handles layer-stacked weights (..., in, out): norm over the in dim.
+    """
+    return jnp.sqrt(jnp.sum(jnp.square(w.astype(jnp.float32)), axis=-2))
+
+
+def quantize_dequantize(w: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """QLoRA simulation: per-output-channel symmetric fake quantization of
+    the frozen base weight. The adapter math is unchanged (as in QLoRA);
+    what the federated experiment tests is aggregation robustness to a
+    quantized base (paper Table 5)."""
+    levels = 2 ** (bits - 1) - 1
+    # per-output-channel over the IN dim (handles layer-stacked weights)
+    scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / levels
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(w / scale)
+    q = jnp.clip(q, -levels - 1, levels)
+    return (q * scale).astype(w.dtype)
+
+
+def stacked_dense_init(key, num_layers: int, d_in: int, d_out: int,
+                       **kw) -> dict:
+    """Per-layer params stacked on a leading axis (for lax.scan blocks)."""
+    keys = jax.random.split(key, num_layers)
+    layers = [dense_init(k, d_in, d_out, **kw) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)

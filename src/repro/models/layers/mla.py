@@ -1,0 +1,143 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV activations are compressed to a shared latent ``c_kv`` of dimension
+``kv_lora_rank`` plus a small decoupled RoPE key; at decode time the cache
+stores ONLY (c_kv, k_rope) -- (512 + 64) floats/token for deepseek-v2 --
+instead of per-head K/V, which is why MLA survives decode_32k x batch 128
+and (with sliding window) long_500k.
+
+Train/prefill use the "naive" expansion (materialize per-head K/V from the
+latent); decode uses the compressed cache with per-step up-projection.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.layers.attention import blockwise_attention, decode_attention
+from repro.models.layers.dense import dense_apply, dense_init
+from repro.models.layers.norms import rms_norm, rms_norm_init
+from repro.models.layers.rope import apply_rope
+
+
+def mla_init(key, d_model: int, num_heads: int, cfg: MLAConfig, *,
+             lora_ranks: dict, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    params = {}
+    if cfg.q_lora_rank:
+        params["q_a"] = dense_init(ks[0], d_model, cfg.q_lora_rank, dtype=dtype,
+                                   lora_rank=lora_ranks.get("q_a_proj", 0))
+        params["q_a_norm"] = rms_norm_init(cfg.q_lora_rank, dtype=dtype)
+        params["q_b"] = dense_init(ks[1], cfg.q_lora_rank,
+                                   num_heads * qk_head, dtype=dtype)
+    else:
+        params["q"] = dense_init(ks[0], d_model, num_heads * qk_head,
+                                 dtype=dtype, lora_rank=lora_ranks.get("q_a_proj", 0))
+    # joint KV compression + decoupled rope key
+    params["kv_a"] = dense_init(
+        ks[2], d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype=dtype,
+        lora_rank=lora_ranks.get("kv_a_proj", 0))
+    params["kv_a_norm"] = rms_norm_init(cfg.kv_lora_rank, dtype=dtype)
+    params["kv_b"] = dense_init(
+        ks[3], cfg.kv_lora_rank,
+        num_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim), dtype=dtype)
+    params["o"] = dense_init(ks[4], num_heads * cfg.v_head_dim, d_model,
+                             dtype=dtype, lora_rank=lora_ranks.get("o_proj", 0))
+    return params
+
+
+def _project_q(params, x, num_heads, cfg: MLAConfig, lk):
+    b_, l = x.shape[:2]
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    if "q_a" in params:
+        qa = rms_norm(params["q_a_norm"], dense_apply(params["q_a"], x, **lk))
+        q = dense_apply(params["q_b"], qa)
+    else:
+        q = dense_apply(params["q"], x, **lk)
+    q = q.reshape(b_, l, num_heads, qk_head)
+    return jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)  # nope, rope parts
+
+
+def _latent_kv(params, x, cfg: MLAConfig, lk):
+    kv = dense_apply(params["kv_a"], x, **lk)
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(params["kv_a_norm"], c_kv)
+    return c_kv, k_rope  # (B, L, R), (B, L, rope_dim)
+
+
+def _expand_kv(params, c_kv, num_heads, cfg: MLAConfig):
+    b_, l = c_kv.shape[:2]
+    kvb = dense_apply(params["kv_b"], c_kv)
+    kvb = kvb.reshape(b_, l, num_heads, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    return jnp.split(kvb, [cfg.qk_nope_head_dim], axis=-1)  # k_nope, v
+
+
+def mla_attention(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                  num_heads: int, cfg: MLAConfig, *, rope_theta: float,
+                  causal: bool = True, sliding_window: int = 0,
+                  lora_rank: int = -1, lora_scale: float = 1.0,
+                  ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence MLA. Returns (out, (c_kv, k_rope)) for cache fill."""
+    lk = dict(lora_rank=lora_rank, lora_scale=lora_scale)
+    b_, l = x.shape[:2]
+    q_nope, q_rope = _project_q(params, x, num_heads, cfg, lk)
+    c_kv, k_rope = _latent_kv(params, x, cfg, lk)
+    k_nope, v = _expand_kv(params, c_kv, num_heads, cfg)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    k_rope_r = apply_rope(k_rope[:, :, None, :], positions, rope_theta)
+    k_rope_b = jnp.broadcast_to(
+        k_rope_r, (b_, l, num_heads, cfg.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    # pad v to qk head dim so one attention call serves both (standard trick)
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_head - cfg.v_head_dim)))
+    out = blockwise_attention(q, k, v_pad, causal=causal,
+                              sliding_window=sliding_window)
+    out = out[..., :cfg.v_head_dim].reshape(b_, l, num_heads * cfg.v_head_dim)
+    return dense_apply(params["o"], out, **lk), (c_kv, apply_rope(
+        k_rope[:, :, None, :], positions, rope_theta)[:, :, 0, :])
+
+
+def mla_decode(params: dict, x: jnp.ndarray, position: jnp.ndarray,
+               cache_ckv: jnp.ndarray, cache_krope: jnp.ndarray,
+               cache_len, num_heads: int, cfg: MLAConfig, *,
+               rope_theta: float, lora_rank: int = -1,
+               lora_scale: float = 1.0,
+               write_idx=None) -> Tuple[jnp.ndarray, Tuple]:
+    """One-token MLA decode against the compressed cache.
+
+    x (B, 1, d); cache_ckv (B, S, R); cache_krope (B, S, rope_dim);
+    position (B,) absolute position of the new token.
+    """
+    lk = dict(lora_rank=lora_rank, lora_scale=lora_scale)
+    b_ = x.shape[0]
+    q_nope, q_rope = _project_q(params, x, num_heads, cfg, lk)   # (B,1,H,*)
+    c_kv_new, k_rope_new = _latent_kv(params, x, cfg, lk)        # (B,1,*)
+    pos2d = position[:, None]
+    q_rope = apply_rope(q_rope, pos2d, rope_theta)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], pos2d, rope_theta)[:, :, 0]
+    # write the new latent into the cache (uniform across batch; ring index
+    # when the cache is window-sized)
+    cl = jnp.asarray(cache_len if write_idx is None else write_idx).reshape(-1)[0]
+    cache_ckv = jax.lax.dynamic_update_slice(
+        cache_ckv, c_kv_new.astype(cache_ckv.dtype), (0, cl, 0))
+    cache_krope = jax.lax.dynamic_update_slice(
+        cache_krope, k_rope_new.astype(cache_krope.dtype), (0, cl, 0))
+    # absorbed attention: expand latent to per-head K/V for scoring.
+    k_nope_c, v_c = _expand_kv(params, cache_ckv, num_heads, cfg)  # (B,S,H,*)
+    k_rope_b = jnp.broadcast_to(
+        cache_krope[:, :, None, :],
+        cache_krope.shape[:2] + (num_heads, cfg.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope_c, k_rope_b], axis=-1)
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    v_pad = jnp.pad(v_c, ((0, 0), (0, 0), (0, 0),
+                          (0, qk_head - cfg.v_head_dim)))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)               # (B,1,H,Dqk)
+    out = decode_attention(q, k, v_pad, jnp.asarray(cache_len) + 1)
+    out = out[..., :cfg.v_head_dim].reshape(b_, 1, num_heads * cfg.v_head_dim)
+    return dense_apply(params["o"], out, **lk), (cache_ckv, cache_krope)

@@ -1,0 +1,53 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and non-gated (GELU/ReLU²)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ACT_GEGLU, ACT_GELU, ACT_RELU2, ACT_SWIGLU
+from repro.models.layers.dense import dense_apply, dense_init
+
+
+def is_gated(activation: str) -> bool:
+    return activation in (ACT_GEGLU, ACT_SWIGLU)
+
+
+def _act(activation: str, x: jnp.ndarray) -> jnp.ndarray:
+    if activation == ACT_GELU:
+        return jax.nn.gelu(x)
+    if activation == ACT_GEGLU:
+        return jax.nn.gelu(x)
+    if activation == ACT_SWIGLU:
+        return jax.nn.silu(x)
+    if activation == ACT_RELU2:
+        r = jax.nn.relu(x)
+        return r * r          # squared ReLU (nemotron-4)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def mlp_init(key, d_model: int, d_ff: int, activation: str, *,
+             lora_ranks: dict, dtype=jnp.float32) -> dict:
+    """lora_ranks maps {"up_proj": r, "gate_proj": r, "down_proj": r} (0=off)."""
+    ks = jax.random.split(key, 3)
+    params = {
+        "up": dense_init(ks[0], d_model, d_ff, dtype=dtype,
+                         lora_rank=lora_ranks.get("up_proj", 0)),
+        "down": dense_init(ks[1], d_ff, d_model, dtype=dtype,
+                           lora_rank=lora_ranks.get("down_proj", 0)),
+    }
+    if is_gated(activation):
+        params["gate"] = dense_init(ks[2], d_model, d_ff, dtype=dtype,
+                                    lora_rank=lora_ranks.get("gate_proj", 0))
+    return params
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, activation: str, *,
+              lora_rank: int = -1, lora_scale: float = 1.0) -> jnp.ndarray:
+    lk = dict(lora_rank=lora_rank, lora_scale=lora_scale)
+    up = dense_apply(params["up"], x, **lk)
+    if "gate" in params:
+        gate = _act(activation, dense_apply(params["gate"], x, **lk))
+        h = gate * up
+    else:
+        h = _act(activation, up)
+    return dense_apply(params["down"], h, **lk)

@@ -1,0 +1,36 @@
+"""Normalization layers (functional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rms_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm: statistics in f32, MULTIPLY in the input dtype.
+
+    Keeping the (B, L, D)-sized products in bf16 matters under sharding:
+    if the normalized tensor is f32, the per-layer residual all-gathers of
+    a TP mesh move twice the bytes (§Perf iteration, measured on qwen2).
+    The f32 part is only the (B, L, 1) variance reduction.
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def layer_norm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype),
+            "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layer_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    normed = (xf - mean) * (var + eps) ** -0.5
+    out = normed * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,61 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (multimodal RoPE, arXiv:2409.12191) splits the head-dim frequency
+bands into three sections (temporal, height, width) and indexes each section
+with its own position id. For pure-text tokens all three ids coincide, which
+makes M-RoPE degenerate to standard RoPE -- a property we test.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,) in f32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Apply rotation given broadcastable cos/sin of shape (..., head_dim//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """Standard RoPE.
+
+    x: (B, L, H, D); positions: (B, L) int32. Rotation in f32, cast back.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, L, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]               # (B, L, 1, D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """M-RoPE. positions: (3, B, L) for (temporal, h, w) ids.
+
+    ``sections`` gives the number of frequency pairs assigned to each of the
+    three position streams; sum(sections) must equal head_dim // 2.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    # section id per frequency index: 0,0,..,1,1,..,2,2
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=d // 2)    # (D/2,)
+    # pick position stream per frequency: (B, L, D/2)
+    pos_blc = positions.transpose(1, 2, 0).astype(jnp.float32)  # (B, L, 3)
+    idx = jnp.broadcast_to(sec_id, pos_blc.shape[:2] + (d // 2,))
+    pos = jnp.take_along_axis(pos_blc, idx, axis=-1)            # (B, L, D/2)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

@@ -1,0 +1,254 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+TPU adaptation (DESIGN.md §4): we use the *chunked dual form* -- intra-chunk
+terms are (Q x Q) matmuls that feed the MXU, and the inter-chunk recurrence
+is a short ``lax.scan`` over chunk states -- instead of the GPU-style
+parallel associative scan. The scan is over chunks (L / chunk_size steps),
+so activation memory stays O(B * Q * H * P) per step regardless of L, which
+is what makes train_4k on 340B-class meshes and long_500k decode tractable.
+
+Shapes (per mixer):
+  u        (B, L, d_model)
+  in_proj  -> z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)
+  x viewed as (B, L, H, P);   B, C as (B, L, G, N);   H = G * heads_per_group
+  state    (B, H, P, N)
+
+The recurrence per head:  S_t = exp(dt_t A) S_{t-1} + dt_t B_t x_t^T,
+y_t = C_t . S_t + D x_t, gated by silu(z) and RMS-normed before out_proj.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers.dense import dense_apply, dense_init
+from repro.models.layers.norms import rms_norm, rms_norm_init
+
+
+def ssd_dims(d_model: int, cfg: SSMConfig) -> dict:
+    d_inner = cfg.expand * d_model
+    nheads = cfg.num_heads or d_inner // cfg.head_dim
+    head_dim = d_inner // nheads
+    conv_ch = d_inner + 2 * cfg.ngroups * cfg.state_dim
+    proj_out = 2 * d_inner + 2 * cfg.ngroups * cfg.state_dim + nheads
+    return dict(d_inner=d_inner, nheads=nheads, head_dim=head_dim,
+                conv_ch=conv_ch, proj_out=proj_out)
+
+
+def ssd_init(key, d_model: int, cfg: SSMConfig, *, lora_ranks: dict,
+             dtype=jnp.float32) -> dict:
+    dims = ssd_dims(d_model, cfg)
+    ks = jax.random.split(key, 5)
+    params = {
+        "in_proj": dense_init(ks[0], d_model, dims["proj_out"], dtype=dtype,
+                              lora_rank=lora_ranks.get("ssm_in_proj", 0)),
+        "out_proj": dense_init(ks[1], dims["d_inner"], d_model, dtype=dtype,
+                               lora_rank=lora_ranks.get("ssm_out_proj", 0)),
+        # depthwise causal conv over [x, B, C] channels
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_dim, dims["conv_ch"]))
+                   * (1.0 / cfg.conv_dim) ** 0.5).astype(dtype),
+        "conv_b": jnp.zeros((dims["conv_ch"],), dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, dims["nheads"])).astype(jnp.float32),
+        "D": jnp.ones((dims["nheads"],), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((dims["nheads"],), dtype=jnp.float32),
+        "norm": rms_norm_init(dims["d_inner"], dtype=dtype),
+    }
+    return params
+
+
+def _split_proj(proj: jnp.ndarray, d_model: int, cfg: SSMConfig):
+    dims = ssd_dims(d_model, cfg)
+    d_in, gn, h = dims["d_inner"], cfg.ngroups * cfg.state_dim, dims["nheads"]
+    z, x, b, c, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, x, b, c, dt, dims
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                 init_state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d. xbc (B, L, C); w (K, C).
+
+    Returns (out (B, L, C), final_state (B, K-1, C)).
+    """
+    k = w.shape[0]
+    b_, l, c = xbc.shape
+    if init_state is None:
+        init_state = jnp.zeros((b_, k - 1, c), xbc.dtype)
+    padded = jnp.concatenate([init_state, xbc], axis=1)        # (B, L+K-1, C)
+    out = jnp.zeros((b_, l, c), jnp.float32)
+    for i in range(k):  # K is tiny (4): unrolled taps
+        out = out + padded[:, i:i + l].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + bias.astype(jnp.float32)
+    final = padded[:, l:]  # last K-1 inputs
+    return jax.nn.silu(out).astype(xbc.dtype), final
+
+
+def _expand_groups(t: jnp.ndarray, nheads: int) -> jnp.ndarray:
+    """(..., G, N) -> (..., H, N) broadcasting each group over its heads."""
+    g = t.shape[-2]
+    reps = nheads // g
+    return jnp.repeat(t, reps, axis=-2)
+
+
+def ssd_scan_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                     b: jnp.ndarray, c: jnp.ndarray, d_skip: jnp.ndarray,
+                     chunk: int,
+                     init_state: Optional[jnp.ndarray] = None,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan (pure jnp; the Pallas kernel mirrors this math).
+
+    x (B, L, H, P); dt (B, L, H) post-softplus; a_log (H,);
+    b, c (B, L, G, N). Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    B_, L, H, P = x.shape
+    G, N = b.shape[-2:]
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    A = -jnp.exp(a_log.astype(jnp.float32))                     # (H,) < 0
+
+    xf = x.astype(jnp.float32).reshape(B_, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B_, nc, chunk, H)
+    bf = b.astype(jnp.float32).reshape(B_, nc, chunk, G, N)
+    cf = c.astype(jnp.float32).reshape(B_, nc, chunk, G, N)
+    bh = _expand_groups(bf, H)                                  # (B,nc,Q,H,N)
+    ch = _expand_groups(cf, H)
+
+    a_inc = dtf * A                                             # (B,nc,Q,H) <=0
+    cum = jnp.cumsum(a_inc, axis=2)                             # inclusive
+    dtx = xf * dtf[..., None]                                   # dt folded in
+
+    if init_state is None:
+        init_state = jnp.zeros((B_, H, P, N), jnp.float32)
+
+    def chunk_body(state, inp):
+        xq, dtxq, bq, cq, cumq = inp
+        # intra-chunk: Lmat_ij = exp(cum_i - cum_j) for i >= j.
+        # Mask BEFORE exp: masked entries have diff > 0 (often huge), and
+        # where(causal, exp(diff), 0) still produces inf in the forward
+        # whose VJP multiplies 0 * inf = NaN -- the classic where-NaN trap
+        # (this killed every SSM training step until caught by the smoke
+        # tests' loss-decrease assertion).
+        diff = cumq[:, :, None, :] - cumq[:, None, :, :]        # (B,Q,Q,H)
+        idx = jnp.arange(cumq.shape[1])
+        causal = (idx[:, None] >= idx[None, :])[None, :, :, None]
+        lmat = jnp.exp(jnp.where(causal, diff, -1e30))          # (B,Q,Q,H)
+        cb = jnp.einsum("bihn,bjhn->bijh", cq, bq)              # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", cb * lmat, dtxq)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cumq)                                # (B,Q,H)
+        y_inter = jnp.einsum("bqhn,bhpn,bqh->bqhp", cq, state, decay_in)
+        # state update
+        decay_out = jnp.exp(cumq[:, -1:, :] - cumq)             # (B,Q,H)
+        new_contrib = jnp.einsum("bqhn,bqhp,bqh->bhpn", bq, dtxq, decay_out)
+        chunk_decay = jnp.exp(cumq[:, -1, :])                   # (B,H)
+        state = state * chunk_decay[..., None, None] + new_contrib
+        return state, y_intra + y_inter
+
+    # scan over chunks: inputs shaped (nc, B, Q, ...)
+    inputs = (xf.transpose(1, 0, 2, 3, 4), dtx.transpose(1, 0, 2, 3, 4),
+              bh.transpose(1, 0, 2, 3, 4), ch.transpose(1, 0, 2, 3, 4),
+              cum.transpose(1, 0, 2, 3))
+    final_state, ys = jax.lax.scan(chunk_body, init_state, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, L, H, P)
+    y = y + xf.reshape(B_, L, H, P) * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                    b: jnp.ndarray, c: jnp.ndarray, d_skip: jnp.ndarray,
+                    state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One recurrent step. x (B, H, P); dt (B, H); b, c (B, G, N);
+    state (B, H, P, N). Returns (y (B, H, P), new_state)."""
+    H = x.shape[1]
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    bh = _expand_groups(b.astype(jnp.float32), H)               # (B,H,N)
+    ch = _expand_groups(c.astype(jnp.float32), H)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A)                                    # (B,H)
+    new_state = (state * decay[..., None, None]
+                 + jnp.einsum("bhn,bhp,bh->bhpn", bh, xf, dtf))
+    y = jnp.einsum("bhn,bhpn->bhp", ch, new_state)
+    y = y + xf * d_skip.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+def ssd_mixer_apply(params: dict, u: jnp.ndarray, d_model: int,
+                    cfg: SSMConfig, *, lora_rank: int = -1,
+                    lora_scale: float = 1.0,
+                    conv_state: Optional[jnp.ndarray] = None,
+                    ssm_state: Optional[jnp.ndarray] = None,
+                    use_kernel: bool = False):
+    """Full SSD mixer over a sequence. u (B, L, d_model).
+
+    Returns (y (B, L, d_model), (conv_state, ssm_state)).
+    """
+    lk = dict(lora_rank=lora_rank, lora_scale=lora_scale)
+    proj = dense_apply(params["in_proj"], u, **lk)
+    z, x, b, c, dt, dims = _split_proj(proj, d_model, cfg)
+    H, P = dims["nheads"], dims["head_dim"]
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    xbc, conv_final = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   conv_state)
+    x, b, c = jnp.split(xbc, [dims["d_inner"],
+                              dims["d_inner"] + cfg.ngroups * cfg.state_dim],
+                        axis=-1)
+    B_, L = u.shape[0], u.shape[1]
+    x = x.reshape(B_, L, H, P)
+    b = b.reshape(B_, L, cfg.ngroups, cfg.state_dim)
+    c = c.reshape(B_, L, cfg.ngroups, cfg.state_dim)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        y, ssm_final = kernel_ops.ssd_scan(
+            x, dt_act, params["A_log"], b, c, params["D"], cfg.chunk_size,
+            init_state=ssm_state)
+    else:
+        y, ssm_final = ssd_scan_chunked(
+            x, dt_act, params["A_log"], b, c, params["D"], cfg.chunk_size,
+            init_state=ssm_state)
+    y = y.reshape(B_, L, dims["d_inner"])
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    out = dense_apply(params["out_proj"], y, **lk)
+    return out, (conv_final, ssm_final)
+
+
+def ssd_mixer_decode(params: dict, u: jnp.ndarray, d_model: int,
+                     cfg: SSMConfig, conv_state: jnp.ndarray,
+                     ssm_state: jnp.ndarray, *, lora_rank: int = -1,
+                     lora_scale: float = 1.0):
+    """One-token decode. u (B, 1, d_model); conv_state (B, K-1, conv_ch);
+    ssm_state (B, H, P, N)."""
+    lk = dict(lora_rank=lora_rank, lora_scale=lora_scale)
+    proj = dense_apply(params["in_proj"], u, **lk)
+    z, x, b, c, dt, dims = _split_proj(proj, d_model, cfg)
+    H, P = dims["nheads"], dims["head_dim"]
+    xbc = jnp.concatenate([x, b, c], axis=-1)                   # (B,1,C)
+    # conv over [state, new]: window = last K inputs
+    w, bias = params["conv_w"], params["conv_b"]
+    window = jnp.concatenate([conv_state, xbc], axis=1)         # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          w.astype(jnp.float32)) + bias.astype(jnp.float32)
+    xbc_out = jax.nn.silu(conv_out).astype(u.dtype)             # (B,C)
+    new_conv_state = window[:, 1:]
+    x1, b1, c1 = jnp.split(
+        xbc_out, [dims["d_inner"], dims["d_inner"] + cfg.ngroups * cfg.state_dim],
+        axis=-1)
+    B_ = u.shape[0]
+    x1 = x1.reshape(B_, H, P)
+    b1 = b1.reshape(B_, cfg.ngroups, cfg.state_dim)
+    c1 = c1.reshape(B_, cfg.ngroups, cfg.state_dim)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))
+    y, new_ssm = ssd_decode_step(x1, dt1, params["A_log"], b1, c1,
+                                 params["D"], ssm_state)
+    y = y.reshape(B_, 1, dims["d_inner"])
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    out = dense_apply(params["out_proj"], y, **lk)
+    return out, (new_conv_state, new_ssm)

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.schedules import constant, get_schedule, linear_decay
+
+__all__ = ["AdamW", "AdamWState", "constant", "get_schedule", "linear_decay"]

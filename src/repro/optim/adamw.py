@@ -1,0 +1,54 @@
+"""AdamW on pytrees (supports None leaves -- lora-only trees)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: None if p is None else jnp.zeros_like(p, jnp.float32),
+            params, is_leaf=lambda x: x is None)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros, zeros)
+
+    def update(self, grads, state: AdamWState, params, lr) -> tuple:
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v, p):
+            if g is None:
+                return None, None, None
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / (1 - b1 ** step)
+            vhat = v / (1 - b2 ** step)
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m, v
+
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, params,
+                            is_leaf=lambda x: x is None)
+        is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=is3)
+        mu = jax.tree.map(lambda t: t[1], flat, is_leaf=is3)
+        nu = jax.tree.map(lambda t: t[2], flat, is_leaf=is3)
+        return new_params, AdamWState(step, mu, nu)

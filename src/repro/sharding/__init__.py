@@ -1,0 +1,5 @@
+from repro.sharding.specs import (batch_axes, batch_specs, cache_specs,
+                                  param_specs, residual_spec)
+
+__all__ = ["batch_axes", "batch_specs", "cache_specs", "param_specs",
+           "residual_spec"]

@@ -1,0 +1,263 @@
+"""Sharding rules: param/batch/cache PartitionSpec trees per architecture.
+
+Layout (DESIGN.md §5), axes (pod, data, model) -- pod only in multi-pod:
+
+  batch                over ("pod","data")  ["data" single-pod]
+  weights (in, out)    in -> "data" (FSDP), out -> "model" (TP); transposed
+                       for output projections so TP contractions psum once
+  embedding (V, D)     vocab -> "model"
+  MoE experts (E,...)  expert axis -> "model" (expert parallel)
+  LoRA factors         big dim -> "model", rank dim replicated (r <= 256)
+  KV caches            head_dim (or MLA latent) -> "model", batch sharded
+  SSD state            heads -> "model"
+
+All functions return PartitionSpec trees aligned with the corresponding
+pytrees; launch/dryrun.py turns them into NamedShardings.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer import Model
+
+DATA = "data"
+MODEL = "model"
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return ("pod", DATA) if "pod" in mesh.axis_names else (DATA,)
+
+
+def sanitize_spec(spec: P, shape, mesh, rescue: bool = True) -> P:
+    """Drop mesh axes whose size does not evenly divide the array dim
+    (NamedSharding requires even tiling; e.g. vocab 50280 over 16)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        factor = 1
+        for a in axes:
+            factor *= mesh.shape[a]
+        if i < len(shape) and shape[i] % factor == 0 and shape[i] > 0:
+            out.append(entry)
+        else:
+            # try a prefix of the axes tuple that still divides
+            kept = []
+            f = 1
+            for a in axes:
+                if i < len(shape) and shape[i] % (f * mesh.shape[a]) == 0:
+                    kept.append(a)
+                    f *= mesh.shape[a]
+            out.append(tuple(kept) if len(kept) > 1
+                       else (kept[0] if kept else None))
+    # rescue memory-critical 2D weights: if an axis was dropped entirely,
+    # move it to another (currently unsharded, divisible) dim
+    if not rescue:
+        return P(*out)
+    dropped = []
+    for i, entry in enumerate(spec):
+        if entry is not None and out[i] is None and not isinstance(entry, tuple):
+            dropped.append(entry)
+    for ax in dropped:
+        for i in range(len(out)):
+            if out[i] is None and i < len(shape) and shape[i] > 0 \
+                    and shape[i] % mesh.shape[ax] == 0 and shape[i] >= 1024:
+                out[i] = ax
+                break
+    return P(*out)
+
+
+def _spec_for_param(path_keys, shape) -> P:
+    """Assign a PartitionSpec from the parameter's path and rank."""
+    name = path_keys[-1]
+    parent = path_keys[-2] if len(path_keys) >= 2 else ""
+    joined = "/".join(path_keys)
+    stacked = "layers" in path_keys          # leading layer-stack axis
+    lead = (None,) if stacked else ()
+
+    def mk(*axes):
+        spec = lead + tuple(axes)
+        # trim/pad to the actual rank
+        spec = spec[:len(shape)]
+        spec = spec + (None,) * (len(shape) - len(spec))
+        return P(*spec)
+
+    # --- top level ---
+    if name == "embed":
+        return P(MODEL, None)
+    if "lm_head" in path_keys and name == "w":
+        return P(None, MODEL)
+    if "frontend_proj" in path_keys:
+        return P(None, None) if name == "w" else P(None)
+    if name in ("scale", "bias") and "norm" in parent:
+        return mk(None)
+    # --- lora adapters (any depth) ---
+    if name == "lora_a":                      # (r, in)
+        return mk(None, MODEL)
+    if name == "lora_b":                      # (out, r)
+        return mk(MODEL, None)
+    # --- moe ---
+    if "moe" in path_keys:
+        if "router" in path_keys:
+            return mk(None, None)
+        if name in ("w_up", "w_gate", "w_down"):   # (E, d, f)
+            return mk(MODEL, None, None)
+        # shared expert mlp falls through to generic dense rules below
+    # --- ssm ---
+    if name == "conv_w":                      # (K, C)
+        return mk(None, MODEL)
+    if name == "conv_b":
+        return mk(MODEL)
+    if name in ("A_log", "D", "dt_bias"):
+        return mk(None)
+    if "ssm" in path_keys and "norm" in path_keys:
+        return mk(MODEL)                      # d_inner-sized scale
+    if "in_proj" in path_keys:                # (d, proj_out)
+        return mk(DATA, MODEL) if name == "w" else mk(MODEL)
+    if "out_proj" in path_keys:               # (d_inner, d)
+        return mk(MODEL, DATA) if name == "w" else mk(None)
+    # --- attention / mlp dense weights ---
+    out_projs = ("o", "down")                 # contract model-sharded dim
+    if name == "w":
+        if parent in out_projs:
+            return mk(MODEL, DATA)
+        return mk(DATA, MODEL)                # q,k,v,up,gate,mla projections
+    if name == "b":
+        return mk(None) if parent in out_projs else mk(MODEL)
+    if name in ("scale",):                    # norms anywhere
+        return mk(None)
+    return mk(*([None] * len(shape)))
+
+
+def param_specs(model: Model, mesh=None):
+    """PartitionSpec tree matching model.param_shapes()."""
+    shapes = model.param_shapes()
+
+    def assign(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        spec = _spec_for_param(keys, leaf.shape)
+        if mesh is not None:
+            # gather tables must not be rescue-sharded on the feature dim:
+            # XLA SPMD mis-partitions jvp-of-gather on feature-sharded
+            # tables (dynamic-slice verifier failure) -> replicate instead
+            rescue = keys[-1] != "embed"
+            spec = sanitize_spec(spec, leaf.shape, mesh, rescue=rescue)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+def batch_specs(model: Model, batch_shapes: dict, mesh):
+    """Batch inputs: leading (batch) dim over the model's batch axes; rest
+    replicated. M-RoPE positions (3, B, L) shard dim 1."""
+    baxes = tuple(model.batch_axes)
+
+    def assign(key, leaf):
+        if key == "positions" and len(leaf.shape) == 3 and leaf.shape[0] == 3:
+            spec = P(None, baxes, None)
+        elif len(leaf.shape) == 0:
+            return P()
+        else:
+            spec = P(baxes, *([None] * (len(leaf.shape) - 1)))
+        return sanitize_spec(spec, leaf.shape, mesh)
+
+    return {k: assign(k, v) for k, v in batch_shapes.items()}
+
+
+def cache_specs(model: Model, cache_shapes: dict, mesh):
+    """KV caches: batch over (pod,)data; head_dim / MLA latent / SSD heads
+    over model. Layer-stack leading axis replicated."""
+    baxes = tuple(model.batch_axes)
+    if "model" in baxes:   # dp strategy: no model axis left for seq/heads
+        def assign_dp(path, leaf):
+            nd = len(leaf.shape)
+            name = str(getattr(path[-1], "key", ""))
+            if name == "len":
+                return P()
+            spec = [None] * nd
+            if nd >= 2:
+                spec[1] = baxes   # (L, B, ...) batch dim
+            return sanitize_spec(P(*spec), leaf.shape, mesh)
+        return jax.tree_util.tree_map_with_path(assign_dp, cache_shapes)
+
+    def assign(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        if name == "len":
+            return P()
+        # flash-decode-style: shard the cache SEQUENCE dim over "model" --
+        # per-shard partial softmax stats psum tiny (B, H) tensors instead
+        # of hd-contraction psums of full score blocks
+        if name in ("k", "v"):          # (L, B, S, KVH, hd)
+            return P(None, baxes, MODEL, None, None)
+        if name == "ckv":               # (L, B, S, R)
+            return P(None, baxes, MODEL, None)
+        if name == "krope":             # (L, B, S, rd)
+            return P(None, baxes, MODEL, None)
+        if name == "ssm":               # (L, B, H, P, N)
+            return P(None, baxes, MODEL, None, None)
+        if name == "conv":              # (L, B, K-1, C)
+            return P(None, baxes, None, MODEL)
+        return P(*([None] * nd))
+
+    def assign_s(path, leaf):
+        return sanitize_spec(assign(path, leaf), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign_s, cache_shapes)
+
+
+def residual_spec(mesh, mode: str = "feature") -> P:
+    """Activation/residual sharding: batch over (pod,)data plus
+
+      "feature"  -- d_model over "model": every layer all-gathers features
+                    for BOTH attention and MLP (baseline)
+      "sequence" -- seq over "model" (sequence parallelism): norms and MLP
+                    are token-local; only attention gathers the sequence
+                    (§Perf iteration B -- roughly halves per-layer gathers)
+
+    Both keep the scan carry (the remat residual) 1/16 per device.
+    """
+    if mode == "sequence":
+        return P(batch_axes(mesh), MODEL, None)
+    return P(batch_axes(mesh), None, MODEL)
+
+
+def dp_param_specs(model: Model, mesh):
+    """§Perf iteration C: DP-dominant layout for small models.
+
+    On a fixed 256-chip mesh, 16-way tensor parallelism of a 2-8B model
+    trades tiny per-op matmuls for per-layer activation collectives. This
+    layout uses BOTH axes as data parallelism: weights are FSDP-sharded on
+    their largest divisible dim over ("data","model") combined, batch over
+    ("data","model"), activations replicated per device (1 sequence each).
+    Collectives = per-layer weight all-gathers + one LoRA-grad reduction.
+    """
+    shapes = model.param_shapes()
+    both = ("data", "model")
+    factor = mesh.shape["data"] * mesh.shape["model"]
+
+    def assign(path, leaf):
+        dims = list(leaf.shape)
+        # shard the largest dim divisible by the combined factor
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        for i in order:
+            if dims[i] >= 1024 and dims[i] % factor == 0:
+                spec = [None] * len(dims)
+                spec[i] = both
+                return P(*spec)
+        # fall back to a single-axis shard
+        for ax in ("data", "model"):
+            for i in order:
+                if dims[i] % mesh.shape[ax] == 0 and dims[i] >= 256:
+                    spec = [None] * len(dims)
+                    spec[i] = ax
+                    return P(*spec)
+        return P(*([None] * len(dims)))
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)

@@ -1,0 +1,31 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here -- smoke tests and benches see
+the single real CPU device; only launch/dryrun.py forces 512 devices."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def small_batch(cfg, key, batch=2, seq=32):
+    """A valid training batch for any architecture config."""
+    import jax.numpy as jnp
+    if cfg.frontend.kind == "audio":
+        return {"embeds": jax.random.normal(key, (batch, seq,
+                                                  cfg.frontend.embed_dim)),
+                "targets": jnp.zeros((batch, seq), jnp.int32)}
+    if cfg.frontend.kind == "vision":
+        p = cfg.frontend.tokens_per_item
+        b = {"embeds": jax.random.normal(key, (batch, p,
+                                               cfg.frontend.embed_dim)),
+             "tokens": jax.random.randint(key, (batch, seq - p), 0,
+                                          cfg.vocab_size),
+             "targets": jnp.zeros((batch, seq), jnp.int32)}
+        return b
+    return {"tokens": jax.random.randint(key, (batch, seq), 0,
+                                         cfg.vocab_size),
+            "targets": jax.random.randint(jax.random.fold_in(key, 1),
+                                          (batch, seq), 0, cfg.vocab_size)}

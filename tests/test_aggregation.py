@@ -1,0 +1,191 @@
+"""Aggregation rules: semantics, backend equivalence, collapse behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Aggregator, aggregate_flexlora, aggregate_flora,
+                        aggregate_hetlora, aggregate_raflora, pad_stack)
+from repro.core.svd import (dense_from_weighted, factored_from_weighted,
+                            svd_realloc_dense, svd_realloc_factored)
+
+LEVELS = [4, 8, 16]
+R_MAX = 16
+D, N = 24, 40
+
+
+def make_factors(key, ranks):
+    out = []
+    for i, r in enumerate(ranks):
+        kb, ka = jax.random.split(jax.random.fold_in(key, i))
+        out.append((jax.random.normal(kb, (D, r)),
+                    jax.random.normal(ka, (r, N))))
+    return out
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(42)
+    ranks = [4, 8, 8, 16, 16]
+    n_k = [10.0, 20.0, 15.0, 25.0, 30.0]
+    return key, ranks, n_k, make_factors(key, ranks)
+
+
+class TestPadStack:
+    def test_shapes_and_zero_padding(self, setup):
+        _, ranks, _, factors = setup
+        bs, as_ = pad_stack(factors, R_MAX)
+        assert bs.shape == (5, D, R_MAX) and as_.shape == (5, R_MAX, N)
+        for k, r in enumerate(ranks):
+            assert not np.any(np.asarray(bs[k, :, r:]))
+            assert not np.any(np.asarray(as_[k, r:, :]))
+            # BA product preserved
+            ref = factors[k][0] @ factors[k][1]
+            assert np.allclose(bs[k] @ as_[k], ref, atol=1e-5)
+
+
+def svd_truncate(dw, r):
+    u, s, vt = np.linalg.svd(np.asarray(dw, dtype=np.float64),
+                             full_matrices=False)
+    return (u[:, :r] * s[:r]) @ vt[:r]
+
+
+class TestFlexLoRA:
+    def test_matches_explicit_weighted_sum(self, setup):
+        """b_g a_g must equal the BEST rank-r_max approximation (Eq. 3-4) of
+        the weighted client sum (Eq. 2)."""
+        _, ranks, n_k, factors = setup
+        bs, as_ = pad_stack(factors, R_MAX)
+        res = aggregate_flexlora(bs, as_, ranks, n_k, backend="dense")
+        w = np.asarray(n_k) / np.sum(n_k)
+        expected = sum(wk * np.asarray(b @ a) for wk, (b, a) in zip(w, factors))
+        assert np.allclose(res.b_g @ res.a_g, svd_truncate(expected, R_MAX),
+                           atol=1e-3)
+
+    def test_sigma_descending(self, setup):
+        _, ranks, n_k, factors = setup
+        bs, as_ = pad_stack(factors, R_MAX)
+        res = aggregate_flexlora(bs, as_, ranks, n_k)
+        s = np.asarray(res.sigma)
+        assert np.all(np.diff(s) <= 1e-6)
+
+
+class TestRaFLoRA:
+    def test_matches_eq8_reference(self, setup):
+        """Direct per-partition Eq. 8 implementation as oracle."""
+        _, ranks, n_k, factors = setup
+        bs, as_ = pad_stack(factors, R_MAX)
+        g_b = jnp.zeros((D, R_MAX))
+        g_a = jnp.zeros((R_MAX, N))
+        res = aggregate_raflora(bs, as_, ranks, n_k, rank_levels=LEVELS,
+                                global_b=g_b, global_a=g_a, backend="dense")
+        # oracle: loop over partitions
+        expected = np.zeros((D, N))
+        prev = 0
+        for h in LEVELS:
+            l = prev
+            members = [k for k, r in enumerate(ranks) if r >= h]
+            n_h = sum(n_k[k] for k in members)
+            for k in members:
+                b, a = factors[k]
+                expected += (n_k[k] / n_h) * (np.asarray(b)[:, l:h]
+                                              @ np.asarray(a)[l:h, :])
+            prev = h
+        assert np.allclose(res.b_g @ res.a_g, svd_truncate(expected, R_MAX),
+                           atol=1e-3)
+
+    def test_empty_partition_fallback(self):
+        """When no sampled client covers a partition, the global slice is
+        kept (Eq. 8 case 2) -- higher-rank info never discarded."""
+        key = jax.random.PRNGKey(7)
+        ranks = [4, 4]                         # nobody covers (5..16)
+        factors = make_factors(key, ranks)
+        bs, as_ = pad_stack(factors, R_MAX)
+        g_b = jax.random.normal(jax.random.fold_in(key, 100), (D, R_MAX))
+        g_a = jax.random.normal(jax.random.fold_in(key, 101), (R_MAX, N))
+        res = aggregate_raflora(bs, as_, ranks, [1.0, 1.0],
+                                rank_levels=LEVELS, global_b=g_b,
+                                global_a=g_a, backend="dense")
+        expected = (np.asarray(factors[0][0]) @ np.asarray(factors[0][1])
+                    + np.asarray(factors[1][0]) @ np.asarray(factors[1][1])) / 2
+        expected = expected + np.asarray(g_b[:, 4:]) @ np.asarray(g_a[4:, :])
+        assert np.allclose(res.b_g @ res.a_g, svd_truncate(expected, R_MAX),
+                           atol=1e-3)
+
+
+class TestBackendEquivalence:
+    @pytest.mark.parametrize("method", ["flexlora", "raflora"])
+    def test_dense_vs_factored_vs_kernel(self, setup, method):
+        _, ranks, n_k, factors = setup
+        g_b = jnp.zeros((D, R_MAX))
+        g_a = jnp.zeros((R_MAX, N))
+        results = {}
+        for backend in ("dense", "factored", "kernel"):
+            agg = Aggregator(method, LEVELS, backend=backend)
+            res = agg.aggregate_layer(factors, ranks, n_k, g_b, g_a)
+            results[backend] = np.asarray(res.b_g @ res.a_g)
+        assert np.allclose(results["dense"], results["factored"], atol=1e-4)
+        assert np.allclose(results["dense"], results["kernel"], atol=1e-4)
+
+    def test_factored_svd_identical_spectrum(self):
+        key = jax.random.PRNGKey(3)
+        u_c = jax.random.normal(key, (D, 12))
+        v_c = jax.random.normal(jax.random.fold_in(key, 1), (12, N))
+        b_d, a_d, s_d = svd_realloc_dense(u_c @ v_c, R_MAX)
+        b_f, a_f, s_f = svd_realloc_factored(u_c, v_c, R_MAX)
+        assert np.allclose(s_d, s_f, atol=1e-4)
+        assert np.allclose(b_d @ a_d, b_f @ a_f, atol=1e-4)
+
+
+class TestBaselines:
+    def test_hetlora_is_biased(self, setup):
+        """Separate averaging of B and A != averaging of BA (the bias the
+        paper's Table 1 attributes to HetLoRA)."""
+        _, ranks, n_k, factors = setup
+        bs, as_ = pad_stack(factors, R_MAX)
+        res = aggregate_hetlora(bs, as_, ranks, n_k)
+        w = np.asarray(n_k) / np.sum(n_k)
+        unbiased = sum(wk * (b @ a) for wk, (b, a) in zip(w, factors))
+        assert not np.allclose(res.b_g @ res.a_g, unbiased, atol=1e-3)
+
+    def test_flora_merge_delta_unbiased(self, setup):
+        _, ranks, n_k, factors = setup
+        bs, as_ = pad_stack(factors, R_MAX)
+        res = aggregate_flora(bs, as_, ranks, n_k)
+        w = np.asarray(n_k) / np.sum(n_k)
+        expected = sum(wk * (b @ a) for wk, (b, a) in zip(w, factors))
+        assert np.allclose(res.merge_delta, expected, atol=1e-4)
+        # cold start: fresh adapters are zero
+        assert not np.any(np.asarray(res.b_g))
+
+    def test_fedavg_requires_homogeneous(self, setup):
+        _, ranks, n_k, factors = setup
+        bs, as_ = pad_stack(factors, R_MAX)
+        from repro.core.aggregation import aggregate_fedavg
+        with pytest.raises(AssertionError):
+            aggregate_fedavg(bs, as_, ranks, n_k)
+
+
+class TestStackedLayers:
+    def test_layerwise_vmap_matches_loop(self, setup):
+        """(M, L, d, r) stacked aggregation == per-layer loop."""
+        key, ranks, n_k, _ = setup
+        L = 3
+        stacked = []
+        per_layer = [[] for _ in range(L)]
+        for i, r in enumerate(ranks):
+            kb, ka = jax.random.split(jax.random.fold_in(key, 50 + i))
+            b = jax.random.normal(kb, (L, D, r))
+            a = jax.random.normal(ka, (L, r, N))
+            stacked.append((b, a))
+            for l in range(L):
+                per_layer[l].append((b[l], a[l]))
+        agg = Aggregator("raflora", LEVELS, backend="factored")
+        g_b = jnp.zeros((L, D, R_MAX))
+        g_a = jnp.zeros((L, R_MAX, N))
+        res = agg.aggregate_layer(stacked, ranks, n_k, g_b, g_a)
+        for l in range(L):
+            res_l = agg.aggregate_layer(per_layer[l], ranks, n_k,
+                                        g_b[l], g_a[l])
+            assert np.allclose(res.b_g[l] @ res.a_g[l],
+                               res_l.b_g @ res_l.a_g, atol=1e-4)

@@ -1,0 +1,122 @@
+"""Blockwise attention: equivalence with naive softmax attention across
+masking modes, plus decode-path invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers.attention import (blockwise_attention,
+                                           decode_attention)
+
+
+def naive_attention(q, k, v, causal, window=0):
+    b, lq, h, d = q.shape
+    _, lkv, kvh, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(b, lq, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    qpos = jnp.arange(lq)
+    kpos = jnp.arange(lkv)
+    mask = jnp.ones((lq, lkv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, lq, h, d).astype(q.dtype)
+
+
+def make_qkv(key, b=2, l=48, h=4, kvh=2, d=16):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, l, h, d))
+    k = jax.random.normal(ks[1], (b, l, kvh, d))
+    v = jax.random.normal(ks[2], (b, l, kvh, d))
+    return q, k, v
+
+
+class TestBlockwise:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("bq,bkv", [(16, 16), (48, 48), (8, 24)])
+    def test_matches_naive(self, causal, bq, bkv):
+        q, k, v = make_qkv(jax.random.PRNGKey(0))
+        got = blockwise_attention(q, k, v, causal=causal, block_q=bq,
+                                  block_kv=bkv)
+        want = naive_attention(q, k, v, causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+    @pytest.mark.parametrize("window", [1, 8, 17, 48])
+    def test_sliding_window(self, window):
+        q, k, v = make_qkv(jax.random.PRNGKey(1))
+        got = blockwise_attention(q, k, v, causal=True,
+                                  sliding_window=window, block_q=16,
+                                  block_kv=16)
+        want = naive_attention(q, k, v, True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+    def test_traced_window(self):
+        """Window as a traced scalar (hymba per-layer global selection)."""
+        q, k, v = make_qkv(jax.random.PRNGKey(2))
+
+        @jax.jit
+        def f(q, k, v, w):
+            return blockwise_attention(q, k, v, causal=True,
+                                       sliding_window=w, block_q=16,
+                                       block_kv=16)
+
+        got = f(q, k, v, jnp.int32(8))
+        want = naive_attention(q, k, v, True, window=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+    @given(l=st.integers(3, 50), seed=st.integers(0, 100))
+    @settings(max_examples=25, deadline=None)
+    def test_ragged_lengths(self, l, seed):
+        """Non-block-multiple sequence lengths pad correctly."""
+        key = jax.random.PRNGKey(seed)
+        q, k, v = make_qkv(key, l=l)
+        got = blockwise_attention(q, k, v, causal=True, block_q=16,
+                                  block_kv=16)
+        want = naive_attention(q, k, v, True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+
+    def test_mqa_grouping(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(3), h=8, kvh=1)
+        got = blockwise_attention(q, k, v, causal=True, block_q=16,
+                                  block_kv=16)
+        want = naive_attention(q, k, v, True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+    def test_softcap(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(4))
+        got = blockwise_attention(q, k, v, causal=True, softcap=5.0,
+                                  block_q=16, block_kv=16)
+        assert bool(jnp.isfinite(got).all())
+
+
+class TestDecode:
+    def test_matches_last_row_of_full(self):
+        key = jax.random.PRNGKey(5)
+        q, k, v = make_qkv(key, l=20)
+        full = naive_attention(q, k, v, True)
+        got = decode_attention(q[:, -1:], k, v, cache_len=20)
+        np.testing.assert_allclose(np.asarray(got[:, 0]),
+                                   np.asarray(full[:, -1]), atol=1e-5)
+
+    def test_cache_len_masks_tail(self):
+        """Entries beyond cache_len must not influence the output."""
+        key = jax.random.PRNGKey(6)
+        q, k, v = make_qkv(key, l=32)
+        out1 = decode_attention(q[:, -1:], k, v, cache_len=16)
+        k_garbage = k.at[:, 16:].set(99.0)
+        v_garbage = v.at[:, 16:].set(-99.0)
+        out2 = decode_attention(q[:, -1:], k_garbage, v_garbage, cache_len=16)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   atol=1e-6)

@@ -1,0 +1,115 @@
+"""Dry-run machinery tests that do NOT need 512 devices: input specs,
+plan/skip logic, roofline math, and the fl-aggregation lowering on the
+host mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.hlo_analysis import (ICI_BW, PEAK_FLOPS, RooflineReport,
+                                       active_params, model_flops_estimate)
+from repro.launch.inputs import input_specs
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+    @pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+    def test_specs_exist_and_shapes_match(self, arch, shape_name):
+        cfg = get_config(arch)
+        shape = INPUT_SHAPES[shape_name]
+        if shape.mode == "decode" and not cfg.supports_decode:
+            pytest.skip("encoder-only")
+        specs = input_specs(cfg, shape)
+        assert specs, "no inputs produced"
+        if shape.mode == "decode":
+            assert specs["token"].shape == (shape.global_batch, 1)
+        else:
+            total = 0
+            if "tokens" in specs:
+                total += specs["tokens"].shape[1]
+            if "embeds" in specs and cfg.frontend.kind == "vision":
+                total += specs["embeds"].shape[1]
+            if "embeds" in specs and cfg.frontend.kind == "audio":
+                total = specs["embeds"].shape[1]
+            assert total == shape.seq_len
+        # pure stand-ins: ShapeDtypeStructs only, nothing allocated
+        for v in specs.values():
+            assert isinstance(v, jax.ShapeDtypeStruct)
+
+    def test_frontend_stub_embeddings(self):
+        """Audio/VLM shapes deliver precomputed embeddings (the one
+        allowed stub)."""
+        cfg = get_config("hubert-xlarge")
+        specs = input_specs(cfg, INPUT_SHAPES["train_4k"])
+        assert specs["embeds"].shape == (256, 4096, 1280)
+        cfg = get_config("qwen2-vl-7b")
+        specs = input_specs(cfg, INPUT_SHAPES["train_4k"])
+        assert specs["embeds"].shape[1] == cfg.frontend.tokens_per_item
+        assert "positions" in specs    # M-RoPE 3-stream ids
+
+
+class TestRooflineMath:
+    def test_terms_and_bottleneck(self):
+        rep = RooflineReport(arch="x", shape="y", mesh="16x16", chips=256,
+                             hlo_flops=256 * PEAK_FLOPS,  # 1 second compute
+                             hlo_bytes=0.0, coll_bytes=256 * ICI_BW * 2.0,
+                             coll_breakdown={})
+        assert np.isclose(rep.t_compute, 1.0)
+        assert np.isclose(rep.t_collective, 2.0)
+        assert rep.bottleneck == "collective"
+
+    def test_active_params_moe(self):
+        cfg = get_config("deepseek-v2-236b")
+        total = cfg.num_params()
+        active = active_params(cfg)
+        assert active < 0.15 * total       # ~21B of 236B
+        dense = get_config("qwen2-7b")
+        assert active_params(dense) == dense.num_params()
+
+    def test_model_flops_modes(self):
+        cfg = get_config("gemma-2b")
+        tr = model_flops_estimate(cfg, INPUT_SHAPES["train_4k"])
+        pf = model_flops_estimate(cfg, INPUT_SHAPES["prefill_32k"])
+        dc = model_flops_estimate(cfg, INPUT_SHAPES["decode_32k"])
+        assert tr == 6.0 * cfg.num_params() * 256 * 4096
+        assert pf == 2.0 * cfg.num_params() * 32 * 32768
+        assert dc == 2.0 * cfg.num_params() * 128
+
+
+class TestPlanLogic:
+    def test_long_500k_uses_swa_for_attention_archs(self):
+        # plan() lives in dryrun which sets XLA flags; re-implement check
+        # at the config level instead
+        for name in ("qwen2-7b", "gemma-2b", "nemotron-4-340b"):
+            cfg = get_config(name)
+            assert not cfg.supports_long_context()
+            swa = cfg.with_sliding_window(8192, global_every=0)
+            assert swa.supports_long_context()
+        for name in ("mamba2-1.3b", "hymba-1.5b"):
+            assert get_config(name).supports_long_context()
+
+
+class TestFLAggregationLowering:
+    def test_lowers_on_host_mesh(self):
+        """The paper's aggregation as a jit-compiled distributed program
+        (full 512-device version exercised by launch/fl_dryrun.py)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.svd import (factored_from_weighted,
+                                    svd_realloc_factored)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+
+        def agg(bs, as_, omega):
+            u, v = factored_from_weighted(bs, as_, omega)
+            return svd_realloc_factored(u, v, 16)
+
+        sh = lambda spec: NamedSharding(mesh, spec)
+        bs = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32,
+                                  sharding=sh(P("data", None, None)))
+        as_ = jax.ShapeDtypeStruct((4, 16, 64), jnp.float32,
+                                   sharding=sh(P("data", None, None)))
+        om = jax.ShapeDtypeStruct((4, 16), jnp.float32,
+                                  sharding=sh(P("data", None)))
+        compiled = jax.jit(agg).lower(bs, as_, om).compile()
+        assert compiled.cost_analysis() is not None

@@ -1,0 +1,155 @@
+"""System-level property tests (hypothesis) on the paper's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (aggregate_flexlora, aggregate_raflora, coverage,
+                        energies, omega_flexlora, omega_raflora, pad_stack,
+                        partition_bounds, rho)
+
+LEVELS = [4, 8, 16]
+R_MAX = 16
+D, N = 24, 32
+
+
+def rand_factors(seed, ranks):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, r in enumerate(ranks):
+        kb, ka = jax.random.split(jax.random.fold_in(key, i))
+        out.append((jax.random.normal(kb, (D, r)),
+                    jax.random.normal(ka, (r, N))))
+    return out
+
+
+class TestDiagonalFormulationEquivalence:
+    """Our unified systems formulation: Eq. 8's partition loop == a single
+    weighted-diagonal contraction sum_k B_k diag(omega_k) A_k. This is the
+    identity that lets ONE Pallas kernel serve FlexLoRA and raFLoRA."""
+
+    @given(ranks=st.lists(st.sampled_from(LEVELS), min_size=1, max_size=8),
+           seed=st.integers(0, 50))
+    @settings(max_examples=30, deadline=None)
+    def test_raflora_diag_equals_partition_loop(self, ranks, seed):
+        rng = np.random.default_rng(seed)
+        n_k = rng.integers(1, 50, size=len(ranks)).astype(float)
+        factors = rand_factors(seed, ranks)
+        bs, as_ = pad_stack(factors, R_MAX)
+        omega, fallback = omega_raflora(ranks, n_k, LEVELS)
+        diag = np.einsum("mdr,mr,mrn->dn", np.asarray(bs), omega,
+                         np.asarray(as_))
+        # explicit Eq. 8 partition loop
+        loop = np.zeros((D, N))
+        prev = 0
+        for h in LEVELS:
+            members = [k for k, r in enumerate(ranks) if r >= h]
+            n_h = sum(n_k[k] for k in members)
+            if members:
+                for k in members:
+                    b, a = factors[k]
+                    loop += (n_k[k] / n_h) * (
+                        np.asarray(b)[:, prev:h] @ np.asarray(a)[prev:h, :])
+            prev = h
+        np.testing.assert_allclose(diag, loop, atol=1e-4)
+
+
+class TestEnergyPreservation:
+    """NOTE: "raFLoRA tail >= FlexLoRA tail" is NOT a per-step inequality
+    for arbitrary factors (SVD mixes directions); the paper's claim is about
+    the expected dynamics under Assumptions 1-2. The orthogonal
+    direction-preserving cases below verify the mechanism exactly."""
+
+    @given(seed=st.integers(0, 200))
+    @settings(max_examples=20, deadline=None)
+    def test_raflora_tail_energy_geq_flexlora_orthogonal(self, seed):
+        """Direction-preserving updates: raFLoRA retains at least FlexLoRA's
+        higher-rank energy (per-step form of Theorem 1's comparison)."""
+        rng = np.random.default_rng(seed)
+        ranks = list(rng.choice(LEVELS, size=6))
+        if max(ranks) < R_MAX:
+            return
+        n_k = [1.0] * 6
+        q, _ = np.linalg.qr(rng.normal(size=(D, R_MAX)))
+        qn, _ = np.linalg.qr(rng.normal(size=(N, R_MAX)))
+        sigma = np.sort(rng.uniform(0.5, 4.0, size=R_MAX))[::-1]
+        factors = [(jnp.asarray(q[:, :r] * sigma[:r]),
+                    jnp.asarray(qn[:, :r].T)) for r in ranks]
+        bs, as_ = pad_stack(factors, R_MAX)
+        res_fl = aggregate_flexlora(bs, as_, ranks, n_k, backend="dense")
+        res_ra = aggregate_raflora(
+            bs, as_, ranks, n_k, rank_levels=LEVELS,
+            global_b=jnp.zeros((D, R_MAX)), global_a=jnp.zeros((R_MAX, N)),
+            backend="dense")
+        r1 = min(LEVELS)
+        tail_fl = 1.0 - float(rho(res_fl.sigma, r1))
+        tail_ra = 1.0 - float(rho(res_ra.sigma, r1))
+        assert tail_ra >= tail_fl - 1e-6
+
+    def test_orthogonal_directions_exact_contraction(self):
+        """With orthogonal direction-preserving updates (Assumption 1-2),
+        one FlexLoRA step scales sigma_i by exactly the sample coverage of
+        direction i -- Eq. 7 verbatim."""
+        m = 4
+        ranks = [4, 8, 16, 16]
+        n_k = [1.0] * m
+        q, _ = np.linalg.qr(np.random.default_rng(0).normal(size=(D, R_MAX)))
+        qn, _ = np.linalg.qr(np.random.default_rng(1).normal(size=(N, R_MAX)))
+        sigma = np.linspace(4.0, 1.0, R_MAX)
+        factors = []
+        for r in ranks:
+            b = q[:, :r] * sigma[:r]
+            a = qn[:, :r].T
+            factors.append((jnp.asarray(b), jnp.asarray(a)))
+        bs, as_ = pad_stack(factors, R_MAX)
+        res = aggregate_flexlora(bs, as_, ranks, n_k, backend="dense")
+        got = np.sort(np.asarray(res.sigma))[::-1]
+        cover = np.array([(np.asarray(ranks) >= i + 1).mean()
+                          for i in range(R_MAX)])
+        want = np.sort(sigma * cover)[::-1]
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    def test_raflora_orthogonal_no_dilution(self):
+        """Same setup: raFLoRA restores sigma exactly (no p_i factor)."""
+        ranks = [4, 8, 16, 16]
+        n_k = [1.0] * 4
+        q, _ = np.linalg.qr(np.random.default_rng(0).normal(size=(D, R_MAX)))
+        qn, _ = np.linalg.qr(np.random.default_rng(1).normal(size=(N, R_MAX)))
+        sigma = np.linspace(4.0, 1.0, R_MAX)
+        factors = []
+        for r in ranks:
+            factors.append((jnp.asarray(q[:, :r] * sigma[:r]),
+                            jnp.asarray(qn[:, :r].T)))
+        bs, as_ = pad_stack(factors, R_MAX)
+        res = aggregate_raflora(
+            bs, as_, ranks, n_k, rank_levels=[4, 8, 16],
+            global_b=jnp.zeros((D, R_MAX)), global_a=jnp.zeros((R_MAX, N)),
+            backend="dense")
+        got = np.sort(np.asarray(res.sigma))[::-1]
+        np.testing.assert_allclose(got, np.sort(sigma)[::-1], atol=1e-4)
+
+
+class TestServingInvariants:
+    def test_multi_step_decode_matches_forward(self, rng_key):
+        """Greedy decode token-by-token == teacher-forced forward argmax at
+        every position (dense arch, 12 steps)."""
+        from repro.configs import LoRAConfig, get_config
+        from repro.models import build_model
+        cfg = get_config("granite-3-8b").reduced()
+        model = build_model(cfg, LoRAConfig(), dtype=jnp.float32,
+                            remat=False, block_q=8, block_kv=8)
+        params = model.init(rng_key)
+        B, L = 1, 12
+        toks = jax.random.randint(rng_key, (B, L), 0, cfg.vocab_size)
+        full, _, _ = model.forward_seq(params, {"tokens": toks},
+                                       mode="train", lora_rank=8)
+        cache = model.init_cache(B, L)
+        outs = []
+        for t in range(L):
+            logits, cache = model.decode_step(
+                params, {"token": toks[:, t:t + 1]}, cache, lora_rank=8)
+            outs.append(logits[:, 0])
+        dec = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                                   atol=3e-4)

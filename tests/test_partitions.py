@@ -1,0 +1,97 @@
+"""Rank-partition machinery: Eq. 8 invariants as property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (boundaries, boundary_of_index, coverage,
+                        omega_flexlora, omega_raflora, partition_bounds,
+                        prev_boundary)
+
+LEVELS = [8, 16, 32, 48, 64]
+
+ranks_strategy = st.lists(st.sampled_from(LEVELS), min_size=1, max_size=20)
+samples_strategy = st.lists(st.integers(1, 500), min_size=1, max_size=20)
+
+
+class TestPartitionStructure:
+    def test_partition_bounds_cover_exactly(self):
+        bounds = partition_bounds(LEVELS)
+        assert bounds == [(1, 8), (9, 16), (17, 32), (33, 48), (49, 64)]
+        covered = sorted(i for (l, h) in bounds for i in range(l, h + 1))
+        assert covered == list(range(1, 65))     # non-overlapping, complete
+
+    def test_prev_boundary(self):
+        assert prev_boundary(8, LEVELS) == 0     # paper: prev(r_1) = 0
+        assert prev_boundary(16, LEVELS) == 8
+        assert prev_boundary(64, LEVELS) == 48
+
+    def test_boundary_of_index(self):
+        h = boundary_of_index(LEVELS)
+        assert h[0] == 8 and h[7] == 8
+        assert h[8] == 16 and h[31] == 32 and h[63] == 64
+
+    def test_coverage_eq1(self):
+        """p_1 = ... = p_{r1} = 1 > p_{r1+1} >= ... >= p_rmax > 0 (Eq. 1)."""
+        ranks = np.repeat(LEVELS, 20)
+        p = coverage(LEVELS, ranks)
+        assert np.all(p[:8] == 1.0)
+        assert np.all(np.diff(p) <= 0)
+        assert p[-1] > 0
+
+
+class TestOmegaWeights:
+    @given(ranks=ranks_strategy, seed=st.integers(0, 99))
+    @settings(max_examples=60, deadline=None)
+    def test_raflora_weights_partition_normalized(self, ranks, seed):
+        """Within every covered partition the weights over clients sum to 1
+        (effective-contributor normalization, Eq. 8)."""
+        rng = np.random.default_rng(seed)
+        n = rng.integers(1, 100, size=len(ranks)).astype(float)
+        omega, fallback = omega_raflora(ranks, n, LEVELS)
+        col = omega.sum(axis=0)
+        covered = fallback == 0
+        assert np.allclose(col[covered], 1.0)
+        assert np.allclose(col[~covered], 0.0)
+        # fallback indices take exactly the global slice
+        assert np.allclose(fallback[~covered], 1.0)
+
+    @given(ranks=ranks_strategy, seed=st.integers(0, 99))
+    @settings(max_examples=60, deadline=None)
+    def test_flexlora_weights_dilute(self, ranks, seed):
+        """FlexLoRA columns sum to p-hat_i <= 1: the dilution of Theorem 1 --
+        column sums equal the SAMPLE-weighted coverage of index i."""
+        rng = np.random.default_rng(seed)
+        n = rng.integers(1, 100, size=len(ranks)).astype(float)
+        omega = omega_flexlora(ranks, n, max(LEVELS))
+        w = n / n.sum()
+        ranks_arr = np.asarray(ranks)
+        for i in range(max(LEVELS)):
+            expected = w[ranks_arr >= i + 1].sum()
+            assert np.isclose(omega[:, i].sum(), expected)
+
+    @given(ranks=ranks_strategy)
+    @settings(max_examples=40, deadline=None)
+    def test_support_respected(self, ranks):
+        """No client ever receives weight beyond its own rank."""
+        n = np.ones(len(ranks))
+        om_ra, _ = omega_raflora(ranks, n, LEVELS)
+        om_fl = omega_flexlora(ranks, n, max(LEVELS))
+        for k, r in enumerate(ranks):
+            assert np.all(om_ra[k, r:] == 0)
+            assert np.all(om_fl[k, r:] == 0)
+
+    def test_equal_when_all_max_rank(self):
+        """With homogeneous max-rank clients, raFLoRA == FlexLoRA (no
+        mismatch to correct)."""
+        ranks = [64] * 6
+        n = [10.0] * 6
+        om_ra, fb = omega_raflora(ranks, n, LEVELS)
+        om_fl = omega_flexlora(ranks, n, 64)
+        assert np.allclose(om_ra, om_fl)
+        assert not fb.any()
+
+    def test_single_client_reduces_to_flexlora(self):
+        """Paper Sec 6.5: with one participant there is no dilution."""
+        om_ra, _ = omega_raflora([64], [5.0], LEVELS)
+        om_fl = omega_flexlora([64], [5.0], 64)
+        assert np.allclose(om_ra, om_fl)

@@ -1,0 +1,187 @@
+"""Substrate tests: data partitioning, optimizer, schedules, checkpointing,
+energy metrics, sharding specs, HLO walker."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.energy import (effective_rank, energy_breakdown,
+                               higher_rank_energy_ratio, rho)
+from repro.data import (ClusterClassification, SequenceCopy, batches,
+                        make_partition)
+from repro.optim import AdamW, get_schedule
+
+
+class TestPartitioning:
+    @pytest.mark.parametrize("kind", ["iid", "dirichlet", "pathological"])
+    def test_covers_all_indices_without_duplication_iid(self, kind):
+        labels = np.random.default_rng(0).integers(0, 20, size=2000)
+        shards = make_partition(kind, labels, 10, alpha=1.0,
+                                labels_per_client=5, seed=0)
+        assert len(shards) == 10
+        assert all(len(s) > 0 for s in shards)
+        if kind == "iid":
+            allidx = np.concatenate(shards)
+            assert len(np.unique(allidx)) == 2000
+
+    def test_dirichlet_skew_increases_with_small_alpha(self):
+        labels = np.random.default_rng(0).integers(0, 20, size=4000)
+
+        def skew(alpha):
+            shards = make_partition("dirichlet", labels, 10, alpha=alpha,
+                                    seed=1)
+            # mean per-client label entropy (lower = more skewed)
+            ents = []
+            for s in shards:
+                counts = np.bincount(labels[s], minlength=20) + 1e-9
+                p = counts / counts.sum()
+                ents.append(-(p * np.log(p)).sum())
+            return np.mean(ents)
+
+        assert skew(0.05) < skew(100.0)
+
+    def test_pathological_label_limit(self):
+        labels = np.random.default_rng(0).integers(0, 20, size=4000)
+        shards = make_partition("pathological", labels, 10, alpha=1.0,
+                                labels_per_client=3, seed=0)
+        for s in shards:
+            assert len(np.unique(labels[s])) <= 3
+
+    def test_batches_iterator(self):
+        x = np.arange(100).reshape(50, 2).astype(np.float32)
+        y = np.arange(50)
+        rng = np.random.default_rng(0)
+        got = list(batches(x, y, 16, rng))
+        assert len(got) == 3
+        assert all(b[0].shape == (16, 2) for b in got)
+
+
+class TestSyntheticData:
+    def test_cluster_classification_separable(self):
+        data = ClusterClassification(num_classes=5, dim=32, noise=0.1,
+                                     samples_per_class=40)
+        x, y = data.generate()
+        assert x.shape == (200, data.patches, 32)
+        # nearest-class-mean classifier should beat chance comfortably
+        means = np.stack([x[y == c].mean(axis=0).ravel() for c in range(5)])
+        flat = x.reshape(len(y), -1)
+        pred = np.argmin(((flat[:, None] - means[None]) ** 2).sum(-1), axis=1)
+        assert (pred == y).mean() > 0.9
+
+    def test_sequence_copy_targets_shifted(self):
+        d = SequenceCopy(vocab_size=64, seq_len=16, num_families=4,
+                         samples_per_family=10)
+        toks, targets, fam = d.generate()
+        assert np.array_equal(targets[:, :-1], toks[:, 1:])
+
+
+class TestOptim:
+    def test_adamw_descends_quadratic(self):
+        opt = AdamW()
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}
+            params, state = opt.update(grads, state, params, 0.05)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+    def test_none_leaves_passthrough(self):
+        opt = AdamW()
+        params = {"w": jnp.ones(3), "frozen": None}
+        state = opt.init(params)
+        grads = {"w": jnp.ones(3), "frozen": None}
+        new, _ = opt.update(grads, state, params, 0.1)
+        assert new["frozen"] is None
+        assert not np.allclose(np.asarray(new["w"]), 1.0)
+
+    def test_linear_decay_schedule(self):
+        s = get_schedule("linear", 1.0, 10)
+        assert s(0) == 1.0
+        assert np.isclose(s(5), 0.5)
+        assert s(10) == 0.0
+
+
+class TestCheckpoint:
+    def test_roundtrip_nested(self, tmp_path):
+        from repro.checkpointing import load_pytree, save_pytree
+        tree = {"a": {"b": jnp.arange(6).reshape(2, 3),
+                      "lora": None},
+                "c": [jnp.ones(4), jnp.zeros((2, 2))]}
+        path = str(tmp_path / "t.npz")
+        save_pytree(path, tree, metadata={"round": 3})
+        got = load_pytree(path, tree)
+        np.testing.assert_array_equal(np.asarray(got["a"]["b"]),
+                                      np.asarray(tree["a"]["b"]))
+        assert got["a"]["lora"] is None
+
+
+class TestEnergyMetrics:
+    @given(st.lists(st.floats(0.01, 100.0), min_size=2, max_size=64))
+    @settings(max_examples=50, deadline=None)
+    def test_rho_monotone_in_r(self, sigmas):
+        s = jnp.asarray(sorted(sigmas, reverse=True))
+        rhos = [float(rho(s, r)) for r in range(1, len(sigmas) + 1)]
+        assert all(b >= a - 1e-6 for a, b in zip(rhos, rhos[1:]))
+        assert np.isclose(rhos[-1], 1.0)
+
+    def test_effective_rank_bounds(self):
+        s = jnp.ones(16)
+        assert np.isclose(float(effective_rank(s)), 16.0, rtol=1e-4)
+        s = jnp.array([1.0] + [0.0] * 15)
+        assert float(effective_rank(s)) < 1.01
+
+    def test_breakdown_sums_to_one(self):
+        s = jnp.linspace(10, 0.1, 64)
+        bd = energy_breakdown(s, [8, 16, 32, 48, 64])
+        assert np.isclose(sum(bd.values()), 1.0)
+
+
+class TestShardingSpecs:
+    def test_sanitize_drops_nondivisible(self):
+        import types
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.specs import sanitize_spec
+        mesh = types.SimpleNamespace(shape={"data": 16, "model": 4})
+        spec = sanitize_spec(P("data", None), (49, 64), mesh, rescue=False)
+        assert spec == P(None, None)
+        spec = sanitize_spec(P("data", None), (64, 64), mesh)
+        assert spec == P("data", None)
+        # rescue moves the dropped axis to a big divisible dim
+        spec = sanitize_spec(P("data", None), (49, 2048), mesh)
+        assert spec == P(None, "data")
+
+    def test_param_specs_cover_tree(self):
+        from repro.configs import LoRAConfig, get_config
+        from repro.models import build_model
+        from repro.sharding import param_specs
+        model = build_model(get_config("qwen2-7b").reduced(), LoRAConfig(),
+                            dtype=jnp.float32, remat=False)
+        specs = param_specs(model)
+        shapes = model.param_shapes()
+        assert jax.tree_util.tree_structure(specs) == \
+            jax.tree_util.tree_structure(shapes)
+
+
+class TestHLOWalker:
+    def test_scan_trip_counts(self):
+        from repro.launch.hlo_walker import analyze_hlo
+
+        def scanned(x, w):
+            def body(c, _):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, None, length=7)
+            return y
+
+        x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        c = jax.jit(scanned).lower(x, w).compile()
+        st_ = analyze_hlo(c.as_text())
+        assert abs(st_.dot_flops - 7 * 2 * 128 ** 3) < 1e-3
+
+    def test_collective_bytes_parse(self):
+        from repro.launch.hlo_walker import _bytes_of
+        assert _bytes_of("f32[8,16]{1,0}") == 512
+        assert _bytes_of("(bf16[4,4], s32[])") == 36

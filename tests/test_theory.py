@@ -1,0 +1,127 @@
+"""Theorem 1 / Appendix A-B: machine-checked theory, incl. property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SampledSim, collapse_bound, contraction_factors,
+                        coverage, h_sampling, mean_field_floor,
+                        mean_field_step, rho_series, simulate_expected)
+
+LEVELS = [8, 16, 32, 48, 64]
+
+
+def make_ranks(K=100):
+    return np.repeat(LEVELS, K // len(LEVELS))
+
+
+class TestHSampling:
+    def test_endpoints(self):
+        # h(1) = 1 (full coverage -> no contraction beyond beta^2)
+        assert np.isclose(h_sampling(np.array([1.0]), 100, 10), 1.0)
+        assert np.isclose(h_sampling(np.array([0.0]), 100, 10), 0.0)
+
+    @given(p=st.floats(0.01, 0.99), K=st.integers(10, 500),
+           frac=st.floats(0.05, 0.9))
+    @settings(max_examples=100, deadline=None)
+    def test_matches_hypergeometric_moment(self, p, K, frac):
+        """h(p) must equal E[(N/M)^2] for N ~ Hypergeo(K, round(pK), M)."""
+        M = max(1, int(K * frac))
+        kp = round(p * K)
+        p_eff = kp / K
+        h = h_sampling(np.array([p_eff]), K, M)[0]
+        mean = M * p_eff
+        var = M * p_eff * (1 - p_eff) * (K - M) / (K - 1)
+        second = (var + mean ** 2) / M ** 2
+        assert np.isclose(h, second, rtol=1e-9)
+
+    @given(st.lists(st.floats(0.0, 1.0), min_size=2, max_size=10))
+    @settings(max_examples=60, deadline=None)
+    def test_monotone(self, ps):
+        """h is strictly increasing on [0,1] (Step 3 of the proof)."""
+        ps = np.sort(np.asarray(ps))
+        h = h_sampling(ps, 100, 10)
+        assert np.all(np.diff(h) >= -1e-12)
+
+
+class TestTheorem1:
+    def test_geometric_bound_holds(self):
+        ranks = make_ranks()
+        p = coverage(LEVELS, ranks)
+        e0 = np.ones(64)
+        E = simulate_expected(e0, p, 100, 10, rounds=200)
+        tail = 1 - rho_series(E, 8)
+        C, gamma = collapse_bound(e0, p, 100, 10, r1=8)
+        bound = C * gamma ** np.arange(201)
+        assert 0 < gamma < 1
+        assert np.all(tail <= bound + 1e-12)
+
+    def test_collapse_limit(self):
+        ranks = make_ranks()
+        p = coverage(LEVELS, ranks)
+        E = simulate_expected(np.ones(64), p, 100, 10, rounds=500)
+        assert 1 - rho_series(E, 8)[-1] < 1e-8   # lim rho -> 1
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_contraction_ordering(self, seed):
+        """q_1 = ... = q_{r1} > q_{r1+1} >= ... >= q_{rmax} for any client
+        rank assignment drawn from the levels."""
+        rng = np.random.default_rng(seed)
+        ranks = rng.choice(LEVELS, size=100)
+        if (ranks >= 16).sum() == 0:
+            return
+        p = coverage(LEVELS, ranks)
+        q = contraction_factors(p, 100, 10)
+        r1 = min(LEVELS)
+        assert np.allclose(q[:r1], q[0])
+        assert np.all(np.diff(q[r1 - 1:]) <= 1e-12)
+
+    def test_full_participation_no_sampling_noise(self):
+        """M = K: h(p) = p^2 exactly (variance term vanishes)."""
+        p = np.linspace(0.1, 1, 10)
+        assert np.allclose(h_sampling(p, 50, 50), p ** 2)
+
+
+class TestSampledSimulation:
+    def test_flexlora_collapses_raflora_does_not(self):
+        ranks = make_ranks()
+        sim = SampledSim(client_ranks=ranks, M=10, seed=3)
+        e_flex = sim.run(np.ones(64), 150, rule="flexlora",
+                         rank_levels=LEVELS)
+        e_ra = sim.run(np.ones(64), 150, rule="raflora", rank_levels=LEVELS)
+        assert 1 - rho_series(e_flex, 8)[-1] < 1e-3     # collapsed
+        assert 1 - rho_series(e_ra, 8)[-1] > 0.5        # preserved
+
+    def test_sampled_tracks_expected(self):
+        """Monte-Carlo mean energies track the closed-form recursion."""
+        ranks = make_ranks()
+        p = coverage(LEVELS, ranks)
+        runs = [SampledSim(client_ranks=ranks, M=10, seed=s).run(
+            np.ones(64), 30, rank_levels=LEVELS) for s in range(40)]
+        mc = np.mean(runs, axis=0)
+        exact = simulate_expected(np.ones(64), p, 100, 10, 30)
+        # compare tail-energy ratio trajectories
+        assert np.allclose(1 - rho_series(mc, 8), 1 - rho_series(exact, 8),
+                           atol=0.08)
+
+
+class TestMeanField:
+    def test_reduces_to_basic(self):
+        p = coverage(LEVELS, make_ranks())
+        e = np.ones(64)
+        stepped = mean_field_step(e, p, 100, 10)
+        q = contraction_factors(p, 100, 10)
+        assert np.allclose(stepped, q * e)
+
+    def test_floor_positive_under_noise(self):
+        """delta^2 > 0 leaves steady-state floors (no total collapse)."""
+        p = coverage(LEVELS, make_ranks())
+        floor = mean_field_floor(p, 100, 10, delta2=0.01)
+        assert np.all(floor[8:] > 0)
+
+    def test_basis_drift_accelerates(self):
+        p = coverage(LEVELS, make_ranks())
+        e = np.ones(64)
+        drifted = mean_field_step(e, p, 100, 10, kappa=0.8)
+        aligned = mean_field_step(e, p, 100, 10, kappa=1.0)
+        assert np.all(drifted <= aligned + 1e-12)

@@ -1,0 +1,54 @@
+"""Generate the §Dry-run / §Roofline markdown tables from the dry-run JSONs.
+
+  PYTHONPATH=src python tools/make_roofline_tables.py > roofline_tables.md
+"""
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def fmt_t(sec):
+    if sec >= 1.0:
+        return f"{sec:8.2f}s "
+    return f"{sec*1e3:8.2f}ms"
+
+
+def table(path, mesh_name):
+    rows = json.load(open(path))
+    out = []
+    out.append(f"\n### Mesh {mesh_name}\n")
+    out.append("| arch | shape | status | bottleneck | t_compute | t_memory "
+               "| t_collective | MODEL_FLOPs | useful ratio | note |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "OK":
+            note = r.get("reason", r.get("error", ""))[:60]
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | — | "
+                       f"— | — | — | — | — | {note} |")
+            continue
+        mf = r.get("model_flops", 0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | OK | **{r['bottleneck']}** | "
+            f"{fmt_t(r['t_compute_s'])} | {fmt_t(r['t_memory_s'])} | "
+            f"{fmt_t(r['t_collective_s'])} | {mf:.2e} | "
+            f"{r.get('useful_ratio', 0):.3f} | "
+            f"{r.get('step','')} mb={r.get('microbatches','-')} |")
+    return "\n".join(out)
+
+
+def main():
+    for mesh_name, fname in (("16x16 (256 chips, single pod)",
+                              "dryrun_single_pod.json"),
+                             ("2x16x16 (512 chips, multi-pod)",
+                              "dryrun_multi_pod.json")):
+        path = os.path.join(ROOT, fname)
+        if os.path.exists(path):
+            print(table(path, mesh_name))
+        else:
+            print(f"\n### Mesh {mesh_name}\n\n(not yet generated)")
+
+
+if __name__ == "__main__":
+    main()
