@@ -1,0 +1,84 @@
+"""Sequential vs batched round engine: per-round wall time (ISSUE 1 tentpole).
+
+Measures the `FederatedLoRA.run_round` hot path at ``clients_per_round=8``
+(full participation of 8 heterogeneous-rank clients, so every round has the
+same rank-group composition and only round 1 pays jit compilation). Warmup
+rounds are excluded; the two engines are timed INTERLEAVED, round by round,
+so drifting background load on shared-CPU machines biases both equally; the
+reported number is the median over the timed rounds.
+
+Writes a JSON artifact (benchmarks/artifacts/round_latency.json) with the
+raw per-round times, the medians, and the speedup, and emits the usual CSV
+rows for run.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                        "round_latency.json")
+
+
+def _make(engine: str, *, rounds: int, d_model: int, batches_per_round: int,
+          local_batch_size: int):
+    from repro.federation.experiment import build_experiment
+    return build_experiment(
+        "raflora",
+        fl_overrides={"num_rounds": rounds, "num_clients": 8,
+                      "participation": 1.0,            # clients_per_round=8
+                      "local_batch_size": local_batch_size},
+        lora_overrides={"rank_levels": (4, 8, 16),
+                        "rank_probs": (0.34, 0.33, 0.33)},
+        samples_per_class=40, num_classes=8, d_model=d_model,
+        batches_per_round=batches_per_round, round_engine=engine)
+
+
+def run(rounds: int = 12, warmup: int = 2, d_model: int = 64,
+        batches_per_round: int = 1, local_batch_size: int = 16) -> dict:
+    total = rounds + warmup
+    servers = {eng: _make(eng, rounds=total, d_model=d_model,
+                          batches_per_round=batches_per_round,
+                          local_batch_size=local_batch_size).server
+               for eng in ("sequential", "batched")}
+    times = {eng: [] for eng in servers}
+    for _ in range(warmup):                 # jit/compile time excluded
+        for srv in servers.values():
+            srv.run_round()
+    for _ in range(rounds):
+        for eng, srv in servers.items():    # interleaved: shared load drift
+            t0 = time.perf_counter()
+            srv.run_round()
+            times[eng].append(time.perf_counter() - t0)
+
+    medians = {eng: float(np.median(ts)) for eng, ts in times.items()}
+    speedup = medians["sequential"] / medians["batched"]
+    result = {
+        "config": {"clients_per_round": 8, "rounds_timed": rounds,
+                   "warmup_rounds": warmup, "d_model": d_model,
+                   "batches_per_round": batches_per_round,
+                   "local_batch_size": local_batch_size,
+                   "rank_levels": [4, 8, 16], "method": "raflora"},
+        "per_round_s": {eng: ts for eng, ts in times.items()},
+        "median_s": medians,
+        "speedup_batched_over_sequential": speedup,
+    }
+    os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(result, f, indent=2)
+
+    for eng in servers:
+        emit(f"round_latency/{eng}", medians[eng] * 1e6,
+             f"median_round_ms={medians[eng] * 1e3:.1f}")
+    emit("round_latency/speedup", 0.0, f"{speedup:.2f}x")
+    print(f"# artifact: {ARTIFACT}")
+    return result
+
+
+if __name__ == "__main__":
+    run()

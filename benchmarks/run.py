@@ -18,9 +18,10 @@ BENCHES = {
     "sensitivity": "benchmarks.bench_sensitivity",  # Fig 2c/2d/5a/6a-d, Tbl 4
     "variants": "benchmarks.bench_lora_variants",   # Table 5 (QLoRA/DoRA)
     "roofline": "benchmarks.bench_roofline",        # §Roofline table
+    "round_latency": "benchmarks.bench_round_latency",  # batched vs seq engine
 }
 
-QUICK = ("kernels", "cost", "energy", "roofline")
+QUICK = ("kernels", "cost", "energy", "roofline", "round_latency")
 
 
 def main(argv=None) -> int:

@@ -30,9 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import functools
+
 from repro.core import partitions as parts
-from repro.core.svd import (dense_from_weighted, factored_from_weighted,
-                            svd_realloc_dense, svd_realloc_factored)
+from repro.core.svd import (check_fallback_globals, dense_from_weighted,
+                            factored_from_weighted, svd_realloc_dense,
+                            svd_realloc_factored)
 
 
 @dataclass
@@ -67,25 +70,44 @@ def _weights(n_k: Sequence[float]) -> np.ndarray:
 # aggregation rules
 # ---------------------------------------------------------------------------
 
+def weighted_avg(stack, w):
+    """Weighted average over the leading client axis (any batch axes). The
+    single implementation behind every plain-FedAvg reduction -- factor
+    stacks AND DoRA magnitudes, eager AND jitted."""
+    wshape = (-1,) + (1,) * (stack.ndim - 1)
+    return (w.reshape(wshape) * stack).sum(0)
+
+
+def _avg_factors(bs, as_, w):
+    """Weighted client-axis average of both factor stacks (fedavg/hetlora)."""
+    return weighted_avg(bs, w), weighted_avg(as_, w)
+
+
+def _flora_delta(bs, as_, w):
+    """FLoRA stacking math: unbiased dW + zeroed (cold-start) adapters.
+    The single implementation behind flora, eager AND jitted."""
+    dw = jnp.einsum("m,m...dr,m...rn->...dn", w.astype(jnp.float32),
+                    bs.astype(jnp.float32), as_.astype(jnp.float32))
+    # cold start: fresh (zero) global adapter; dW returned for base merge
+    return (jnp.zeros(bs.shape[1:], jnp.float32),
+            jnp.zeros(as_.shape[1:], jnp.float32), dw)
+
+
 def aggregate_fedavg(bs, as_, ranks, n_k) -> AggregationResult:
     """Homogeneous FedAvg of the raw factors (FedIT). Biased mixing of
     B and A -- included as the homogeneous baseline."""
     ranks = np.asarray(ranks)
     assert (ranks == ranks[0]).all(), "fedavg requires homogeneous ranks"
-    w = jnp.asarray(_weights(n_k), dtype=bs.dtype)
-    wshape = (-1,) + (1,) * (bs.ndim - 1)
-    b_g = (w.reshape(wshape) * bs).sum(0)
-    a_g = (w.reshape(wshape) * as_).sum(0)
+    b_g, a_g = _avg_factors(bs, as_, jnp.asarray(_weights(n_k),
+                                                 dtype=bs.dtype))
     return AggregationResult(b_g, a_g, None)
 
 
 def aggregate_hetlora(bs, as_, ranks, n_k) -> AggregationResult:
     """HetLoRA: zero-padding alignment, separate averaging of B and A.
     E[B]E[A] != E[BA] -- the aggregation bias the later methods remove."""
-    w = jnp.asarray(_weights(n_k), dtype=bs.dtype)
-    wshape = (-1,) + (1,) * (bs.ndim - 1)
-    b_g = (w.reshape(wshape) * bs).sum(0)
-    a_g = (w.reshape(wshape) * as_).sum(0)
+    b_g, a_g = _avg_factors(bs, as_, jnp.asarray(_weights(n_k),
+                                                 dtype=bs.dtype))
     return AggregationResult(b_g, a_g, None)
 
 
@@ -95,14 +117,7 @@ def aggregate_flora(bs, as_, ranks, n_k) -> AggregationResult:
     (cold start). Communication cost O(M (d+n) r) is charged by the cost
     model in benchmarks/bench_cost.py."""
     w = jnp.asarray(_weights(n_k), dtype=jnp.float32)
-    dw = jnp.einsum("m,m...dr,m...rn->...dn", w, bs.astype(jnp.float32),
-                    as_.astype(jnp.float32))
-    r_max = bs.shape[-1]
-    d, n = bs.shape[-2], as_.shape[-1]
-    lead = bs.shape[1:-2]
-    # cold start: fresh (zero) global adapter; dW returned for base merge
-    b_g = jnp.zeros(lead + (d, r_max), jnp.float32)
-    a_g = jnp.zeros(lead + (r_max, n), jnp.float32)
+    b_g, a_g, dw = _flora_delta(bs, as_, w)
     return AggregationResult(b_g, a_g, None, merge_delta=dw)
 
 
@@ -132,21 +147,28 @@ def _weighted_svd(bs, as_, omega, global_b, global_a, fallback, r_max,
                   backend) -> AggregationResult:
     """Weighted-diagonal contraction + SVD realloc.
 
-    Accepts either unstacked factors (M, d, r) or layer-stacked (M, L, d, r)
-    -- the latter vmaps the whole pipeline over the layer axis (our models
-    stack per-layer params for lax.scan).
+    Accepts unstacked factors (M, d, r) or factors with ANY number of batch
+    axes between the client axis and the matrix axes -- (M, L, d, r) layer
+    stacks from lax.scan models, (M, P, L, d, r) shape buckets from the
+    batched round engine. Dense/factored backends vmap the pipeline over
+    each batch axis in turn; the kernel backend flattens the batch axes and
+    lowers the whole bucket through one layer-batched Pallas grid.
     """
-    if bs.ndim == 4:  # (M, L, d, r): vmap over the layer axis
-        def one_layer(bs_l, as_l, gb_l, ga_l):
+    check_fallback_globals(fallback, global_b, global_a)
+    if bs.ndim > 3:
+        if backend == "kernel":
+            return _weighted_svd_kernel_batched(bs, as_, omega, global_b,
+                                                global_a, fallback, r_max)
+        def one_slice(bs_l, as_l, gb_l, ga_l):
             res = _weighted_svd(bs_l, as_l, omega, gb_l, ga_l, fallback,
                                 r_max, backend)
             sig = res.sigma if res.sigma is not None else jnp.zeros((r_max,))
             return res.b_g, res.a_g, sig
         gb = global_b if global_b is not None else \
-            jnp.zeros((bs.shape[1], bs.shape[2], r_max), jnp.float32)
+            jnp.zeros(bs.shape[1:-1] + (r_max,), jnp.float32)
         ga = global_a if global_a is not None else \
-            jnp.zeros((as_.shape[1], r_max, as_.shape[3]), jnp.float32)
-        b_g, a_g, sigma = jax.vmap(one_layer, in_axes=(1, 1, 0, 0))(
+            jnp.zeros(as_.shape[1:-2] + (r_max, as_.shape[-1]), jnp.float32)
+        b_g, a_g, sigma = jax.vmap(one_slice, in_axes=(1, 1, 0, 0))(
             bs, as_, gb, ga)
         return AggregationResult(b_g, a_g, sigma)
     if backend == "dense":
@@ -166,6 +188,29 @@ def _weighted_svd(bs, as_, omega, global_b, global_a, fallback, r_max,
     return AggregationResult(b_g, a_g, sigma)
 
 
+def _weighted_svd_kernel_batched(bs, as_, omega, global_b, global_a,
+                                 fallback, r_max) -> AggregationResult:
+    """Kernel backend for batch-stacked factors: flatten every batch axis
+    into one layer axis, run the layer-batched Pallas grid once, then SVD
+    the resulting (L, d, n) aggregates as one batched realloc."""
+    from repro.kernels import ops as kernel_ops
+    lead = bs.shape[1:-2]                     # batch axes after clients
+    m, d, r = bs.shape[0], bs.shape[-2], bs.shape[-1]
+    n = as_.shape[-1]
+    layers = int(np.prod(lead))
+    bs_l = jnp.moveaxis(bs.reshape(m, layers, d, r), 0, 1)
+    as_l = jnp.moveaxis(as_.reshape(m, layers, r, n), 0, 1)
+    gb = None if global_b is None else global_b.reshape(layers, d, r_max)
+    ga = None if global_a is None else global_a.reshape(layers, r_max, n)
+    dw = kernel_ops.rank_partition_agg_layered(bs_l, as_l, omega, gb, ga,
+                                               fallback)       # (L, d, n)
+    b_g, a_g, sigma = jax.vmap(
+        functools.partial(svd_realloc_dense, r_max=r_max))(dw)
+    return AggregationResult(b_g.reshape(lead + (d, r_max)),
+                             a_g.reshape(lead + (r_max, n)),
+                             sigma.reshape(lead + (r_max,)))
+
+
 # ---------------------------------------------------------------------------
 # method registry + per-adapter driver
 # ---------------------------------------------------------------------------
@@ -183,10 +228,70 @@ def aggregate_ffa(bs, as_, ranks, n_k, *, global_b) -> AggregationResult:
     Heterogeneous ranks: zero-padded averaging (HetLoRA-style) on the
     trained factor.
     """
-    w = jnp.asarray(_weights(n_k), dtype=as_.dtype)
-    wshape = (-1,) + (1,) * (as_.ndim - 1)
-    a_g = (w.reshape(wshape) * as_).sum(0)
+    a_g = weighted_avg(as_, jnp.asarray(_weights(n_k), dtype=as_.dtype))
     return AggregationResult(global_b, a_g, None)
+
+
+# -- jitted whole-bucket pipelines (batched round engine) -------------------
+#
+# The sequential reference path runs the rules above eagerly, one adapter at
+# a time. The batched engine instead stacks every same-shape adapter into
+# one (M, P, ..., d, r) bucket and pushes the whole bucket through ONE jitted
+# call -- including the stack/pad/concatenate assembly -- so per-op Python
+# dispatch is paid once per bucket per round.
+
+def _dispatch_stacked(bs, as_, warg, global_b, global_a, fallback, r_max,
+                      backend, method):
+    """Traced method dispatch over pre-stacked factors.
+
+    Returns (b_g, a_g, sigma|None, merge_delta|None); ``warg`` is the
+    client-weight vector (avg family) or the omega matrix (SVD family).
+    """
+    if method in ("fedavg", "hetlora", "ffa"):
+        w = warg.astype(bs.dtype)
+        a_g = weighted_avg(as_, w)
+        if method == "ffa":           # frozen factor: keep the global value
+            return global_b, a_g, None, None
+        return weighted_avg(bs, w), a_g, None, None
+    if method == "flora":
+        b_g, a_g, dw = _flora_delta(bs, as_, warg)
+        return b_g, a_g, None, dw
+    res = _weighted_svd(bs, as_, warg, global_b, global_a, fallback,
+                        r_max, backend)
+    return res.b_g, res.a_g, res.sigma, None
+
+
+@functools.partial(jax.jit, static_argnames=("r_max", "backend", "method"))
+def _stacked_core(bs, as_, warg, global_b, global_a, fallback, *,
+                  r_max, backend, method):
+    return _dispatch_stacked(bs, as_, warg, global_b, global_a, fallback,
+                             r_max, backend, method)
+
+
+def _pad_rank(x, r_max: int, axis: int):
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, r_max - x.shape[axis])
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("r_max", "backend", "method"))
+def _grouped_core(group_bs, group_as, warg, global_bs, global_as, fallback,
+                  *, r_max, backend, method):
+    """Assemble a shape bucket from per-rank-group factor tuples and
+    aggregate it, all inside one XLA program.
+
+    group_bs: tuple over rank groups of tuples over bucket adapters of
+    (G, ..., d, r_group) arrays (group_as analogous); global_bs/global_as:
+    tuples over bucket adapters of (..., d, r_max)/(..., r_max, n).
+    """
+    bs = jnp.concatenate([_pad_rank(jnp.stack(bt, axis=1), r_max, -1)
+                          for bt in group_bs])        # (M, P, ..., d, r_max)
+    as_ = jnp.concatenate([_pad_rank(jnp.stack(at, axis=1), r_max, -2)
+                           for at in group_as])       # (M, P, ..., r_max, n)
+    gb = None if global_bs is None else jnp.stack(global_bs)
+    ga = None if global_as is None else jnp.stack(global_as)
+    return _dispatch_stacked(bs, as_, warg, gb, ga, fallback, r_max,
+                             backend, method)
 
 
 @dataclass
@@ -231,12 +336,75 @@ class Aggregator:
                            ) -> AggregationResult:
         """raFLoRA-a/b/c variants: rank-aware weights for partitions up to
         ``partial_up_to``; FlexLoRA weights above (Fig. 5a)."""
-        r_max = max(self.rank_levels)
-        om_ra, fb = parts.omega_raflora(ranks, n_k, self.rank_levels)
-        om_flex = parts.omega_flexlora(ranks, n_k, r_max)
-        cut = self.partial_up_to
-        omega = np.concatenate([om_ra[:, :cut], om_flex[:, cut:]], axis=1)
-        fb = np.concatenate([fb[:cut], np.zeros(r_max - cut)])
-        fallback = jnp.asarray(fb) if fb.any() else None
+        omega, fallback = self._svd_weights(ranks, n_k)
         return _weighted_svd(bs, as_, jnp.asarray(omega), global_b, global_a,
-                             fallback, r_max, self.backend)
+                             None if fallback is None
+                             else jnp.asarray(fallback),
+                             max(self.rank_levels), self.backend)
+
+    def _svd_weights(self, ranks, n_k):
+        """Per-round (omega, fallback) numpy weights for the SVD-realloc
+        family: flexlora, raflora, and the partial raFLoRA variants."""
+        r_max = max(self.rank_levels)
+        if self.method == "flexlora":
+            return parts.omega_flexlora(ranks, n_k, r_max), None
+        omega, fb = parts.omega_raflora(ranks, n_k, self.rank_levels)
+        if self.partial_up_to is not None:
+            om_flex = parts.omega_flexlora(ranks, n_k, r_max)
+            cut = self.partial_up_to
+            omega = np.concatenate([omega[:, :cut], om_flex[:, cut:]], axis=1)
+            fb = np.concatenate([fb[:cut], np.zeros(r_max - cut)])
+        return omega, (fb if fb.any() else None)
+
+    def _weight_args(self, ranks, n_k):
+        """(warg, fallback) jnp inputs for ``_dispatch_stacked``."""
+        if self.method == "fedavg":
+            ranks_arr = np.asarray(ranks)
+            assert (ranks_arr == ranks_arr[0]).all(), \
+                "fedavg requires homogeneous ranks"
+        if self.method in ("fedavg", "hetlora", "ffa", "flora"):
+            return jnp.asarray(_weights(n_k), jnp.float32), None
+        omega, fallback = self._svd_weights(ranks, n_k)
+        return (jnp.asarray(omega),
+                None if fallback is None else jnp.asarray(fallback))
+
+    def aggregate_stack(self, bs, as_, ranks, n_k, global_b=None,
+                        global_a=None) -> AggregationResult:
+        """First-class batched API: aggregate a pre-stacked shape bucket.
+
+        bs (M, *batch, d, r_max); as_ (M, *batch, r_max, n) with any batch
+        axes (adapter bucket, scan-stacked layers, ...); global factors, if
+        given, carry the same batch axes without the client axis. One jitted
+        call per bucket. Returns an AggregationResult whose fields keep the
+        batch axes.
+        """
+        warg, fallback = self._weight_args(ranks, n_k)
+        b_g, a_g, sigma, dw = _stacked_core(
+            bs, as_, warg, global_b, global_a, fallback,
+            r_max=max(self.rank_levels), backend=self.backend,
+            method=self.method)
+        return AggregationResult(b_g, a_g, sigma, merge_delta=dw)
+
+    def aggregate_grouped(self, group_bs, group_as, ranks, n_k,
+                          global_bs=None, global_as=None
+                          ) -> AggregationResult:
+        """Batched round engine hot path: aggregate a shape bucket straight
+        from per-rank-group factor stacks.
+
+        group_bs/group_as: sequences over rank groups of per-adapter factor
+        sequences ((G, ..., d, r_group) / (G, ..., r_group, n)); ranks/n_k
+        in concatenated group-client order; global_bs/global_as: per-adapter
+        global factors. Bucket assembly (stack adapters, pad ranks,
+        concatenate groups) AND aggregation run in one jitted dispatch.
+        Returns an AggregationResult with a leading bucket-adapter axis.
+        """
+        warg, fallback = self._weight_args(ranks, n_k)
+        b_g, a_g, sigma, dw = _grouped_core(
+            tuple(tuple(bt) for bt in group_bs),
+            tuple(tuple(at) for at in group_as),
+            warg,
+            None if global_bs is None else tuple(global_bs),
+            None if global_as is None else tuple(global_as),
+            fallback, r_max=max(self.rank_levels), backend=self.backend,
+            method=self.method)
+        return AggregationResult(b_g, a_g, sigma, merge_delta=dw)

@@ -79,5 +79,10 @@ class EnergyTrace:
         return 1.0 - np.asarray(self.rho_r1)
 
     def collapsed(self, threshold: float = 0.05) -> bool:
-        """Definition 1: higher-rank energy has become negligible."""
+        """Definition 1: higher-rank energy has become negligible.
+
+        Before any ``record()`` there is no spectrum to judge, so an empty
+        trace is never collapsed."""
+        if not self.rho_r1:
+            return False
         return bool(self.higher_rank_ratio[-1] < threshold)

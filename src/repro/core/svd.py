@@ -25,6 +25,24 @@ import jax
 import jax.numpy as jnp
 
 
+def check_fallback_globals(fallback, global_b, global_a) -> None:
+    """A non-None Eq. 8 fallback REQUIRES both global factors.
+
+    Silently dropping the fallback (the old behaviour when ``global_b`` was
+    None) degrades raFLoRA's empty-partition case to FlexLoRA-style zeroing,
+    so we fail loudly instead."""
+    if fallback is None:
+        return
+    missing = [name for name, g in (("global_b", global_b),
+                                    ("global_a", global_a)) if g is None]
+    if missing:
+        raise ValueError(
+            "Eq. 8 empty-partition fallback is set but "
+            f"{' and '.join(missing)} {'is' if len(missing) == 1 else 'are'}"
+            " missing; pass the current global adapter factors so the "
+            "uncovered rank partitions can retain their global slices")
+
+
 def svd_realloc_dense(dw: jnp.ndarray, r_max: int
                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Paper-faithful: SVD the dense aggregate. Returns (B_g, A_g, sigma).
@@ -76,6 +94,7 @@ def factored_from_weighted(bs: jnp.ndarray, as_: jnp.ndarray,
     factors so the stack stays well-conditioned for QR.
     Returns u_c (d, M*r_max [+ r_max]), v_c (matching, n).
     """
+    check_fallback_globals(fallback, global_b, global_a)
     m, d, r = bs.shape
     n = as_.shape[-1]
     sq = jnp.sqrt(jnp.maximum(omega, 0.0)).astype(jnp.float32)  # (M, r)
@@ -83,7 +102,7 @@ def factored_from_weighted(bs: jnp.ndarray, as_: jnp.ndarray,
     v_parts = (as_.astype(jnp.float32) * sq[:, :, None])         # (M, r, n)
     u_c = jnp.moveaxis(u_parts, 0, 1).reshape(d, m * r)
     v_c = v_parts.reshape(m * r, n)
-    if fallback is not None and global_b is not None:
+    if fallback is not None:
         fb = jnp.sqrt(jnp.maximum(fallback, 0.0)).astype(jnp.float32)
         u_c = jnp.concatenate([u_c, global_b.astype(jnp.float32) * fb[None, :]],
                               axis=1)
@@ -97,9 +116,10 @@ def dense_from_weighted(bs: jnp.ndarray, as_: jnp.ndarray, omega: jnp.ndarray,
                         global_a: Optional[jnp.ndarray] = None,
                         fallback: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Materialize sum_k B_k diag(omega_k) A_k (+ global fallback slices)."""
+    check_fallback_globals(fallback, global_b, global_a)
     dw = jnp.einsum("mdr,mr,mrn->dn", bs.astype(jnp.float32),
                     omega.astype(jnp.float32), as_.astype(jnp.float32))
-    if fallback is not None and global_b is not None:
+    if fallback is not None:
         dw = dw + jnp.einsum("dr,r,rn->dn", global_b.astype(jnp.float32),
                              fallback.astype(jnp.float32),
                              global_a.astype(jnp.float32))

@@ -6,9 +6,22 @@ SVD reallocation -> energy bookkeeping. The server state is checkpointable
 and the whole loop is architecture-agnostic: it sees only adapter factor
 trees from ``repro.core.lora``.
 
+Two round engines (DESIGN.md "Batched round engine"):
+
+* ``round_engine="batched"`` (default): ALL sampled clients train as ONE
+  vmapped, jitted multi-client step over stacked LoRA trees -- each
+  client's factors rank-masked and its lora scale vmapped, which is exact
+  (client.py) -- and aggregation stacks every same-shape adapter into one
+  (M, P, ..., d, r) bucket and runs one jitted weighted-contraction +
+  batched QR/SVD realloc per bucket (the "kernel" backend lowers a bucket
+  through a single layer-batched Pallas grid).
+* ``round_engine="sequential"``: the original per-client / per-adapter
+  reference loop, kept for bit-level comparison (tests assert the two match
+  to float tolerance) and for debugging.
+
 TPU mapping note (DESIGN.md §5): in the simulated runtime clients execute
-sequentially on one device; on a pod, client local steps are data-parallel
-over the ``data`` mesh axis and the stacked-factor contraction
+on one device; on a pod, client local steps are data-parallel over the
+``data`` mesh axis and the stacked-factor contraction
 sum_k B_k diag(omega_k) A_k lowers to an all-reduce of per-shard partial
 sums (see launch/fl_dryrun.py).
 """
@@ -23,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig, LoRAConfig
-from repro.core.aggregation import Aggregator
+from repro.core.aggregation import Aggregator, weighted_avg
 from repro.core.energy import EnergyTrace
 from repro.core.lora import merge_lora, split_lora
 from repro.federation.client import LocalTrainer
@@ -52,8 +65,11 @@ class FederatedLoRA:
                  *, base_params=None, seed: Optional[int] = None,
                  backend: str = "factored",
                  partial_up_to: Optional[int] = None,
-                 server_momentum=None):
+                 server_momentum=None,
+                 round_engine: str = "batched"):
         """batch_fn(client_id, rng) -> list of training batches (dicts)."""
+        assert round_engine in ("batched", "sequential"), round_engine
+        self.round_engine = round_engine
         self.model = model
         self.fl = fl
         self.lora_cfg = lora
@@ -74,6 +90,7 @@ class FederatedLoRA:
         self.round_idx = 0
         self.energy = EnergyTrace(lora.rank_levels)
         self.history: List[RoundStats] = []
+        self._extract_jit = None   # lazily-built jitted factor extractor
 
     # -- adapter plumbing ---------------------------------------------------
 
@@ -106,6 +123,24 @@ class FederatedLoRA:
             if "m" in ab:               # DoRA magnitude: FedAvg'd separately
                 out[(parent, "m")] = ab["m"]
         return out
+
+    def _extract_factors_batched(self, lora_tree, rank: int
+                                 ) -> Dict[tuple, tuple]:
+        """Jitted ``_extract_factors`` (batched engine): the whole tree's
+        swapaxes/slice plumbing is one XLA dispatch. Adapter pairs and DoRA
+        magnitudes are returned as separate jit outputs because their dict
+        keys don't sort against each other (pytree flattening sorts keys)."""
+        if self._extract_jit is None:
+            def ex(tree, r):
+                out = self._extract_factors(tree, r)
+                pairs = {k: v for k, v in out.items()
+                         if not self._is_magnitude(k)}
+                mags = {k: v for k, v in out.items()
+                        if self._is_magnitude(k)}
+                return pairs, mags
+            self._extract_jit = jax.jit(ex, static_argnums=(1,))
+        pairs, mags = self._extract_jit(lora_tree, rank)
+        return {**pairs, **mags}
 
     def _write_factors(self, results: Dict[tuple, tuple]) -> None:
         """Write aggregated (b_g, a_g) back into the global lora tree."""
@@ -143,6 +178,159 @@ class FederatedLoRA:
         self.base = jax.tree_util.tree_map_with_path(
             apply, self.base, is_leaf=lambda x: x is None)
 
+    # -- local training (both engines) --------------------------------------
+
+    def _train_sequential(self, client_batches, ranks, lr):
+        """Reference path: one ``trainer.train`` call per sampled client."""
+        client_factors: List[Dict[tuple, tuple]] = []
+        losses = []
+        for batches, rank in zip(client_batches, ranks):
+            trained, metrics = self.trainer.train(
+                self.base, self.global_lora, rank, batches, lr)
+            client_factors.append(self._extract_factors(trained, rank))
+            losses.append(float(metrics.get("loss", jnp.nan)))
+        return client_factors, losses
+
+    def _train_batched(self, client_batches, ranks, lr):
+        """Batched engine: ONE vmapped, jitted multi-client dispatch trains
+        every sampled client regardless of rank (``train_group_masked``:
+        factors zero-masked beyond each client's rank, per-client lora
+        scale vmapped -- exact, see client.py). Clients are grouped only by
+        local step count, which is homogeneous in the common case. Factors
+        stay stacked over each group's client axis -- ``_aggregate_batched``
+        consumes them stacked, so nothing is unstacked per client.
+
+        Returns (group_factors, losses) with group_factors a list of
+        (client_indices, r_max, {adapter_path: stacked factors}) and losses
+        in sampled-client order."""
+        groups: Dict[int, List[int]] = {}
+        for i, batches in enumerate(client_batches):
+            groups.setdefault(len(batches), []).append(i)
+        group_factors = []
+        losses = [float("nan")] * len(ranks)
+        r_max = self.lora_cfg.r_max
+        for steps, idxs in sorted(groups.items()):
+            stacks = [
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[client_batches[i][t] for i in idxs])
+                for t in range(steps)]
+            lora_g, metrics = self.trainer.train_group_masked(
+                self.base, self.global_lora, [ranks[i] for i in idxs],
+                stacks, lr)
+            loss_g = np.asarray(metrics.get(
+                "loss", jnp.full((len(idxs),), jnp.nan)))
+            # masked training leaves zeros beyond each client's rank, which
+            # is exactly the zero-padded (G, ..., d, r_max) stack layout the
+            # grouped aggregation expects; _extract_factors is shape-
+            # agnostic in the leading axes
+            group_factors.append((idxs, r_max,
+                                  self._extract_factors_batched(lora_g,
+                                                                r_max)))
+            for j, i in enumerate(idxs):
+                losses[i] = float(loss_g[j])
+        return group_factors, losses
+
+    # -- aggregation (both engines) ------------------------------------------
+
+    @staticmethod
+    def _is_magnitude(parent) -> bool:
+        return (isinstance(parent, tuple) and len(parent) == 2
+                and parent[1] == "m")
+
+    def _aggregate_magnitudes(self, client_factors, parents, w_clients,
+                              results) -> None:
+        """DoRA magnitudes: weighted FedAvg (not rank-structured)."""
+        for parent in parents:
+            ms = jnp.stack([cf[parent] for cf in client_factors])
+            results[parent] = weighted_avg(ms, w_clients)
+
+    def _aggregate_sequential(self, client_factors, ranks, n_k):
+        """Reference path: one ``aggregate_layer`` call per adapter."""
+        results, deltas, sigmas = {}, {}, {}
+        global_factors = self._extract_factors(self.global_lora,
+                                               self.lora_cfg.r_max)
+        w_clients = jnp.asarray(np.asarray(n_k) / np.sum(n_k))
+        parents = list(client_factors[0])
+        self._aggregate_magnitudes(
+            client_factors, [p for p in parents if self._is_magnitude(p)],
+            w_clients, results)
+        for parent in parents:
+            if self._is_magnitude(parent):
+                continue
+            factors = [cf[parent] for cf in client_factors]
+            g_b, g_a = global_factors[parent]
+            res = self.aggregator.aggregate_layer(factors, ranks, n_k,
+                                                  global_b=g_b, global_a=g_a)
+            self._record_result(parent, (g_b, g_a), res, results, deltas,
+                                sigmas)
+        return results, deltas, self._sigma_probe(parents, sigmas)
+
+    def _aggregate_batched(self, group_factors, ranks, n_k):
+        """Batched engine: bucket adapters by factor shape and aggregate
+        each bucket with ONE jitted call (``aggregate_grouped``).
+
+        The client axis is assembled group-by-group (clients stay in rank-
+        group order, with ranks/n_k permuted to match), so each bucket needs
+        only one pad + one concatenate per training group instead of
+        per-client restacking.
+        """
+        results, deltas, sigmas = {}, {}, {}
+        r_max = self.lora_cfg.r_max
+        global_factors = self._extract_factors_batched(self.global_lora,
+                                                       r_max)
+        # group-order permutation of the client axis
+        order = [i for idxs, _, _ in group_factors for i in idxs]
+        ranks_o = [ranks[i] for i in order]
+        n_k_o = [n_k[i] for i in order]
+        w_clients = jnp.asarray(np.asarray(n_k_o) / np.sum(n_k_o))
+        parents = list(group_factors[0][2])
+        for parent in [p for p in parents if self._is_magnitude(p)]:
+            # DoRA magnitudes: weighted FedAvg (not rank-structured)
+            ms = jnp.concatenate([fg[parent] for _, _, fg in group_factors])
+            results[parent] = weighted_avg(ms, w_clients)
+        buckets: Dict[tuple, List] = {}
+        for parent in parents:
+            if self._is_magnitude(parent):
+                continue
+            gb0, ga0 = global_factors[parent]
+            buckets.setdefault((gb0.shape, ga0.shape), []).append(parent)
+        for group in buckets.values():
+            res = self.aggregator.aggregate_grouped(
+                [[fg[p][0] for p in group] for _, _, fg in group_factors],
+                [[fg[p][1] for p in group] for _, _, fg in group_factors],
+                ranks_o, n_k_o,
+                global_bs=[global_factors[p][0] for p in group],
+                global_as=[global_factors[p][1] for p in group])
+            for j, parent in enumerate(group):
+                res_j = type(res)(
+                    res.b_g[j], res.a_g[j],
+                    None if res.sigma is None else res.sigma[j],
+                    None if res.merge_delta is None else res.merge_delta[j])
+                self._record_result(parent, global_factors[parent], res_j,
+                                    results, deltas, sigmas)
+        return results, deltas, self._sigma_probe(parents, sigmas)
+
+    def _record_result(self, parent, global_pair, res, results, deltas,
+                       sigmas) -> None:
+        if self.server_momentum is not None:
+            results[parent] = self.server_momentum.apply(
+                parent, global_pair, (res.b_g, res.a_g), self.lora_cfg.r_max)
+        else:
+            results[parent] = (res.b_g, res.a_g)
+        if res.merge_delta is not None:
+            deltas[parent] = res.merge_delta
+        if res.sigma is not None:
+            sigmas[parent] = res.sigma
+
+    @staticmethod
+    def _sigma_probe(parents, sigmas) -> Optional[np.ndarray]:
+        """First adapter's spectrum (layer-averaged) as the energy probe."""
+        for parent in parents:
+            if parent in sigmas:
+                sig = np.asarray(sigmas[parent])
+                return sig if sig.ndim == 1 else sig.mean(axis=0)
+        return None
+
     # -- the round ----------------------------------------------------------
 
     def run_round(self) -> RoundStats:
@@ -153,47 +341,21 @@ class FederatedLoRA:
         ranks = [int(self.registry.ranks[c]) for c in clients]
         n_k = [max(self.registry.num_samples(c), 1) for c in clients]
         lr = self.schedule(self.round_idx)
+        # one batch_fn call per client, in sampled order, regardless of
+        # engine -- keeps the data rng stream identical across engines
+        client_batches = [self.batch_fn(cid, self.rng) for cid in clients]
 
-        # local training (sequential simulation of the parallel clients)
-        client_factors: List[Dict[tuple, tuple]] = []
-        losses = []
-        for cid, rank in zip(clients, ranks):
-            batches = self.batch_fn(cid, self.rng)
-            trained, metrics = self.trainer.train(
-                self.base, self.global_lora, rank, batches, lr)
-            client_factors.append(self._extract_factors(trained, rank))
-            losses.append(float(metrics.get("loss", jnp.nan)))
+        if self.round_engine == "sequential":
+            client_factors, losses = self._train_sequential(
+                client_batches, ranks, lr)
+            results, deltas, sigma_probe = self._aggregate_sequential(
+                client_factors, ranks, n_k)
+        else:
+            group_factors, losses = self._train_batched(
+                client_batches, ranks, lr)
+            results, deltas, sigma_probe = self._aggregate_batched(
+                group_factors, ranks, n_k)
 
-        # aggregate every adapter
-        results, deltas = {}, {}
-        sigma_probe = None
-        global_factors = self._extract_factors(self.global_lora,
-                                               self.lora_cfg.r_max)
-        w_clients = jnp.asarray(np.asarray(n_k) / np.sum(n_k))
-        for parent in client_factors[0]:
-            if isinstance(parent, tuple) and len(parent) == 2 \
-                    and parent[1] == "m":
-                # DoRA magnitudes: weighted FedAvg (not rank-structured)
-                ms = jnp.stack([cf[parent] for cf in client_factors])
-                wshape = (-1,) + (1,) * (ms.ndim - 1)
-                results[parent] = jnp.sum(
-                    w_clients.reshape(wshape) * ms, axis=0)
-                continue
-            factors = [cf[parent] for cf in client_factors]
-            g_b, g_a = global_factors[parent]
-            res = self.aggregator.aggregate_layer(factors, ranks, n_k,
-                                                  global_b=g_b, global_a=g_a)
-            if self.server_momentum is not None:
-                results[parent] = self.server_momentum.apply(
-                    parent, (g_b, g_a), (res.b_g, res.a_g),
-                    self.lora_cfg.r_max)
-            else:
-                results[parent] = (res.b_g, res.a_g)
-            if res.merge_delta is not None:
-                deltas[parent] = res.merge_delta
-            if sigma_probe is None and res.sigma is not None:
-                sig = np.asarray(res.sigma)
-                sigma_probe = sig if sig.ndim == 1 else sig.mean(axis=0)
         self._write_factors(results)
         if deltas:
             self._merge_flora_delta(deltas)

@@ -12,8 +12,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.svd import check_fallback_globals
 from repro.kernels.lora_apply import lora_apply_pallas
-from repro.kernels.rank_partition_agg import rank_partition_agg_pallas
+from repro.kernels.rank_partition_agg import (rank_partition_agg_layered_pallas,
+                                              rank_partition_agg_pallas)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 _ON_TPU = jax.default_backend() == "tpu"
@@ -27,6 +29,12 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def _tile_block(padded: int, preferred: int = 256, lane: int = 128) -> int:
+    """Largest tile <= preferred that divides the (lane-padded) dim --
+    e.g. a 384-padded dim tiles at 128, not the non-divisor 256."""
+    return preferred if padded % preferred == 0 else lane
 
 
 @functools.partial(jax.jit, static_argnames=("scale",))
@@ -63,7 +71,8 @@ def rank_partition_agg(bs: jnp.ndarray, as_: jnp.ndarray, omega: jnp.ndarray,
     bs (M, d, r); as_ (M, r, n); omega (M, r); optional global factors enter
     as one extra "client" carrying the empty-partition fallback (Eq. 8).
     """
-    if fallback is not None and global_b is not None:
+    check_fallback_globals(fallback, global_b, global_a)
+    if fallback is not None:
         bs = jnp.concatenate([bs, global_b[None].astype(bs.dtype)], axis=0)
         as_ = jnp.concatenate([as_, global_a[None].astype(as_.dtype)], axis=0)
         omega = jnp.concatenate(
@@ -75,9 +84,42 @@ def rank_partition_agg(bs: jnp.ndarray, as_: jnp.ndarray, omega: jnp.ndarray,
     omp = _pad_to(omega, 1, 8)
     dw = rank_partition_agg_pallas(
         bsp, asp, omp,
-        block_d=min(256, bsp.shape[1]), block_n=min(256, asp.shape[2]),
+        block_d=_tile_block(bsp.shape[1]), block_n=_tile_block(asp.shape[2]),
         interpret=_INTERPRET)
     return dw[:d, :n]
+
+
+@jax.jit
+def rank_partition_agg_layered(bs: jnp.ndarray, as_: jnp.ndarray,
+                               omega: jnp.ndarray,
+                               global_b: Optional[jnp.ndarray] = None,
+                               global_a: Optional[jnp.ndarray] = None,
+                               fallback: Optional[jnp.ndarray] = None
+                               ) -> jnp.ndarray:
+    """Layer-batched dW: one kernel launch for a whole adapter bucket.
+
+    bs (L, M, d, r); as_ (L, M, r, n); omega (M, r) shared across layers;
+    optional global factors (L, d, r)/(L, r, n) enter as one extra "client"
+    per layer carrying the empty-partition fallback (Eq. 8).
+    Returns dW (L, d, n) f32.
+    """
+    check_fallback_globals(fallback, global_b, global_a)
+    if fallback is not None:
+        bs = jnp.concatenate([bs, global_b[:, None].astype(bs.dtype)], axis=1)
+        as_ = jnp.concatenate([as_, global_a[:, None].astype(as_.dtype)],
+                              axis=1)
+        omega = jnp.concatenate(
+            [omega, fallback[None].astype(omega.dtype)], axis=0)
+    d, r = bs.shape[2], bs.shape[3]
+    n = as_.shape[-1]
+    bsp = _pad_to(_pad_to(bs, 2, 128), 3, 8)
+    asp = _pad_to(_pad_to(as_, 2, 8), 3, 128)
+    omp = _pad_to(omega, 1, 8)
+    dw = rank_partition_agg_layered_pallas(
+        bsp, asp, omp,
+        block_d=_tile_block(bsp.shape[2]), block_n=_tile_block(asp.shape[3]),
+        interpret=_INTERPRET)
+    return dw[:, :d, :n]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

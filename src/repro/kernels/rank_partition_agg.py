@@ -15,6 +15,14 @@ small; arithmetic intensity per output tile is ~r ops/byte.
 Grid: (d/bd, n/bn, M), client loop innermost ("arbitrary"), f32 accumulator
 in VMEM scratch. The empty-partition fallback slice (Eq. 8 case 2) enters
 as client M+1 with omega = the fallback indicator (handled by ops.py).
+
+``rank_partition_agg_layered_pallas`` is the batched-round-engine variant:
+the server stacks every same-shape adapter of the model into one
+(L, M, d, r) bucket and the whole bucket lowers through a single grid with
+the layer axis outermost -- one kernel launch per round per shape bucket
+instead of one per adapter. omega is shared across layers (the aggregation
+weights depend only on the round's client ranks/sample counts, not on the
+adapter), so the weight tile stays resident across the layer loop.
 """
 from __future__ import annotations
 
@@ -75,6 +83,58 @@ def rank_partition_agg_pallas(bs: jnp.ndarray, as_: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bd, bn), lambda i, j, mm: (i, j)),
         out_shape=jax.ShapeDtypeStruct((d, n), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(bs, as_, omega)
+
+
+def _layered_kernel(bs_ref, as_ref, om_ref, o_ref, acc_ref, *, m_steps: int):
+    m = pl.program_id(3)
+
+    @pl.when(m == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = bs_ref[0, 0].astype(jnp.float32)         # (bd, r)
+    a = as_ref[0, 0].astype(jnp.float32)         # (r, bn)
+    om = om_ref[0].astype(jnp.float32)           # (r,)
+    acc_ref[...] += jax.lax.dot(b * om[None, :], a,
+                                precision=jax.lax.Precision.HIGHEST)
+
+    @pl.when(m == m_steps - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def rank_partition_agg_layered_pallas(bs: jnp.ndarray, as_: jnp.ndarray,
+                                      omega: jnp.ndarray, *,
+                                      block_d: int = 256, block_n: int = 256,
+                                      interpret: bool = True) -> jnp.ndarray:
+    """bs (L, M, d, r); as_ (L, M, r, n); omega (M, r) -> dW (L, d, n) f32.
+
+    Layer axis outermost in the grid so each layer's accumulator lives its
+    full client loop before the next layer starts (same scratch reuse
+    pattern as the single-layer kernel)."""
+    l, m, d, r = bs.shape
+    n = as_.shape[-1]
+    bd, bn = min(block_d, d), min(block_n, n)
+    assert d % bd == 0 and n % bn == 0, (d, n, bd, bn)
+    grid = (l, d // bd, n // bn, m)
+
+    scratch = [_VMEM((bd, bn), jnp.float32)] if _VMEM is not None else \
+        [jax.ShapeDtypeStruct((bd, bn), jnp.float32)]
+
+    kernel = functools.partial(_layered_kernel, m_steps=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bd, r), lambda ll, i, j, mm: (ll, mm, i, 0)),
+            pl.BlockSpec((1, 1, r, bn), lambda ll, i, j, mm: (ll, mm, 0, j)),
+            pl.BlockSpec((1, r), lambda ll, i, j, mm: (mm, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bd, bn), lambda ll, i, j, mm: (ll, i, j)),
+        out_shape=jax.ShapeDtypeStruct((l, d, n), jnp.float32),
         scratch_shapes=scratch,
         interpret=interpret,
     )(bs, as_, omega)

@@ -163,13 +163,20 @@ def _dot_flops(op: OpInfo, comp: Computation) -> float:
         return 0.0
     result_elems = sum(n for _, n in shapes)
     cm = re.search(r"lhs_contracting_dims={([\d,]*)}", op.rest)
-    operands = re.findall(r"\(%?([\w\.\-]+)", op.rest[:op.rest.find(")")])
     k = 1
-    if cm and operands:
-        lhs_type = comp.symbol_types.get(operands[0], "")
-        lhs_shapes = _SHAPE.search(lhs_type)
-        if lhs_shapes:
-            dims = [int(d) for d in lhs_shapes.group(2).split(",") if d]
+    if cm:
+        paren = op.rest[op.rest.find("(") + 1:op.rest.find(")")]
+        # lhs shape: newer XLA prints operand types inline
+        # (``dot(f32[m,k]{1,0} %x, ...)``); older prints only names, which
+        # we resolve through the computation's symbol table.
+        lhs_shape = _SHAPE.search(paren)
+        if lhs_shape is None:
+            nm = re.match(r"\s*%?([\w\.\-]+)", paren)
+            if nm:
+                lhs_shape = _SHAPE.search(
+                    comp.symbol_types.get(nm.group(1), ""))
+        if lhs_shape:
+            dims = [int(d) for d in lhs_shape.group(2).split(",") if d]
             for ci in cm.group(1).split(","):
                 if ci and int(ci) < len(dims):
                     k *= dims[int(ci)]

@@ -1,0 +1,173 @@
+"""Offline stand-in for ``hypothesis``: deterministic fixed-grid sampling.
+
+The container has no network access, so ``pip install hypothesis`` is not an
+option; without this shim five tier-1 test modules fail at collection. The
+shim reproduces the tiny API surface those modules use -- ``given``,
+``settings``, ``strategies.{integers,floats,lists,sampled_from}`` -- by
+drawing a fixed, seeded grid of examples per test (seeded from the test's
+qualified name, so runs are reproducible and order-independent). Real
+``hypothesis`` is still preferred whenever it is importable; test modules
+fall back here via try/except import.
+
+Shrinking, ``@example``, and stateful testing are intentionally out of
+scope: the goal is deterministic offline coverage, not minimal
+counterexamples.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+from typing import Any, Callable, List, Sequence
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 10
+_EXAMPLE_CAP = 50          # keep offline suite wall time bounded
+
+
+class Strategy:
+    """A deterministic sampler: ``sample(rng)`` draws one example."""
+
+    def __init__(self, sample_fn: Callable[[np.random.Generator], Any],
+                 edge_cases: Sequence[Any] = ()):
+        self._sample = sample_fn
+        # served first, before random draws -- cheap boundary coverage
+        self.edge_cases = list(edge_cases)
+
+    def sample(self, rng: np.random.Generator) -> Any:
+        return self._sample(rng)
+
+
+class _Strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            edge_cases=[min_value, max_value])
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> Strategy:
+        return Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            edge_cases=[min_value, max_value])
+
+    @staticmethod
+    def sampled_from(elements) -> Strategy:
+        elems = list(elements)
+        return Strategy(lambda rng: elems[int(rng.integers(len(elems)))],
+                        edge_cases=elems[:1])
+
+    @staticmethod
+    def lists(elem: Strategy, min_size: int = 0,
+              max_size: int = 10) -> Strategy:
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elem.sample(rng) for _ in range(size)]
+        edge = [[e] * max(min_size, 1) for e in elem.edge_cases[:1]] \
+            if min_size <= 1 or elem.edge_cases else []
+        return Strategy(draw, edge_cases=edge)
+
+
+strategies = _Strategies()
+
+
+class HealthCheck:
+    """Placeholder constants so ``suppress_health_check=`` parses."""
+    all = ()
+    too_slow = None
+    data_too_large = None
+    filter_too_much = None
+
+
+def settings(max_examples: int = None, deadline=None, **_kw):
+    """Decorator recording max_examples for the enclosing ``given``."""
+    def deco(fn):
+        if max_examples is not None:
+            fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+class _Assumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Skip the current example when its precondition fails."""
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+def note(*_a, **_kw) -> None:
+    pass
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    """Run the test over a deterministic grid of drawn examples.
+
+    Examples = the strategies' edge cases (zipped positionally) followed by
+    seeded random draws, up to min(settings.max_examples, cap). The RNG seed
+    derives from the test's qualified name so each test sees a stable but
+    distinct grid.
+    """
+    def deco(fn):
+        sig = inspect.signature(fn)
+        param_names = list(sig.parameters)
+        positional = [p for p in param_names if p != "self"]
+        strat = dict(zip(positional, arg_strategies))
+        strat.update(kw_strategies)
+        n_examples = min(getattr(fn, "_compat_max_examples",
+                                 _DEFAULT_MAX_EXAMPLES), _EXAMPLE_CAP)
+        seed = zlib.crc32(getattr(fn, "__qualname__", fn.__name__)
+                          .encode("utf-8"))
+
+        def edge_grid() -> List[dict]:
+            depth = max((len(s.edge_cases) for s in strat.values()),
+                        default=0)
+            grid = []
+            for i in range(depth):
+                ex = {}
+                for name, s in strat.items():
+                    if not s.edge_cases:
+                        break
+                    ex[name] = s.edge_cases[min(i, len(s.edge_cases) - 1)]
+                else:
+                    grid.append(ex)
+            return grid
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(seed)
+            examples = edge_grid()[:n_examples]
+            while len(examples) < n_examples:
+                examples.append({k: s.sample(rng)
+                                 for k, s in strat.items()})
+            ran_any = False
+            for drawn in examples:
+                try:
+                    fn(*args, **drawn, **kwargs)
+                    ran_any = True
+                except _Assumption:
+                    continue
+            assert ran_any or not examples, \
+                "every drawn example was rejected by assume()"
+
+        # hide the drawn params from pytest's fixture resolution while
+        # keeping real fixtures (and self) visible
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strat]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        try:
+            del wrapper.__wrapped__
+        except AttributeError:
+            pass
+        return wrapper
+    return deco
+
+
+__all__ = ["given", "settings", "strategies", "assume", "note",
+           "HealthCheck", "Strategy"]

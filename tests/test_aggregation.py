@@ -166,6 +166,156 @@ class TestBaselines:
             aggregate_fedavg(bs, as_, ranks, n_k)
 
 
+class TestFallbackRequired:
+    """A non-None Eq. 8 fallback with missing global factors must raise --
+    silently dropping it degraded raFLoRA's empty-partition case."""
+
+    def _stack(self):
+        key = jax.random.PRNGKey(11)
+        ranks = [4, 4]                       # partitions above 4 are empty
+        factors = make_factors(key, ranks)
+        return pad_stack(factors, R_MAX)
+
+    def test_dense_raises(self):
+        bs, as_ = self._stack()
+        fb = jnp.ones((R_MAX,))
+        om = jnp.zeros((2, R_MAX))
+        with pytest.raises(ValueError, match="global"):
+            dense_from_weighted(bs, as_, om, None, None, fb)
+
+    def test_factored_raises(self):
+        bs, as_ = self._stack()
+        fb = jnp.ones((R_MAX,))
+        om = jnp.zeros((2, R_MAX))
+        with pytest.raises(ValueError, match="global"):
+            factored_from_weighted(bs, as_, om, None, None, fb)
+
+    def test_kernel_raises(self):
+        from repro.kernels import ops
+        bs, as_ = self._stack()
+        fb = jnp.ones((R_MAX,))
+        om = jnp.zeros((2, R_MAX))
+        with pytest.raises(ValueError, match="global"):
+            ops.rank_partition_agg(bs, as_, om, None, None, fb)
+
+    def test_raflora_raises_without_globals_when_partition_empty(self):
+        bs, as_ = self._stack()
+        with pytest.raises(ValueError, match="global"):
+            aggregate_raflora(bs, as_, [4, 4], [1.0, 1.0],
+                              rank_levels=LEVELS, backend="dense")
+
+    @pytest.mark.parametrize("backend", ["dense", "factored", "kernel"])
+    def test_fallback_applied_when_globals_given(self, backend):
+        """Positive path: all three backends keep the global higher-rank
+        slices when a partition has no contributor."""
+        bs, as_ = self._stack()
+        key = jax.random.PRNGKey(12)
+        g_b = jax.random.normal(key, (D, R_MAX))
+        g_a = jax.random.normal(jax.random.fold_in(key, 1), (R_MAX, N))
+        res = aggregate_raflora(bs, as_, [4, 4], [1.0, 1.0],
+                                rank_levels=LEVELS, global_b=g_b,
+                                global_a=g_a, backend=backend)
+        # the aggregate must contain the exact global (5..16) slice
+        expected_tail = np.asarray(g_b[:, 4:]) @ np.asarray(g_a[4:, :])
+        factors_mean = (np.asarray(bs[0] @ as_[0])
+                        + np.asarray(bs[1] @ as_[1])) / 2
+        got = np.asarray(res.b_g @ res.a_g)
+        want = svd_truncate(factors_mean + expected_tail, R_MAX)
+        assert np.allclose(got, want, atol=1e-3)
+
+
+class TestStackedAPI:
+    """aggregate_stack / aggregate_grouped: the batched round engine's
+    first-class bucketed entry points must match per-adapter calls."""
+
+    @pytest.mark.parametrize("method", ["hetlora", "flexlora", "raflora",
+                                        "flora", "ffa"])
+    def test_stack_matches_per_adapter(self, setup, method):
+        key, ranks, n_k, _ = setup
+        P = 3
+        per_parent = []
+        for j in range(P):
+            factors = make_factors(jax.random.fold_in(key, 200 + j), ranks)
+            per_parent.append(pad_stack(factors, R_MAX))
+        bs = jnp.stack([b for b, _ in per_parent], axis=1)   # (M, P, d, r)
+        as_ = jnp.stack([a for _, a in per_parent], axis=1)
+        g_b = jax.random.normal(jax.random.fold_in(key, 300), (P, D, R_MAX))
+        g_a = jax.random.normal(jax.random.fold_in(key, 301), (P, R_MAX, N))
+        agg = Aggregator(method, LEVELS, backend="factored")
+        res = agg.aggregate_stack(bs, as_, ranks, n_k, global_b=g_b,
+                                  global_a=g_a)
+        for j in range(P):
+            bs_j, as_j = per_parent[j]
+            ref = agg.aggregate_stack(bs_j, as_j, ranks, n_k,
+                                      global_b=g_b[j], global_a=g_a[j])
+            np.testing.assert_allclose(
+                np.asarray(res.b_g[j] @ res.a_g[j]),
+                np.asarray(ref.b_g @ ref.a_g), atol=1e-4)
+            if res.merge_delta is not None:
+                np.testing.assert_allclose(np.asarray(res.merge_delta[j]),
+                                           np.asarray(ref.merge_delta),
+                                           atol=1e-4)
+
+    def test_stack_matches_aggregate_layer(self, setup):
+        key, ranks, n_k, factors = setup
+        bs, as_ = pad_stack(factors, R_MAX)
+        g_b = jnp.zeros((D, R_MAX))
+        g_a = jnp.zeros((R_MAX, N))
+        agg = Aggregator("raflora", LEVELS, backend="factored")
+        res_stack = agg.aggregate_stack(bs, as_, ranks, n_k, global_b=g_b,
+                                        global_a=g_a)
+        res_layer = agg.aggregate_layer(factors, ranks, n_k, g_b, g_a)
+        np.testing.assert_allclose(np.asarray(res_stack.b_g @ res_stack.a_g),
+                                   np.asarray(res_layer.b_g @ res_layer.a_g),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(res_stack.sigma),
+                                   np.asarray(res_layer.sigma), atol=1e-4)
+
+    @pytest.mark.parametrize("backend", ["dense", "factored", "kernel"])
+    def test_grouped_matches_stack(self, setup, backend):
+        """aggregate_grouped (assembly inside jit) == aggregate_stack on the
+        equivalent pre-assembled bucket, for every backend."""
+        key, ranks, n_k, _ = setup
+        P = 2
+        # rank-homogeneous groups, as the batched engine produces them
+        group_ranks = [[4], [8, 8], [16, 16]]
+        group_nk = [[10.0], [20.0, 15.0], [25.0, 30.0]]
+        group_bs, group_as, bucket_b, bucket_a = [], [], [], []
+        for gi, g_ranks in enumerate(group_ranks):
+            bt, at = [], []
+            for j in range(P):
+                factors = make_factors(
+                    jax.random.fold_in(key, 400 + 10 * gi + j), g_ranks)
+                b_stack = jnp.stack([b for b, _ in factors])
+                a_stack = jnp.stack([a for _, a in factors])
+                bt.append(b_stack)
+                at.append(a_stack)
+            group_bs.append(bt)
+            group_as.append(at)
+        g_b = jax.random.normal(jax.random.fold_in(key, 500), (P, D, R_MAX))
+        g_a = jax.random.normal(jax.random.fold_in(key, 501), (P, R_MAX, N))
+        flat_ranks = [r for g in group_ranks for r in g]
+        flat_nk = [n for g in group_nk for n in g]
+        agg = Aggregator("raflora", LEVELS, backend=backend)
+        res = agg.aggregate_grouped(group_bs, group_as, flat_ranks, flat_nk,
+                                    global_bs=list(g_b),
+                                    global_as=list(g_a))
+        # reference: assemble eagerly, then aggregate_stack
+        from repro.core.aggregation import _pad_rank
+        bs = jnp.concatenate(
+            [_pad_rank(jnp.stack(bt, axis=1), R_MAX, -1)
+             for bt in group_bs])
+        as_ = jnp.concatenate(
+            [_pad_rank(jnp.stack(at, axis=1), R_MAX, -2)
+             for at in group_as])
+        ref = agg.aggregate_stack(bs, as_, flat_ranks, flat_nk,
+                                  global_b=g_b, global_a=g_a)
+        for j in range(P):
+            np.testing.assert_allclose(
+                np.asarray(res.b_g[j] @ res.a_g[j]),
+                np.asarray(ref.b_g[j] @ ref.a_g[j]), atol=1e-4)
+
+
 class TestStackedLayers:
     def test_layerwise_vmap_matches_loop(self, setup):
         """(M, L, d, r) stacked aggregation == per-layer loop."""

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic fixed-grid shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.models.layers.attention import (blockwise_attention,
                                            decode_attention)

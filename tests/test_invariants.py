@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic fixed-grid shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (aggregate_flexlora, aggregate_raflora, coverage,
                         energies, omega_flexlora, omega_raflora, pad_stack,

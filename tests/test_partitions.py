@@ -1,7 +1,10 @@
 """Rank-partition machinery: Eq. 8 invariants as property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic fixed-grid shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (boundaries, boundary_of_index, coverage,
                         omega_flexlora, omega_raflora, partition_bounds,

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic fixed-grid shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.energy import (effective_rank, energy_breakdown,
                                higher_rank_energy_ratio, rho)
@@ -137,6 +140,16 @@ class TestEnergyMetrics:
         s = jnp.linspace(10, 0.1, 64)
         bd = energy_breakdown(s, [8, 16, 32, 48, 64])
         assert np.isclose(sum(bd.values()), 1.0)
+
+    def test_collapsed_before_any_record(self):
+        """Regression: collapsed() used to IndexError on an empty trace."""
+        from repro.core.energy import EnergyTrace
+        trace = EnergyTrace([8, 16, 32])
+        assert trace.collapsed() is False
+        trace.record(jnp.concatenate([jnp.ones(8), jnp.full(24, 1e-6)]))
+        assert trace.collapsed() is True
+        trace.record(jnp.ones(32))
+        assert trace.collapsed() is False
 
 
 class TestShardingSpecs:

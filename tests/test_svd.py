@@ -1,0 +1,99 @@
+"""Dense vs factored SVD reallocation: the equivalence core/svd.py claims.
+
+``svd_realloc_factored`` (QR-reduce + small-core SVD, DESIGN.md §4.2) must
+reproduce ``svd_realloc_dense`` (materialize + full SVD) up to float
+round-off on exactly the stacks the server produces: weighted sums of
+heterogeneous-rank client factors, with and without the Eq. 8
+fallback-augmented global slices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pad_stack
+from repro.core.partitions import omega_flexlora, omega_raflora
+from repro.core.svd import (check_fallback_globals, dense_from_weighted,
+                            factored_from_weighted, svd_realloc_dense,
+                            svd_realloc_factored)
+
+LEVELS = [4, 8, 16]
+R_MAX = 16
+D, N = 24, 40
+
+
+def make_stack(seed, ranks):
+    key = jax.random.PRNGKey(seed)
+    factors = []
+    for i, r in enumerate(ranks):
+        kb, ka = jax.random.split(jax.random.fold_in(key, i))
+        factors.append((jax.random.normal(kb, (D, r)),
+                        jax.random.normal(ka, (r, N))))
+    return pad_stack(factors, R_MAX)
+
+
+class TestDenseFactoredEquivalence:
+    @pytest.mark.parametrize("seed,ranks", [
+        (0, [4, 8, 16]),
+        (1, [4, 4, 8, 8, 16, 16]),
+        (2, [16]),
+        (3, [4] * 5),
+    ])
+    def test_weighted_stacks_agree(self, seed, ranks):
+        """Random heterogeneous-rank stacks, FlexLoRA weights."""
+        bs, as_ = make_stack(seed, ranks)
+        n_k = np.linspace(5, 30, len(ranks))
+        omega = jnp.asarray(omega_flexlora(ranks, n_k, R_MAX))
+        dw = dense_from_weighted(bs, as_, omega)
+        b_d, a_d, s_d = svd_realloc_dense(dw, R_MAX)
+        u_c, v_c = factored_from_weighted(bs, as_, omega)
+        b_f, a_f, s_f = svd_realloc_factored(u_c, v_c, R_MAX)
+        np.testing.assert_allclose(np.asarray(s_d), np.asarray(s_f),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(b_d @ a_d),
+                                   np.asarray(b_f @ a_f), atol=1e-4)
+
+    def test_fallback_augmented_stack_agrees(self):
+        """raFLoRA's Eq. 8 fallback: the global slice enters both backends
+        identically."""
+        ranks = [4, 4]                    # partitions (5..8], (9..16] empty
+        bs, as_ = make_stack(7, ranks)
+        n_k = [3.0, 5.0]
+        omega_np, fb_np = omega_raflora(ranks, n_k, LEVELS)
+        assert fb_np.any()
+        omega, fb = jnp.asarray(omega_np), jnp.asarray(fb_np)
+        key = jax.random.PRNGKey(99)
+        g_b = jax.random.normal(key, (D, R_MAX))
+        g_a = jax.random.normal(jax.random.fold_in(key, 1), (R_MAX, N))
+        dw = dense_from_weighted(bs, as_, omega, g_b, g_a, fb)
+        b_d, a_d, s_d = svd_realloc_dense(dw, R_MAX)
+        u_c, v_c = factored_from_weighted(bs, as_, omega, g_b, g_a, fb)
+        b_f, a_f, s_f = svd_realloc_factored(u_c, v_c, R_MAX)
+        np.testing.assert_allclose(np.asarray(s_d), np.asarray(s_f),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(b_d @ a_d),
+                                   np.asarray(b_f @ a_f), atol=1e-4)
+
+    def test_factored_zero_pads_rank_deficient(self):
+        """R < r_max: trailing singular values exactly zero, factors
+        zero-padded -- the aggregate has algebraic rank <= R."""
+        key = jax.random.PRNGKey(5)
+        u_c = jax.random.normal(key, (D, 6))
+        v_c = jax.random.normal(jax.random.fold_in(key, 1), (6, N))
+        b_f, a_f, s_f = svd_realloc_factored(u_c, v_c, R_MAX)
+        assert b_f.shape == (D, R_MAX) and a_f.shape == (R_MAX, N)
+        assert np.all(np.asarray(s_f[6:]) == 0)
+        assert not np.any(np.asarray(b_f[:, 6:]))
+        np.testing.assert_allclose(np.asarray(b_f @ a_f),
+                                   np.asarray(u_c @ v_c), atol=1e-4)
+
+
+class TestFallbackGuard:
+    def test_check_requires_globals(self):
+        fb = jnp.ones((R_MAX,))
+        with pytest.raises(ValueError, match="global_b and global_a"):
+            check_fallback_globals(fb, None, None)
+        with pytest.raises(ValueError, match="global_a"):
+            check_fallback_globals(fb, jnp.zeros((D, R_MAX)), None)
+        # no fallback -> globals optional
+        check_fallback_globals(None, None, None)

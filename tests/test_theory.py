@@ -1,7 +1,10 @@
 """Theorem 1 / Appendix A-B: machine-checked theory, incl. property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic fixed-grid shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (SampledSim, collapse_bound, contraction_factors,
                         coverage, h_sampling, mean_field_floor,

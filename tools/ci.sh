@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI entry point: deterministic, offline, CPU-pinned test tiers.
+#
+#   tools/ci.sh            # tier-1: the full suite (ROADMAP "Tier-1 verify")
+#   tools/ci.sh smoke      # fast tier: skips the slow federated integration
+#                          # and dry-run modules (~seconds vs ~minutes)
+#   tools/ci.sh bench      # quick benchmark sweep (includes round_latency)
+#
+# JAX_PLATFORMS=cpu keeps runs identical on machines that also have
+# accelerators; PYTHONHASHSEED pins dict/hash iteration for determinism.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS=cpu
+export PYTHONHASHSEED=0
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+tier="${1:-tier1}"
+
+case "$tier" in
+  tier1)
+    exec python -m pytest -x -q
+    ;;
+  smoke)
+    exec python -m pytest -x -q -k "not federation and not dryrun"
+    ;;
+  bench)
+    exec python -m benchmarks.run --quick
+    ;;
+  *)
+    echo "usage: tools/ci.sh [tier1|smoke|bench]" >&2
+    exit 2
+    ;;
+esac
