@@ -7,6 +7,15 @@ rounds are excluded; the two engines are timed INTERLEAVED, round by round,
 so drifting background load on shared-CPU machines biases both equally; the
 reported number is the median over the timed rounds.
 
+``--engine sharded`` (ISSUE 2) instead sweeps the SHARDED engine over shard
+counts (1, 2, 4, ... up to the visible device count): one experiment per
+``("data",)`` mesh size, recording per-round medians vs shard count into the
+same JSON artifact under ``"sharded"``. The sweep is STANDALONE-ONLY
+(``python -m benchmarks.bench_round_latency --engine sharded``): it must
+force an 8-virtual-device CPU host platform BEFORE jax initializes, which
+run.py/``tools/ci.sh bench`` -- whose `run()` entry stays the
+sequential-vs-batched study -- cannot do after importing other benches.
+
 Writes a JSON artifact (benchmarks/artifacts/round_latency.json) with the
 raw per-round times, the medians, and the speedup, and emits the usual CSV
 rows for run.py.
@@ -25,8 +34,22 @@ ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
                         "round_latency.json")
 
 
+def _merge_artifact(update: dict) -> dict:
+    """Read-modify-write the shared JSON artifact so the batched-vs-seq
+    study and the sharded shard-count sweep never clobber each other."""
+    result = {}
+    if os.path.exists(ARTIFACT):
+        with open(ARTIFACT) as f:
+            result = json.load(f)
+    result.update(update)
+    os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
 def _make(engine: str, *, rounds: int, d_model: int, batches_per_round: int,
-          local_batch_size: int):
+          local_batch_size: int, mesh=None):
     from repro.federation.experiment import build_experiment
     return build_experiment(
         "raflora",
@@ -36,7 +59,7 @@ def _make(engine: str, *, rounds: int, d_model: int, batches_per_round: int,
         lora_overrides={"rank_levels": (4, 8, 16),
                         "rank_probs": (0.34, 0.33, 0.33)},
         samples_per_class=40, num_classes=8, d_model=d_model,
-        batches_per_round=batches_per_round, round_engine=engine)
+        batches_per_round=batches_per_round, round_engine=engine, mesh=mesh)
 
 
 def run(rounds: int = 12, warmup: int = 2, d_model: int = 64,
@@ -58,7 +81,7 @@ def run(rounds: int = 12, warmup: int = 2, d_model: int = 64,
 
     medians = {eng: float(np.median(ts)) for eng, ts in times.items()}
     speedup = medians["sequential"] / medians["batched"]
-    result = {
+    result = _merge_artifact({
         "config": {"clients_per_round": 8, "rounds_timed": rounds,
                    "warmup_rounds": warmup, "d_model": d_model,
                    "batches_per_round": batches_per_round,
@@ -67,10 +90,7 @@ def run(rounds: int = 12, warmup: int = 2, d_model: int = 64,
         "per_round_s": {eng: ts for eng, ts in times.items()},
         "median_s": medians,
         "speedup_batched_over_sequential": speedup,
-    }
-    os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
-    with open(ARTIFACT, "w") as f:
-        json.dump(result, f, indent=2)
+    })
 
     for eng in servers:
         emit(f"round_latency/{eng}", medians[eng] * 1e6,
@@ -80,5 +100,67 @@ def run(rounds: int = 12, warmup: int = 2, d_model: int = 64,
     return result
 
 
+def run_sharded(rounds: int = 8, warmup: int = 2, d_model: int = 64,
+                batches_per_round: int = 1,
+                local_batch_size: int = 16) -> dict:
+    """Sharded-engine latency vs shard count (ISSUE 2 acceptance artifact).
+
+    One experiment per power-of-two shard count that fits the visible
+    devices, all timed the same way as ``run``; results merge into the
+    existing artifact so the two engine studies live side by side.
+    """
+    import jax
+    from repro.launch.mesh import make_fl_mesh
+    shard_counts = [s for s in (1, 2, 4, 8, 16)
+                    if s <= jax.device_count()]
+    total = rounds + warmup
+    servers = {s: _make("sharded", rounds=total, d_model=d_model,
+                        batches_per_round=batches_per_round,
+                        local_batch_size=local_batch_size,
+                        mesh=make_fl_mesh(s)).server
+               for s in shard_counts}
+    times = {s: [] for s in servers}
+    for _ in range(warmup):                 # jit/compile time excluded
+        for srv in servers.values():
+            srv.run_round()
+    for _ in range(rounds):
+        for s, srv in servers.items():      # interleaved: shared load drift
+            t0 = time.perf_counter()
+            srv.run_round()
+            times[s].append(time.perf_counter() - t0)
+
+    medians = {s: float(np.median(ts)) for s, ts in times.items()}
+    sharded = {
+        "config": {"clients_per_round": 8, "rounds_timed": rounds,
+                   "warmup_rounds": warmup, "d_model": d_model,
+                   "batches_per_round": batches_per_round,
+                   "local_batch_size": local_batch_size,
+                   "rank_levels": [4, 8, 16], "method": "raflora",
+                   "device_count": jax.device_count()},
+        "shard_counts": shard_counts,
+        "per_round_s": {str(s): ts for s, ts in times.items()},
+        "median_s": {str(s): m for s, m in medians.items()},
+    }
+    _merge_artifact({"sharded": sharded})
+
+    for s in shard_counts:
+        emit(f"round_latency/sharded_{s}", medians[s] * 1e6,
+             f"median_round_ms={medians[s] * 1e3:.1f}")
+    print(f"# artifact: {ARTIFACT}")
+    return sharded
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("batched", "sharded"),
+                    default="batched")
+    args = ap.parse_args()
+    if args.engine == "sharded":
+        # must precede the first jax initialization: standalone sharded
+        # sweeps get an 8-virtual-device CPU host platform
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+        run_sharded()
+    else:
+        run()

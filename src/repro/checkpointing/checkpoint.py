@@ -25,13 +25,34 @@ def _flatten(tree) -> dict:
     return flat
 
 
+def _json_safe(obj):
+    """Recursively convert numpy scalars/arrays so metadata always dumps.
+
+    Server metadata now carries rng bit-generator state, energy traces and
+    round history; numpy integer/float scalars sneak in easily and
+    ``json.dump`` rejects them."""
+    if isinstance(obj, dict):
+        return {str(k): _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    return obj
+
+
 def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     np.savez(path, **flat)
     if metadata is not None:
         with open(path + ".meta.json", "w") as f:
-            json.dump(metadata, f)
+            json.dump(_json_safe(metadata), f)
 
 
 def load_pytree(path: str, like) -> Any:

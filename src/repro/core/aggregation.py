@@ -33,9 +33,10 @@ import numpy as np
 import functools
 
 from repro.core import partitions as parts
-from repro.core.svd import (check_fallback_globals, dense_from_weighted,
-                            factored_from_weighted, svd_realloc_dense,
-                            svd_realloc_factored)
+from repro.core.svd import (check_fallback_globals, dense_fallback_term,
+                            dense_from_weighted, factored_append_fallback,
+                            factored_from_weighted, factored_stack_batched,
+                            svd_realloc_dense, svd_realloc_factored)
 
 
 @dataclass
@@ -294,6 +295,156 @@ def _grouped_core(group_bs, group_as, warg, global_bs, global_as, fallback,
                              backend, method)
 
 
+# -- sharded whole-bucket pipelines (sharded round engine) -------------------
+#
+# DESIGN.md §5: with clients sharded over the mesh's ``data`` axis, every
+# reduction this family performs -- plain weighted factor averages, FLoRA's
+# dW stacking, and the weighted-diagonal contraction behind the SVD-realloc
+# methods -- becomes a per-shard partial sum followed by ONE ``jax.lax.psum``.
+# The dense family all-reduces the (..., d, n) contraction; the factored
+# family all-reduces the zero-scattered (d, R) / (R, n) factor stack (each
+# shard writes its own column block, so the psum is an all-gather in
+# disguise and the reduced stack equals the single-device one up to client
+# ordering, which the SVD does not see). The SVD reallocation itself is the
+# UNCHANGED single-device math (``svd_realloc_dense`` /
+# ``svd_realloc_factored``) applied to the reduced, replicated result.
+
+def _realloc_dense_lead(dw, r_max):
+    """Batched ``svd_realloc_dense`` over any leading bucket/layer axes."""
+    lead, (d, n) = dw.shape[:-2], dw.shape[-2:]
+    b, a, s = jax.vmap(functools.partial(svd_realloc_dense, r_max=r_max))(
+        dw.reshape((-1, d, n)))
+    return (b.reshape(lead + (d, r_max)), a.reshape(lead + (r_max, n)),
+            s.reshape(lead + (r_max,)))
+
+
+def _realloc_factored_lead(u_c, v_c, r_max):
+    """Batched ``svd_realloc_factored`` over any leading bucket/layer axes."""
+    lead = u_c.shape[:-2]
+    d, rr = u_c.shape[-2:]
+    n = v_c.shape[-1]
+    b, a, s = jax.vmap(functools.partial(
+        svd_realloc_factored, r_max=r_max))(
+        u_c.reshape((-1, d, rr)), v_c.reshape((-1, rr, n)))
+    return (b.reshape(lead + (d, r_max)), a.reshape(lead + (r_max, n)),
+            s.reshape(lead + (r_max,)))
+
+
+def _sharded_partial(group_bs, group_as, group_w, gb, ga, *, r_max,
+                     backend, method, axes, axis_sizes):
+    """Per-shard body (runs INSIDE shard_map): assemble the shard's local
+    client block of the bucket, compute its partial reduction, psum.
+
+    ``group_w`` carries the per-group client weight vectors (avg family) or
+    omega matrix rows (SVD family) already zeroed for ghost clients, sharded
+    along the client axis exactly like the factor stacks, so each shard
+    weights only its resident clients. ``axes`` is the tuple of mesh axes
+    the client axis is sharded over (the live engine's 1-D mesh uses
+    ``("data",)``; the multi-pod dry run uses ``("pod", "data")`` so the
+    pod axis shares the work instead of replicating it).
+    """
+    axis = axes if len(axes) > 1 else axes[0]
+    bs = jnp.concatenate([_pad_rank(jnp.stack(bt, axis=1), r_max, -1)
+                          for bt in group_bs])        # (m_loc, P, ..., d, r)
+    as_ = jnp.concatenate([_pad_rank(jnp.stack(at, axis=1), r_max, -2)
+                           for at in group_as])       # (m_loc, P, ..., r, n)
+    w = jnp.concatenate(group_w)
+    if method in ("fedavg", "hetlora", "ffa"):
+        wc = w.astype(bs.dtype)
+        a_g = jax.lax.psum(weighted_avg(as_, wc), axis)
+        if method == "ffa":           # frozen factor: keep the global value
+            return gb, a_g
+        return jax.lax.psum(weighted_avg(bs, wc), axis), a_g
+    if method == "flora":
+        b_g, a_g, dw = _flora_delta(bs, as_, w)
+        return b_g, a_g, jax.lax.psum(dw, axis)
+    # SVD family: w is the (m_loc, r_max) omega matrix
+    if backend == "factored":
+        u_loc, v_loc = factored_stack_batched(bs, as_, w)
+        width = u_loc.shape[-1]
+        shard_idx = jnp.int32(0)        # flat shard index over the axes
+        n_shards = 1
+        for a, size in zip(axes, axis_sizes):
+            shard_idx = shard_idx * size + jax.lax.axis_index(a)
+            n_shards *= size
+        off = shard_idx * width
+        u_full = jnp.zeros(u_loc.shape[:-1] + (n_shards * width,),
+                           u_loc.dtype)
+        v_full = jnp.zeros(v_loc.shape[:-2] + (n_shards * width,)
+                           + v_loc.shape[-1:], v_loc.dtype)
+        u_full = jax.lax.dynamic_update_slice_in_dim(u_full, u_loc, off,
+                                                     axis=-1)
+        v_full = jax.lax.dynamic_update_slice_in_dim(v_full, v_loc, off,
+                                                     axis=-2)
+        return jax.lax.psum(u_full, axis), jax.lax.psum(v_full, axis)
+    # dense (and kernel: the per-shard partial is the same contraction the
+    # layered Pallas grid computes post-reduction; on the sharded path the
+    # partial runs as a plain einsum so the collective stays a (d, n) psum)
+    dw = jnp.einsum("m...dr,mr,m...rn->...dn", bs.astype(jnp.float32),
+                    w.astype(jnp.float32), as_.astype(jnp.float32))
+    return jax.lax.psum(dw, axis)
+
+
+_SHARDED_FN_CACHE: Dict[tuple, "object"] = {}
+
+
+def sharded_grouped_fn(mesh, r_max: int, backend: str, method: str,
+                       axes: Tuple[str, ...] = ("data",)):
+    """The jitted sharded-bucket pipeline for one (mesh, method, backend).
+
+    Signature: fn(group_bs, group_as, group_w, global_bs, global_as,
+    fallback) -> (b_g, a_g, sigma|None, merge_delta|None), mirroring
+    ``_grouped_core`` but with every per-group array sharded over the
+    mesh axes in ``axes`` on its leading client dimension (the live
+    engine's 1-D FL mesh uses ``("data",)``; the multi-pod dry run shards
+    over ``("pod", "data")``). Cached per key so repeated rounds reuse one
+    compilation; also the lowering target of ``launch/fl_dryrun.py`` (the
+    dry-run and the live engine share this exact program).
+    """
+    key = (mesh, r_max, backend, method, tuple(axes))
+    if key in _SHARDED_FN_CACHE:
+        return _SHARDED_FN_CACHE[key]
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    axes = tuple(axes)
+    axis_sizes = tuple(mesh.shape[a] for a in axes)
+    partial_fn = functools.partial(
+        _sharded_partial, r_max=r_max, backend=backend, method=method,
+        axes=axes, axis_sizes=axis_sizes)
+
+    def fn(group_bs, group_as, group_w, global_bs, global_as, fallback):
+        check_fallback_globals(fallback, global_bs, global_as)
+        gb = None if global_bs is None else jnp.stack(global_bs)
+        ga = None if global_as is None else jnp.stack(global_as)
+        cl = P(axes if len(axes) > 1 else axes[0])
+        red = shard_map(partial_fn, mesh=mesh,
+                        in_specs=(cl, cl, cl, P(), P()),
+                        out_specs=P(), check_rep=False)(
+            group_bs, group_as, group_w, gb, ga)
+        if method in ("fedavg", "hetlora", "ffa"):
+            b_g, a_g = red
+            return b_g, a_g, None, None
+        if method == "flora":
+            b_g, a_g, dw = red
+            return b_g, a_g, None, dw
+        if backend == "factored":
+            u_c, v_c = red
+            if fallback is not None:
+                u_c, v_c = factored_append_fallback(u_c, v_c, gb, ga,
+                                                    fallback)
+            b_g, a_g, sigma = _realloc_factored_lead(u_c, v_c, r_max)
+        else:
+            dw = red
+            if fallback is not None:
+                dw = dw + dense_fallback_term(gb, ga, fallback)
+            b_g, a_g, sigma = _realloc_dense_lead(dw, r_max)
+        return b_g, a_g, sigma, None
+
+    jitted = jax.jit(fn)
+    _SHARDED_FN_CACHE[key] = jitted
+    return jitted
+
+
 @dataclass
 class Aggregator:
     """Aggregates a round of client adapter uploads, layer by layer."""
@@ -407,4 +558,42 @@ class Aggregator:
             None if global_as is None else tuple(global_as),
             fallback, r_max=max(self.rank_levels), backend=self.backend,
             method=self.method)
+        return AggregationResult(b_g, a_g, sigma, merge_delta=dw)
+
+    def aggregate_grouped_sharded(self, group_bs, group_as, ranks, n_k,
+                                  mesh, global_bs=None, global_as=None
+                                  ) -> AggregationResult:
+        """Sharded round engine hot path: ``aggregate_grouped`` with the
+        client axis sharded over the mesh's ``data`` axis and every
+        reduction backed by one ``jax.lax.psum`` (DESIGN.md §5).
+
+        Inputs mirror ``aggregate_grouped`` except that each group's client
+        axis must be padded to a multiple of the data-axis size and
+        ``n_k[j] == 0`` marks a ghost (padding) client: weights and omega
+        rows are computed from the REAL clients only and scattered with
+        zeros at ghost positions, so ghosts contribute exactly nothing to
+        any reduction AND leave the raFLoRA effective-contributor counts /
+        Eq. 8 fallback untouched.
+        """
+        n_shards = mesh.shape["data"]
+        sizes = [bt[0].shape[0] for bt in group_bs]
+        assert all(g % n_shards == 0 for g in sizes), (sizes, n_shards)
+        n_arr = np.asarray(n_k, dtype=np.float64)
+        real = np.flatnonzero(n_arr > 0)
+        warg_real, fallback = self._weight_args(
+            [ranks[i] for i in real], n_arr[real])
+        warg_np = np.asarray(warg_real)
+        warg = np.zeros((len(n_k),) + warg_np.shape[1:], warg_np.dtype)
+        warg[real] = warg_np
+        group_w = tuple(jnp.asarray(w) for w in
+                        np.split(warg, np.cumsum(sizes)[:-1]))
+        fn = sharded_grouped_fn(mesh, max(self.rank_levels), self.backend,
+                                self.method)
+        b_g, a_g, sigma, dw = fn(
+            tuple(tuple(bt) for bt in group_bs),
+            tuple(tuple(at) for at in group_as),
+            group_w,
+            None if global_bs is None else tuple(global_bs),
+            None if global_as is None else tuple(global_as),
+            None if fallback is None else jnp.asarray(fallback))
         return AggregationResult(b_g, a_g, sigma, merge_delta=dw)

@@ -59,14 +59,32 @@ class EnergyTrace:
     """Round-by-round energy statistics of one adapter (or model average)."""
 
     rank_levels: Sequence[int]
-    rho_r1: list = None
-    eff_rank: list = None
-    breakdown: list = None
+    rho_r1: Optional[list] = None
+    eff_rank: Optional[list] = None
+    breakdown: Optional[list] = None
 
     def __post_init__(self):
-        self.rho_r1 = []
-        self.eff_rank = []
-        self.breakdown = []
+        # default_factory semantics: None means "fresh empty trace", while
+        # caller-provided histories (e.g. checkpoint restore) are kept --
+        # the old unconditional reset silently discarded them
+        self.rho_r1 = [] if self.rho_r1 is None else list(self.rho_r1)
+        self.eff_rank = [] if self.eff_rank is None else list(self.eff_rank)
+        self.breakdown = ([] if self.breakdown is None
+                          else list(self.breakdown))
+
+    def state_dict(self) -> dict:
+        """JSON-serializable trace state for checkpoint metadata."""
+        return {"rank_levels": [int(r) for r in self.rank_levels],
+                "rho_r1": list(self.rho_r1),
+                "eff_rank": list(self.eff_rank),
+                "breakdown": list(self.breakdown)}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "EnergyTrace":
+        return cls(rank_levels=tuple(state["rank_levels"]),
+                   rho_r1=state.get("rho_r1"),
+                   eff_rank=state.get("eff_rank"),
+                   breakdown=state.get("breakdown"))
 
     def record(self, sigma) -> None:
         r1 = min(self.rank_levels)

@@ -111,6 +111,57 @@ def factored_from_weighted(bs: jnp.ndarray, as_: jnp.ndarray,
     return u_c, v_c
 
 
+def factored_stack_batched(bs: jnp.ndarray, as_: jnp.ndarray,
+                           omega: jnp.ndarray
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``factored_from_weighted``'s client stack for ANY number of batch
+    axes between the client axis and the matrix axes.
+
+    bs (M, *B, d, r); as_ (M, *B, r, n); omega (M, r). Returns
+    u_c (*B, d, M*r), v_c (*B, M*r, n) -- the per-client sqrt-split diagonal
+    weighting of the 3-D path, applied bucket-wide. The sharded round engine
+    builds each mesh shard's LOCAL stack with this and all-reduces the
+    result (DESIGN.md §5); no fallback handling here because the Eq. 8
+    fallback columns must be appended exactly once, AFTER the cross-shard
+    reduction.
+    """
+    m, r = bs.shape[0], bs.shape[-1]
+    d, n = bs.shape[-2], as_.shape[-1]
+    lead = bs.shape[1:-2]
+    sq = jnp.sqrt(jnp.maximum(omega, 0.0)).astype(jnp.float32)   # (M, r)
+    sq_b = sq.reshape((m,) + (1,) * len(lead) + (1, r))
+    sq_a = sq.reshape((m,) + (1,) * len(lead) + (r, 1))
+    u_parts = bs.astype(jnp.float32) * sq_b                      # (M, *B, d, r)
+    v_parts = as_.astype(jnp.float32) * sq_a                     # (M, *B, r, n)
+    u_c = jnp.moveaxis(u_parts, 0, -2).reshape(lead + (d, m * r))
+    v_c = jnp.moveaxis(v_parts, 0, -3).reshape(lead + (m * r, n))
+    return u_c, v_c
+
+
+def factored_append_fallback(u_c: jnp.ndarray, v_c: jnp.ndarray,
+                             global_b: jnp.ndarray, global_a: jnp.ndarray,
+                             fallback: jnp.ndarray
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Append the Eq. 8 empty-partition fallback columns to a (possibly
+    batch-stacked) factored stack: u_c (*B, d, R), global_b (*B, d, r_max)."""
+    fb = jnp.sqrt(jnp.maximum(fallback, 0.0)).astype(jnp.float32)
+    u_c = jnp.concatenate(
+        [u_c, global_b.astype(jnp.float32) * fb[None, :]], axis=-1)
+    v_c = jnp.concatenate(
+        [v_c, global_a.astype(jnp.float32) * fb[:, None]], axis=-2)
+    return u_c, v_c
+
+
+def dense_fallback_term(global_b: jnp.ndarray, global_a: jnp.ndarray,
+                        fallback: jnp.ndarray) -> jnp.ndarray:
+    """The Eq. 8 empty-partition term G_B diag(fallback) G_A, for global
+    factors with any leading batch axes. The single implementation behind
+    the dense path's fallback, eager AND sharded."""
+    return jnp.einsum("...dr,r,...rn->...dn", global_b.astype(jnp.float32),
+                      fallback.astype(jnp.float32),
+                      global_a.astype(jnp.float32))
+
+
 def dense_from_weighted(bs: jnp.ndarray, as_: jnp.ndarray, omega: jnp.ndarray,
                         global_b: Optional[jnp.ndarray] = None,
                         global_a: Optional[jnp.ndarray] = None,
@@ -120,7 +171,5 @@ def dense_from_weighted(bs: jnp.ndarray, as_: jnp.ndarray, omega: jnp.ndarray,
     dw = jnp.einsum("mdr,mr,mrn->dn", bs.astype(jnp.float32),
                     omega.astype(jnp.float32), as_.astype(jnp.float32))
     if fallback is not None:
-        dw = dw + jnp.einsum("dr,r,rn->dn", global_b.astype(jnp.float32),
-                             fallback.astype(jnp.float32),
-                             global_a.astype(jnp.float32))
+        dw = dw + dense_fallback_term(global_b, global_a, fallback)
     return dw

@@ -133,6 +133,46 @@ class LocalTrainer:
             self._vstep_cache[key] = jax.jit(run)
         return self._vstep_cache[key]
 
+    def _masked_run_fn(self, steps: int) -> Callable:
+        """The un-jitted all-rank masked group body. The client axis size is
+        read from ``mask`` at trace time, so the SAME function serves the
+        whole-round jit (``masked_runner``) and the per-shard body of the
+        sharded round engine (``masked_runner_sharded``), which hands it the
+        local client block of each mesh shard."""
+        raw = self._make_raw_step_scaled()
+        vstep = jax.vmap(raw, in_axes=(0, 0, None, 0, None, 0))
+        opt = self.opt
+
+        def run(global_lora, base, stacks, lr, mask, scales):
+            size = mask.shape[0]
+
+            def tile_mask(path, x):
+                if x is None:
+                    return None
+                t = jnp.repeat(x[None], size, axis=0)
+                key_ = getattr(path[-1], "key", "")
+                lead = (1,) * (x.ndim - 2)
+                if key_ == "lora_a":   # (M, ..., r_max, in): mask rows
+                    return t * mask.reshape(
+                        (size,) + lead + (mask.shape[1], 1)).astype(t.dtype)
+                if key_ == "lora_b":   # (M, ..., out, r_max): mask cols
+                    return t * mask.reshape(
+                        (size,) + lead + (1, mask.shape[1])).astype(t.dtype)
+                return t               # lora_m and anything else
+            lora = jax.tree_util.tree_map_with_path(
+                tile_mask, global_lora, is_leaf=lambda x: x is None)
+            opt_state = opt.init(lora)
+            opt_state = opt_state._replace(
+                step=jnp.zeros((size,), jnp.int32))
+            metrics = {}
+            for t in range(steps):     # static unroll (1-2 typically)
+                batch = jax.tree.map(lambda x: x[t], stacks)
+                lora, opt_state, metrics = vstep(lora, opt_state, base,
+                                                 batch, lr, scales)
+            return lora, metrics
+
+        return run
+
     def masked_runner(self, steps: int) -> Callable:
         """One jitted call training ALL clients of a round regardless of
         rank: tile + rank-mask the global adapters inside the program, then
@@ -140,39 +180,31 @@ class LocalTrainer:
         Cache keys on steps; jit re-specializes per round size."""
         key = ("masked", steps)
         if key not in self._vstep_cache:
-            raw = self._make_raw_step_scaled()
-            vstep = jax.vmap(raw, in_axes=(0, 0, None, 0, None, 0))
-            opt = self.opt
+            self._vstep_cache[key] = jax.jit(self._masked_run_fn(steps))
+        return self._vstep_cache[key]
 
-            def run(global_lora, base, stacks, lr, mask, scales):
-                size = mask.shape[0]
+    def masked_runner_sharded(self, steps: int, mesh) -> Callable:
+        """The all-rank masked runner as a ``shard_map`` over the mesh's
+        ``data`` axis (DESIGN.md §5): each shard runs the IDENTICAL masked
+        vmapped step body on its contiguous block of the client axis, with
+        base weights and global adapters replicated. Per-client training is
+        independent, so device placement changes nothing mathematically --
+        batched == sharded up to XLA scheduling round-off.
 
-                def tile_mask(path, x):
-                    if x is None:
-                        return None
-                    t = jnp.repeat(x[None], size, axis=0)
-                    key_ = getattr(path[-1], "key", "")
-                    lead = (1,) * (x.ndim - 2)
-                    if key_ == "lora_a":   # (M, ..., r_max, in): mask rows
-                        return t * mask.reshape(
-                            (size,) + lead + (mask.shape[1], 1)).astype(t.dtype)
-                    if key_ == "lora_b":   # (M, ..., out, r_max): mask cols
-                        return t * mask.reshape(
-                            (size,) + lead + (1, mask.shape[1])).astype(t.dtype)
-                    return t               # lora_m and anything else
-                lora = jax.tree_util.tree_map_with_path(
-                    tile_mask, global_lora, is_leaf=lambda x: x is None)
-                opt_state = opt.init(lora)
-                opt_state = opt_state._replace(
-                    step=jnp.zeros((size,), jnp.int32))
-                metrics = {}
-                for t in range(steps):     # static unroll (1-2 typically)
-                    batch = jax.tree.map(lambda x: x[t], stacks)
-                    lora, opt_state, metrics = vstep(lora, opt_state, base,
-                                                     batch, lr, scales)
-                return lora, metrics
-
-            self._vstep_cache[key] = jax.jit(run)
+        Cache keys on (steps, mesh); jit re-specializes per shard size."""
+        key = ("sharded", steps, mesh)
+        if key not in self._vstep_cache:
+            from jax.experimental.shard_map import shard_map
+            from repro.sharding.specs import round_engine_specs
+            run = self._masked_run_fn(steps)
+            spec = round_engine_specs()
+            sharded = shard_map(
+                run, mesh=mesh,
+                in_specs=(spec.replicated, spec.replicated, spec.batch_stack,
+                          spec.replicated, spec.clients, spec.clients),
+                out_specs=(spec.clients, spec.clients),
+                check_rep=False)
+            self._vstep_cache[key] = jax.jit(sharded)
         return self._vstep_cache[key]
 
     def train(self, base, global_lora, rank: int,
@@ -231,6 +263,32 @@ class LocalTrainer:
         scales = jnp.asarray([self.model.lora.scaling(int(r))
                               for r in ranks], jnp.float32)
         runner = self.masked_runner(len(batch_stacks))
+        stacks = (jax.tree.map(lambda *xs: jnp.stack(xs), *batch_stacks)
+                  if batch_stacks else ())
+        return runner(global_lora, base, stacks, jnp.float32(lr),
+                      jnp.asarray(mask), scales)
+
+    def train_group_masked_sharded(self, base, global_lora,
+                                   ranks: Sequence[int],
+                                   batch_stacks: List[dict], lr: float,
+                                   mesh) -> Tuple[dict, dict]:
+        """``train_group_masked`` with the client axis sharded over the
+        mesh's ``data`` axis (one shard_map dispatch for the whole group).
+
+        The caller must have padded the client axis to a multiple of the
+        data-axis size (``federation/server.py`` does this with zero-weight
+        ghost clients); each shard trains its contiguous block. Returned
+        factor stacks (and metrics) come back as globally-addressable arrays
+        sharded over the client axis, ready for the sharded aggregation.
+        """
+        r_max = self.model.lora.r_max
+        n_shards = mesh.shape["data"]
+        assert len(ranks) % n_shards == 0, (len(ranks), n_shards)
+        mask = (np.arange(r_max)[None, :]
+                < np.asarray(ranks)[:, None]).astype(np.float32)
+        scales = jnp.asarray([self.model.lora.scaling(int(r))
+                              for r in ranks], jnp.float32)
+        runner = self.masked_runner_sharded(len(batch_stacks), mesh)
         stacks = (jax.tree.map(lambda *xs: jnp.stack(xs), *batch_stacks)
                   if batch_stacks else ())
         return runner(global_lora, base, stacks, jnp.float32(lr),

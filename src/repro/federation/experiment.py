@@ -86,6 +86,7 @@ def build_experiment(method: str = "raflora", *,
                      noisy_low_rank_std: float = 0.0,
                      server_momentum_beta: float = 0.0,
                      round_engine: str = "batched",
+                     mesh=None,
                      data_seed: int = 0) -> FLExperiment:
     fl = FLConfig(aggregator=method, num_clients=20, participation=0.25,
                   num_rounds=40, local_batch_size=32, learning_rate=2e-3,
@@ -143,7 +144,7 @@ def build_experiment(method: str = "raflora", *,
     server = FederatedLoRA(model, fl, lora, registry, batch_fn,
                            backend=backend, partial_up_to=partial_up_to,
                            server_momentum=server_momentum,
-                           round_engine=round_engine)
+                           round_engine=round_engine, mesh=mesh)
     test_batch = _to_batch(x_te[:512], y_te[:512], data.patches)
     return FLExperiment(server=server, model=model, test_batch=test_batch,
                         registry=registry)

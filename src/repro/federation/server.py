@@ -19,14 +19,19 @@ Two round engines (DESIGN.md "Batched round engine"):
   reference loop, kept for bit-level comparison (tests assert the two match
   to float tolerance) and for debugging.
 
-TPU mapping note (DESIGN.md §5): in the simulated runtime clients execute
-on one device; on a pod, client local steps are data-parallel over the
-``data`` mesh axis and the stacked-factor contraction
-sum_k B_k diag(omega_k) A_k lowers to an all-reduce of per-shard partial
-sums (see launch/fl_dryrun.py).
+* ``round_engine="sharded"`` (DESIGN.md §5): the batched engine's
+  dispatches as shard_map programs over a mesh's ``data`` axis. Sampled
+  clients are partitioned round-robin across shards (padded to equal
+  per-shard counts with zero-weight ghost clients), local training runs
+  the IDENTICAL masked vmapped step body on each shard's client block, and
+  the stacked-factor contraction sum_k B_k diag(omega_k) A_k is computed
+  as per-shard partials reduced by ONE ``jax.lax.psum`` per bucket before
+  the unchanged SVD reallocation (launch/fl_dryrun.py lowers the very same
+  program on the mocked production pod mesh).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
@@ -66,10 +71,23 @@ class FederatedLoRA:
                  backend: str = "factored",
                  partial_up_to: Optional[int] = None,
                  server_momentum=None,
-                 round_engine: str = "batched"):
-        """batch_fn(client_id, rng) -> list of training batches (dicts)."""
-        assert round_engine in ("batched", "sequential"), round_engine
+                 round_engine: str = "batched",
+                 mesh=None):
+        """batch_fn(client_id, rng) -> list of training batches (dicts).
+
+        ``round_engine="sharded"`` runs the batched engine's dispatches as
+        shard_map programs over ``mesh``'s ``data`` axis (defaults to a
+        1-D mesh over every visible device, ``launch/mesh.py::make_fl_mesh``).
+        """
+        assert round_engine in ("batched", "sequential", "sharded"), \
+            round_engine
         self.round_engine = round_engine
+        if round_engine == "sharded" and mesh is None:
+            from repro.launch.mesh import make_fl_mesh
+            mesh = make_fl_mesh()
+        if mesh is not None:
+            assert "data" in mesh.axis_names, mesh.axis_names
+        self.mesh = mesh
         self.model = model
         self.fl = fl
         self.lora_cfg = lora
@@ -191,43 +209,73 @@ class FederatedLoRA:
             losses.append(float(metrics.get("loss", jnp.nan)))
         return client_factors, losses
 
-    def _train_batched(self, client_batches, ranks, lr):
-        """Batched engine: ONE vmapped, jitted multi-client dispatch trains
-        every sampled client regardless of rank (``train_group_masked``:
-        factors zero-masked beyond each client's rank, per-client lora
-        scale vmapped -- exact, see client.py). Clients are grouped only by
-        local step count, which is homogeneous in the common case. Factors
-        stay stacked over each group's client axis -- ``_aggregate_batched``
-        consumes them stacked, so nothing is unstacked per client.
+    def _train_grouped(self, client_batches, ranks, lr, *, sharded: bool):
+        """Batched AND sharded engines: ONE vmapped, jitted multi-client
+        dispatch per step-count group trains every sampled client
+        regardless of rank (``train_group_masked``: factors zero-masked
+        beyond each client's rank, per-client lora scale vmapped -- exact,
+        see client.py). Step counts are homogeneous in the common case.
+        Factors stay stacked over each group's client axis -- the grouped
+        aggregation consumes them stacked, so nothing is unstacked per
+        client.
 
-        Returns (group_factors, losses) with group_factors a list of
-        (client_indices, r_max, {adapter_path: stacked factors}) and losses
-        in sampled-client order."""
+        ``sharded=True`` additionally pads each group's client axis to a
+        multiple of the mesh shard count with GHOST clients and partitions
+        it round-robin across shards (stacked position j -> shard j % S, so
+        ghosts spread evenly instead of piling onto the last shard) before
+        dispatching through the shard_map runner. Ghosts clone the group's
+        first member's batches -- any finite data works because their
+        aggregation weight is identically zero (n_k=0 => omega=0), and
+        cloning keeps their losses/gradients finite so 0-weighted NaNs can
+        never poison the cross-shard psum.
+
+        Returns (group_factors, losses): group_factors entries are
+        (members, r_max, {adapter_path: stacked factors}) where members[j]
+        is the sampled-client index at stacked position j, or -1 for a
+        ghost; losses in sampled-client order (ghost losses dropped)."""
         groups: Dict[int, List[int]] = {}
         for i, batches in enumerate(client_batches):
             groups.setdefault(len(batches), []).append(i)
         group_factors = []
         losses = [float("nan")] * len(ranks)
         r_max = self.lora_cfg.r_max
+        r_min = min(self.lora_cfg.rank_levels)
         for steps, idxs in sorted(groups.items()):
+            members = idxs
+            if sharded:
+                n_shards = self.mesh.shape["data"]
+                members = idxs + [-1] * ((-len(idxs)) % n_shards)
+                # round-robin -> contiguous shard blocks: shard s's block
+                # holds stacked positions {j : j % S == s} of the original
+                # order
+                order = sorted(range(len(members)),
+                               key=lambda j: (j % n_shards, j // n_shards))
+                members = [members[j] for j in order]
+            g_ranks = [ranks[i] if i >= 0 else r_min for i in members]
             stacks = [
                 jax.tree.map(lambda *xs: jnp.stack(xs),
-                             *[client_batches[i][t] for i in idxs])
+                             *[client_batches[i if i >= 0 else idxs[0]][t]
+                               for i in members])
                 for t in range(steps)]
-            lora_g, metrics = self.trainer.train_group_masked(
-                self.base, self.global_lora, [ranks[i] for i in idxs],
-                stacks, lr)
+            if sharded:
+                lora_g, metrics = self.trainer.train_group_masked_sharded(
+                    self.base, self.global_lora, g_ranks, stacks, lr,
+                    self.mesh)
+            else:
+                lora_g, metrics = self.trainer.train_group_masked(
+                    self.base, self.global_lora, g_ranks, stacks, lr)
             loss_g = np.asarray(metrics.get(
-                "loss", jnp.full((len(idxs),), jnp.nan)))
+                "loss", jnp.full((len(members),), jnp.nan)))
             # masked training leaves zeros beyond each client's rank, which
             # is exactly the zero-padded (G, ..., d, r_max) stack layout the
             # grouped aggregation expects; _extract_factors is shape-
             # agnostic in the leading axes
-            group_factors.append((idxs, r_max,
+            group_factors.append((members, r_max,
                                   self._extract_factors_batched(lora_g,
                                                                 r_max)))
-            for j, i in enumerate(idxs):
-                losses[i] = float(loss_g[j])
+            for j, i in enumerate(members):
+                if i >= 0:
+                    losses[i] = float(loss_g[j])
         return group_factors, losses
 
     # -- aggregation (both engines) ------------------------------------------
@@ -265,24 +313,31 @@ class FederatedLoRA:
                                 sigmas)
         return results, deltas, self._sigma_probe(parents, sigmas)
 
-    def _aggregate_batched(self, group_factors, ranks, n_k):
-        """Batched engine: bucket adapters by factor shape and aggregate
-        each bucket with ONE jitted call (``aggregate_grouped``).
+    def _aggregate_grouped(self, group_factors, ranks, n_k, *,
+                           sharded: bool):
+        """Batched AND sharded engines: bucket adapters by factor shape and
+        aggregate each bucket with ONE jitted call.
 
         The client axis is assembled group-by-group (clients stay in rank-
         group order, with ranks/n_k permuted to match), so each bucket needs
         only one pad + one concatenate per training group instead of
-        per-client restacking.
-        """
+        per-client restacking. ``sharded=True`` routes each bucket through
+        ``aggregate_grouped_sharded`` (client axis left sharded over the
+        mesh, one psum per bucket); ghost members (-1) ride along with
+        n_k=0 so every weight they receive -- including the DoRA magnitude
+        FedAvg weights -- is exactly zero."""
         results, deltas, sigmas = {}, {}, {}
         r_max = self.lora_cfg.r_max
+        r_min = min(self.lora_cfg.rank_levels)
         global_factors = self._extract_factors_batched(self.global_lora,
                                                        r_max)
-        # group-order permutation of the client axis
-        order = [i for idxs, _, _ in group_factors for i in idxs]
-        ranks_o = [ranks[i] for i in order]
-        n_k_o = [n_k[i] for i in order]
-        w_clients = jnp.asarray(np.asarray(n_k_o) / np.sum(n_k_o))
+        # group-order permutation of the client axis (ghosts: rank r_min,
+        # zero samples)
+        members = [i for mem, _, _ in group_factors for i in mem]
+        ranks_o = [ranks[i] if i >= 0 else r_min for i in members]
+        n_k_o = [n_k[i] if i >= 0 else 0 for i in members]
+        w_np = np.asarray(n_k_o, dtype=np.float64)
+        w_clients = jnp.asarray(w_np / w_np.sum())
         parents = list(group_factors[0][2])
         for parent in [p for p in parents if self._is_magnitude(p)]:
             # DoRA magnitudes: weighted FedAvg (not rank-structured)
@@ -295,12 +350,18 @@ class FederatedLoRA:
             gb0, ga0 = global_factors[parent]
             buckets.setdefault((gb0.shape, ga0.shape), []).append(parent)
         for group in buckets.values():
-            res = self.aggregator.aggregate_grouped(
+            args = (
                 [[fg[p][0] for p in group] for _, _, fg in group_factors],
                 [[fg[p][1] for p in group] for _, _, fg in group_factors],
-                ranks_o, n_k_o,
+                ranks_o, n_k_o)
+            kwargs = dict(
                 global_bs=[global_factors[p][0] for p in group],
                 global_as=[global_factors[p][1] for p in group])
+            if sharded:
+                res = self.aggregator.aggregate_grouped_sharded(
+                    *args, self.mesh, **kwargs)
+            else:
+                res = self.aggregator.aggregate_grouped(*args, **kwargs)
             for j, parent in enumerate(group):
                 res_j = type(res)(
                     res.b_g[j], res.a_g[j],
@@ -351,10 +412,11 @@ class FederatedLoRA:
             results, deltas, sigma_probe = self._aggregate_sequential(
                 client_factors, ranks, n_k)
         else:
-            group_factors, losses = self._train_batched(
-                client_batches, ranks, lr)
-            results, deltas, sigma_probe = self._aggregate_batched(
-                group_factors, ranks, n_k)
+            sharded = self.round_engine == "sharded"
+            group_factors, losses = self._train_grouped(
+                client_batches, ranks, lr, sharded=sharded)
+            results, deltas, sigma_probe = self._aggregate_grouped(
+                group_factors, ranks, n_k, sharded=sharded)
 
         self._write_factors(results)
         if deltas:
@@ -362,9 +424,14 @@ class FederatedLoRA:
         if sigma_probe is not None:
             self.energy.record(jnp.asarray(sigma_probe))
 
+        # nanmean: a zero-batch client trains 0 steps and reports NaN --
+        # that is a per-client condition and must not poison the round stat
+        loss_arr = np.asarray(losses, dtype=np.float64)
+        mean_loss = (float(np.nanmean(loss_arr))
+                     if not np.all(np.isnan(loss_arr)) else float("nan"))
         stats = RoundStats(
             round=self.round_idx, clients=clients, ranks=ranks, lr=lr,
-            mean_client_loss=float(np.mean(losses)),
+            mean_client_loss=mean_loss,
             sigma_probe=sigma_probe, wall_time_s=time.time() - t0)
         self.history.append(stats)
         self.round_idx += 1
@@ -391,12 +458,33 @@ class FederatedLoRA:
                                            lora_rank=self.lora_cfg.r_max)
         return {k: float(v) for k, v in metrics.items()}
 
+    @staticmethod
+    def _stats_to_meta(s: RoundStats) -> dict:
+        d = dataclasses.asdict(s)
+        if d["sigma_probe"] is not None:
+            d["sigma_probe"] = np.asarray(d["sigma_probe"]).tolist()
+        return d
+
+    @staticmethod
+    def _stats_from_meta(d: dict) -> RoundStats:
+        d = dict(d)
+        if d.get("sigma_probe") is not None:
+            d["sigma_probe"] = np.asarray(d["sigma_probe"], np.float32)
+        return RoundStats(**d)
+
     def save(self, path: str) -> None:
         from repro.checkpointing.checkpoint import save_pytree
         save_pytree(path + ".base", self.base)
+        # full server state rides in the metadata: rng stream, energy trace,
+        # and round history -- without them a resumed run samples a
+        # DIFFERENT client sequence and judges collapse on a truncated trace
         save_pytree(path + ".lora", self.global_lora,
                     metadata={"round": self.round_idx,
-                              "method": self.fl.aggregator})
+                              "method": self.fl.aggregator,
+                              "rng_state": self.rng.bit_generator.state,
+                              "energy": self.energy.state_dict(),
+                              "history": [self._stats_to_meta(s)
+                                          for s in self.history]})
 
     def restore(self, path: str) -> None:
         from repro.checkpointing.checkpoint import load_metadata, load_pytree
@@ -405,3 +493,12 @@ class FederatedLoRA:
         meta = load_metadata(path + ".lora")
         if meta:
             self.round_idx = meta.get("round", self.round_idx)
+            if meta.get("rng_state") is not None:
+                rng = np.random.default_rng()
+                rng.bit_generator.state = meta["rng_state"]
+                self.rng = rng
+            if meta.get("energy") is not None:
+                self.energy = EnergyTrace.from_state(meta["energy"])
+            if meta.get("history") is not None:
+                self.history = [self._stats_from_meta(d)
+                                for d in meta["history"]]

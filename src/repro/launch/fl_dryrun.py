@@ -1,16 +1,21 @@
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
-"""Dry-run of the PAPER'S OWN step: rank-partitioned aggregation as a
-distributed program on the production mesh.
+"""Dry-run of the LIVE sharded round engine's aggregation program on the
+production mesh.
 
-Client factor stacks are sharded over the data axes (each data shard holds
-its resident clients' uploads); the weighted-diagonal contraction
-sum_k B_k diag(omega_k) A_k lowers to per-shard partial matmuls + one
-all-reduce -- i.e. Algorithm 1 lines 6-10 become ICI collectives instead of
-a parameter-server gather. Both the dense (paper-faithful) and factored
-QR-SVD (beyond-paper) reallocation paths are lowered and compared; this is
-the roofline evidence for the §Perf "never materialize dW" iteration.
+This used to lower a standalone demo of the rank-partitioned contraction;
+it now lowers ``core/aggregation.py::sharded_grouped_fn`` -- the exact
+jitted shard_map program the ``round_engine="sharded"`` server executes per
+bucket per round -- so the roofline numbers describe the shipping code
+path. Client factor stacks are sharded over the ``data`` axis (each shard
+holds its round-robin resident clients' uploads); the weighted-diagonal
+contraction sum_k B_k diag(omega_k) A_k lowers to per-shard partial
+matmuls + one ``jax.lax.psum`` -- i.e. Algorithm 1 lines 6-10 become ICI
+collectives instead of a parameter-server gather. Both the dense
+(paper-faithful (d, n) all-reduce) and factored ((d+n, R) stack all-reduce)
+paths are lowered and compared; this is the roofline evidence for the
+§Perf "never materialize dW" iteration.
 
   PYTHONPATH=src python -m repro.launch.fl_dryrun [--multi-pod] \
       [--d 4096] [--n 4096] [--clients 64]
@@ -24,41 +29,26 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.svd import (dense_from_weighted, factored_from_weighted,
-                            svd_realloc_dense, svd_realloc_factored)
+from repro.core.aggregation import sharded_grouped_fn
 from repro.launch.hlo_analysis import analyze_compiled
 from repro.launch.mesh import make_production_mesh
 from repro.sharding.specs import batch_axes
 
 
-def aggregate_dense(bs, as_, omega, r_max):
-    dw = dense_from_weighted(bs, as_, omega)
-    return svd_realloc_dense(dw, r_max)
-
-
-def aggregate_factored(bs, as_, omega, r_max):
-    u_c, v_c = factored_from_weighted(bs, as_, omega)
-    return svd_realloc_factored(u_c, v_c, r_max)
-
-
 def lower_aggregation(*, d: int, n: int, clients: int, r_max: int,
                       multi_pod: bool, backend: str):
+    """Lower the live sharded-bucket pipeline for one single-adapter bucket
+    (one client group, no Eq. 8 fallback active this round). Clients shard
+    over ALL batch axes -- ("pod", "data") in multi-pod -- so the pod axis
+    shares the reduction instead of replicating it."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     baxes = batch_axes(mesh)
-    from repro.sharding.specs import sanitize_spec
-    sh = lambda spec, shape: NamedSharding(
-        mesh, sanitize_spec(spec, shape, mesh, rescue=False))
-    bs = jax.ShapeDtypeStruct(
-        (clients, d, r_max), jnp.float32,
-        sharding=sh(P(baxes, None, None), (clients, d, r_max)))
-    as_ = jax.ShapeDtypeStruct(
-        (clients, r_max, n), jnp.float32,
-        sharding=sh(P(baxes, None, None), (clients, r_max, n)))
-    omega = jax.ShapeDtypeStruct(
-        (clients, r_max), jnp.float32,
-        sharding=sh(P(baxes, None), (clients, r_max)))
-    fn = aggregate_dense if backend == "dense" else aggregate_factored
-    lowered = jax.jit(fn, static_argnums=(3,)).lower(bs, as_, omega, r_max)
+    cl = NamedSharding(mesh, P(baxes if len(baxes) > 1 else baxes[0]))
+    bs = jax.ShapeDtypeStruct((clients, d, r_max), jnp.float32, sharding=cl)
+    as_ = jax.ShapeDtypeStruct((clients, r_max, n), jnp.float32, sharding=cl)
+    omega = jax.ShapeDtypeStruct((clients, r_max), jnp.float32, sharding=cl)
+    fn = sharded_grouped_fn(mesh, r_max, backend, "raflora", axes=baxes)
+    lowered = fn.lower(((bs,),), ((as_,),), (omega,), None, None, None)
     return lowered, lowered.compile(), mesh
 
 

@@ -24,3 +24,20 @@ def make_host_mesh(model_axis: int = 1):
     n = jax.device_count()
     data = n // model_axis
     return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def make_fl_mesh(shards: int = 0):
+    """1-D ``("data",)`` mesh for the sharded federated round engine.
+
+    ``shards`` = 0 uses every visible device; a positive count takes the
+    first ``shards`` devices, which lets benchmarks sweep shard counts under
+    one forced ``--xla_force_host_platform_device_count`` process (tests use
+    host-count=1 CPU meshes the same way). Built with ``jax.sharding.Mesh``
+    directly because ``jax.make_mesh`` insists on consuming all devices.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devices = jax.devices()
+    n = shards or len(devices)
+    assert 1 <= n <= len(devices), (n, len(devices))
+    return Mesh(np.asarray(devices[:n]), ("data",))

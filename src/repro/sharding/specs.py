@@ -31,6 +31,31 @@ def batch_axes(mesh) -> Tuple[str, ...]:
     return ("pod", DATA) if "pod" in mesh.axis_names else (DATA,)
 
 
+class RoundEngineSpecs:
+    """PartitionSpecs for the sharded federated round engine (DESIGN.md §5).
+
+    The round's client axis is the ONLY sharded axis: sampled clients are
+    partitioned round-robin over the mesh's ``data`` axis, while the frozen
+    base weights and the broadcast global adapters stay replicated (they are
+    identical on every shard, exactly as every client receives the same
+    global adapter in Algorithm 1 line 4).
+
+      replicated   -- base params / global adapters / scalars
+      clients      -- leading client axis sharded (factor stacks, masks,
+                      scales, per-client metrics)
+      batch_stack  -- step-major (T, M, ...) training batch stacks: client
+                      axis is axis 1
+    """
+
+    replicated = P()
+    clients = P(DATA)
+    batch_stack = P(None, DATA)
+
+
+def round_engine_specs() -> RoundEngineSpecs:
+    return RoundEngineSpecs()
+
+
 def sanitize_spec(spec: P, shape, mesh, rescue: bool = True) -> P:
     """Drop mesh axes whose size does not evenly divide the array dim
     (NamedSharding requires even tiling; e.g. vocab 50280 over 16)."""

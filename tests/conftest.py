@@ -1,8 +1,26 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here -- smoke tests and benches see
-the single real CPU device; only launch/dryrun.py forces 512 devices."""
+the single real CPU device; only launch/dryrun.py forces 512 devices (and
+``tools/ci.sh shard-smoke`` forces 8 for the sharded round engine).
+
+The persistent XLA compilation cache (ROADMAP "Test wall time") is enabled
+for every test run: the federated integration tests dominate tier-1 wall
+time and their programs are identical across runs, so warm-cache runs skip
+most of the compile cost. Override the location with
+``JAX_COMPILATION_CACHE_DIR``; set it empty to disable."""
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
+
+_CACHE_DIR = os.environ.get(
+    "JAX_COMPILATION_CACHE_DIR",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 ".jax_cache"))
+if _CACHE_DIR:
+    jax.config.update("jax_compilation_cache_dir", _CACHE_DIR)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.25)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
 
 
 @pytest.fixture(scope="session")

@@ -66,6 +66,55 @@ class TestRoundLoop:
         assert abs(exp2.eval_accuracy() - acc) < 1e-6
 
 
+class TestCheckpointResumeState:
+    """ISSUE 2 satellites: ``restore`` must bring back the rng stream, the
+    energy trace, and the round history -- a resumed run previously drew a
+    DIFFERENT client-sampling sequence and judged collapse on a truncated
+    trace."""
+
+    def test_energy_trace_respects_ctor_args(self):
+        from repro.core.energy import EnergyTrace
+        tr = EnergyTrace((4, 8), rho_r1=[0.5, 0.6], eff_rank=[2.0, 3.0],
+                         breakdown=[{"rank_1_4": 1.0}, {"rank_1_4": 0.9}])
+        assert tr.rho_r1 == [0.5, 0.6]          # was silently reset to []
+        assert tr.eff_rank == [2.0, 3.0]
+        assert len(tr.breakdown) == 2
+        assert EnergyTrace((4, 8)).rho_r1 == []  # default still empty
+        back = EnergyTrace.from_state(tr.state_dict())
+        assert back.rho_r1 == tr.rho_r1
+        assert back.collapsed() == tr.collapsed()
+
+    def test_resume_reproduces_uninterrupted_run(self, quick, tmp_path):
+        """save -> restore -> run must reproduce the uninterrupted run's
+        client-sampling sequence EXACTLY (and its stats to float noise)."""
+        full = quick("raflora")
+        full.server.run(4)
+
+        part = quick("raflora")
+        part.server.run(2)
+        path = str(tmp_path / "resume_ckpt")
+        part.server.save(path)
+
+        resumed = quick("raflora")
+        resumed.server.restore(path)
+        assert resumed.server.round_idx == 2
+        assert len(resumed.server.history) == 2
+        assert len(resumed.server.energy.rho_r1) == 2
+        resumed.server.run(2)
+
+        assert len(resumed.server.history) == 4
+        for s_full, s_res in zip(full.server.history,
+                                 resumed.server.history):
+            assert s_full.clients == s_res.clients   # exact sampling stream
+            assert s_full.ranks == s_res.ranks
+            np.testing.assert_allclose(s_full.mean_client_loss,
+                                       s_res.mean_client_loss, rtol=1e-5)
+        np.testing.assert_allclose(full.server.energy.rho_r1,
+                                   resumed.server.energy.rho_r1, rtol=1e-5)
+        assert (full.server.energy.collapsed()
+                == resumed.server.energy.collapsed())
+
+
 class TestPaperClaims:
     """The paper's qualitative claims, reproduced in-training (not just in
     the closed-form theory model)."""

@@ -1,19 +1,24 @@
 #!/usr/bin/env bash
 # CI entry point: deterministic, offline, CPU-pinned test tiers.
 #
-#   tools/ci.sh            # tier-1: the full suite (ROADMAP "Tier-1 verify")
-#   tools/ci.sh smoke      # fast tier: skips the slow federated integration
-#                          # and dry-run modules (~seconds vs ~minutes)
-#   tools/ci.sh bench      # quick benchmark sweep (includes round_latency)
+#   tools/ci.sh              # tier-1: the full suite (ROADMAP "Tier-1 verify")
+#   tools/ci.sh smoke        # fast tier: skips the slow federated integration
+#                            # and dry-run modules (~seconds vs ~minutes)
+#   tools/ci.sh bench        # quick benchmark sweep (includes round_latency)
+#   tools/ci.sh shard-smoke  # sharded round engine equivalence under a
+#                            # forced 8-virtual-device CPU host platform
 #
 # JAX_PLATFORMS=cpu keeps runs identical on machines that also have
 # accelerators; PYTHONHASHSEED pins dict/hash iteration for determinism.
+# The persistent XLA compilation cache (also enabled by tests/conftest.py)
+# makes warm reruns skip most compile time -- the dominant tier-1 cost.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS=cpu
 export PYTHONHASHSEED=0
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-$PWD/.jax_cache}"
 
 tier="${1:-tier1}"
 
@@ -22,13 +27,17 @@ case "$tier" in
     exec python -m pytest -x -q
     ;;
   smoke)
-    exec python -m pytest -x -q -k "not federation and not dryrun"
+    exec python -m pytest -x -q -k "not federation and not dryrun and not sharded_engine"
     ;;
   bench)
     exec python -m benchmarks.run --quick
     ;;
+  shard-smoke)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    exec python -m pytest -x -q tests/test_sharded_engine.py
+    ;;
   *)
-    echo "usage: tools/ci.sh [tier1|smoke|bench]" >&2
+    echo "usage: tools/ci.sh [tier1|smoke|bench|shard-smoke]" >&2
     exit 2
     ;;
 esac
