@@ -1,24 +1,38 @@
-"""Sequential vs batched round engine: per-round wall time (ISSUE 1 tentpole).
+"""Round-engine latency studies: sequential vs batched vs sharded vs async.
 
 Measures the `FederatedLoRA.run_round` hot path at ``clients_per_round=8``
 (full participation of 8 heterogeneous-rank clients, so every round has the
 same rank-group composition and only round 1 pays jit compilation). Warmup
-rounds are excluded; the two engines are timed INTERLEAVED, round by round,
-so drifting background load on shared-CPU machines biases both equally; the
-reported number is the median over the timed rounds.
+rounds are excluded; engines are timed INTERLEAVED, block by block, so
+drifting background load on shared-CPU machines biases all engines equally;
+the reported number is the median over the timed blocks.
 
-``--engine sharded`` (ISSUE 2) instead sweeps the SHARDED engine over shard
-counts (1, 2, 4, ... up to the visible device count): one experiment per
-``("data",)`` mesh size, recording per-round medians vs shard count into the
-same JSON artifact under ``"sharded"``. The sweep is STANDALONE-ONLY
-(``python -m benchmarks.bench_round_latency --engine sharded``): it must
-force an 8-virtual-device CPU host platform BEFORE jax initializes, which
-run.py/``tools/ci.sh bench`` -- whose `run()` entry stays the
-sequential-vs-batched study -- cannot do after importing other benches.
+Studies (all merged into one artifact):
 
-Writes a JSON artifact (benchmarks/artifacts/round_latency.json) with the
-raw per-round times, the medians, and the speedup, and emits the usual CSV
-rows for run.py.
+* default (``run``): the ISSUE 1 sequential-vs-batched comparison.
+* ``--engine sharded`` (ISSUE 2): the SHARDED engine swept over shard
+  counts (1, 2, 4, ... up to the visible device count).
+* ``--engine async`` (ISSUE 3): the ASYNC buffered-aggregation engine swept
+  over ``pipeline_depth`` (1, 2, 4) against the batched engine. Depth d
+  trains every round but runs ONE staleness-discounted buffered aggregation
+  per d rounds, amortizing the aggregation + SVD realloc + momentum +
+  global write-back -- so per-round wall time drops even on a serial host,
+  and on parallel hosts the non-blocking dispatches additionally overlap.
+  The sweep also runs a momentum-equipped experiment and asserts server
+  momentum cost <= ONE jitted dispatch per bucket per aggregation
+  (``FactoredServerMomentum.bucket_calls`` -- the ISSUE 3 satellite).
+* ``--engine all``: every study, one process (``tools/ci.sh bench``).
+
+The sharded/async sweeps are STANDALONE-ONLY (``python -m
+benchmarks.bench_round_latency --engine ...``): they must force an
+8-virtual-device CPU host platform BEFORE jax initializes, which
+run.py -- whose `run()` entry stays the sequential-vs-batched study --
+cannot do after importing other benches.
+
+Artifacts: the raw per-round times, medians, and speedups are written to
+benchmarks/artifacts/round_latency.json AND mirrored to
+``BENCH_round_latency.json`` at the repo root -- the tracked perf artifact
+successive PRs compare against (``tools/ci.sh bench``).
 """
 from __future__ import annotations
 
@@ -32,24 +46,32 @@ from benchmarks.common import emit
 
 ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
                         "round_latency.json")
+ROOT_ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_round_latency.json")
 
 
 def _merge_artifact(update: dict) -> dict:
-    """Read-modify-write the shared JSON artifact so the batched-vs-seq
-    study and the sharded shard-count sweep never clobber each other."""
+    """Read-modify-write the shared JSON artifact (and its tracked repo-root
+    mirror) so the engine studies never clobber each other. On a fresh
+    checkout the local artifact is absent but the tracked mirror may hold
+    committed results from earlier PRs -- seed from whichever exists so a
+    partial rerun never drops committed sections."""
     result = {}
-    if os.path.exists(ARTIFACT):
-        with open(ARTIFACT) as f:
-            result = json.load(f)
+    for path in (ROOT_ARTIFACT, ARTIFACT):   # local artifact wins if both
+        if os.path.exists(path):
+            with open(path) as f:
+                result = json.load(f)
     result.update(update)
     os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
-    with open(ARTIFACT, "w") as f:
-        json.dump(result, f, indent=2)
+    for path in (ARTIFACT, ROOT_ARTIFACT):
+        with open(path, "w") as f:
+            json.dump(result, f, indent=2)
     return result
 
 
 def _make(engine: str, *, rounds: int, d_model: int, batches_per_round: int,
-          local_batch_size: int, mesh=None):
+          local_batch_size: int, mesh=None, pipeline_depth: int = 1,
+          server_momentum_beta: float = 0.0, backend: str = "factored"):
     from repro.federation.experiment import build_experiment
     return build_experiment(
         "raflora",
@@ -59,7 +81,34 @@ def _make(engine: str, *, rounds: int, d_model: int, batches_per_round: int,
         lora_overrides={"rank_levels": (4, 8, 16),
                         "rank_probs": (0.34, 0.33, 0.33)},
         samples_per_class=40, num_classes=8, d_model=d_model,
-        batches_per_round=batches_per_round, round_engine=engine, mesh=mesh)
+        batches_per_round=batches_per_round, round_engine=engine, mesh=mesh,
+        pipeline_depth=pipeline_depth, backend=backend,
+        server_momentum_beta=server_momentum_beta)
+
+
+def _time_blocks(servers: dict, *, blocks: int, rounds_per_block: int,
+                 warmup: int) -> dict:
+    """Median seconds-per-round per server, timed in interleaved blocks.
+
+    Each timed block ends with the server's own ``flush_stats()`` so
+    engines that defer work (the async engine's lazy stat materialization
+    and in-flight dispatches) are charged for it INSIDE their own block --
+    otherwise their device-queue tail would spill into the next engine's
+    timing and bias the comparison both ways."""
+    for _ in range(warmup):                 # jit/compile time excluded
+        for srv in servers.values():
+            for _ in range(rounds_per_block):
+                srv.run_round()
+            srv.flush_stats()
+    times = {k: [] for k in servers}
+    for _ in range(blocks):
+        for key, srv in servers.items():    # interleaved: shared load drift
+            t0 = time.perf_counter()
+            for _ in range(rounds_per_block):
+                srv.run_round()
+            srv.flush_stats()
+            times[key].append((time.perf_counter() - t0) / rounds_per_block)
+    return times
 
 
 def run(rounds: int = 12, warmup: int = 2, d_model: int = 64,
@@ -69,15 +118,8 @@ def run(rounds: int = 12, warmup: int = 2, d_model: int = 64,
                           batches_per_round=batches_per_round,
                           local_batch_size=local_batch_size).server
                for eng in ("sequential", "batched")}
-    times = {eng: [] for eng in servers}
-    for _ in range(warmup):                 # jit/compile time excluded
-        for srv in servers.values():
-            srv.run_round()
-    for _ in range(rounds):
-        for eng, srv in servers.items():    # interleaved: shared load drift
-            t0 = time.perf_counter()
-            srv.run_round()
-            times[eng].append(time.perf_counter() - t0)
+    times = _time_blocks(servers, blocks=rounds, rounds_per_block=1,
+                         warmup=warmup)
 
     medians = {eng: float(np.median(ts)) for eng, ts in times.items()}
     speedup = medians["sequential"] / medians["batched"]
@@ -107,7 +149,7 @@ def run_sharded(rounds: int = 8, warmup: int = 2, d_model: int = 64,
 
     One experiment per power-of-two shard count that fits the visible
     devices, all timed the same way as ``run``; results merge into the
-    existing artifact so the two engine studies live side by side.
+    existing artifact so the engine studies live side by side.
     """
     import jax
     from repro.launch.mesh import make_fl_mesh
@@ -119,15 +161,8 @@ def run_sharded(rounds: int = 8, warmup: int = 2, d_model: int = 64,
                         local_batch_size=local_batch_size,
                         mesh=make_fl_mesh(s)).server
                for s in shard_counts}
-    times = {s: [] for s in servers}
-    for _ in range(warmup):                 # jit/compile time excluded
-        for srv in servers.values():
-            srv.run_round()
-    for _ in range(rounds):
-        for s, srv in servers.items():      # interleaved: shared load drift
-            t0 = time.perf_counter()
-            srv.run_round()
-            times[s].append(time.perf_counter() - t0)
+    times = _time_blocks(servers, blocks=rounds, rounds_per_block=1,
+                         warmup=warmup)
 
     medians = {s: float(np.median(ts)) for s, ts in times.items()}
     sharded = {
@@ -150,17 +185,112 @@ def run_sharded(rounds: int = 8, warmup: int = 2, d_model: int = 64,
     return sharded
 
 
+def _momentum_dispatch_audit(*, d_model: int, local_batch_size: int) -> dict:
+    """ISSUE 3 satellite check: bucketed server momentum must add at most
+    ONE jitted dispatch per shape bucket per aggregation (the old
+    ``_record_result`` ran an unjitted per-ADAPTER stacked-QR-SVD loop on
+    the host, defeating the one-dispatch-per-bucket engine design)."""
+    exp = _make("async", rounds=8, d_model=d_model, batches_per_round=1,
+                local_batch_size=local_batch_size, pipeline_depth=2,
+                server_momentum_beta=0.9)
+    exp.server.run(6)
+    mom = exp.server.server_momentum
+    n_aggs = len(exp.server.energy.rho_r1)
+    n_buckets = len(mom.state)              # one stacked entry per bucket
+    assert n_aggs > 0 and n_buckets > 0, (n_aggs, n_buckets)
+    assert mom.bucket_calls <= n_aggs * n_buckets, \
+        (mom.bucket_calls, n_aggs, n_buckets)
+    return {"bucket_calls": mom.bucket_calls, "aggregations": n_aggs,
+            "buckets": n_buckets,
+            "dispatches_per_bucket_per_agg":
+                mom.bucket_calls / (n_aggs * n_buckets)}
+
+
+def run_async(rounds: int = 8, warmup: int = 4, d_model: int = 128,
+              batches_per_round: int = 1, local_batch_size: int = 4,
+              depths=(1, 2, 4), rounds_per_block: int = 4,
+              backend: str = "dense") -> dict:
+    """Async-engine latency vs pipeline depth (ISSUE 3 acceptance artifact).
+
+    Depth d runs one buffered aggregation per d training rounds, so blocks
+    of ``rounds_per_block`` rounds are timed (a multiple of every swept
+    depth) and per-round wall time is block time / block rounds. The
+    acceptance bar -- async at depth 2 at least 1.3x faster per round than
+    batched -- is recorded as ``speedup_async2_over_batched``.
+
+    The study runs the DENSE (paper-faithful) aggregation backend at an
+    aggregation-heavy shape (d_model=128, local batch 4): the dense SVD
+    realloc cost is independent of the merged client count, so buffered
+    aggregation amortizes it fully (depth d = 1/d as many SVD + write-back
+    server steps). The factored backend's QR core grows with the merged
+    stack width R = M*r_max, so buffering pays less there -- the tradeoff
+    is recorded in the artifact config.
+    """
+    import jax
+    total = (rounds + warmup) * rounds_per_block
+    servers = {"batched": _make("batched", rounds=total, d_model=d_model,
+                                batches_per_round=batches_per_round,
+                                local_batch_size=local_batch_size,
+                                backend=backend).server}
+    for d in depths:
+        servers[f"async{d}"] = _make(
+            "async", rounds=total, d_model=d_model,
+            batches_per_round=batches_per_round,
+            local_batch_size=local_batch_size, pipeline_depth=d,
+            backend=backend).server
+    times = _time_blocks(servers, blocks=rounds,
+                         rounds_per_block=rounds_per_block, warmup=warmup)
+
+    medians = {k: float(np.median(ts)) for k, ts in times.items()}
+    speedups = {f"speedup_async{d}_over_batched":
+                medians["batched"] / medians[f"async{d}"] for d in depths}
+    audit = _momentum_dispatch_audit(d_model=d_model,
+                                     local_batch_size=local_batch_size)
+    async_result = {
+        "config": {"clients_per_round": 8, "blocks_timed": rounds,
+                   "rounds_per_block": rounds_per_block,
+                   "warmup_blocks": warmup, "d_model": d_model,
+                   "batches_per_round": batches_per_round,
+                   "local_batch_size": local_batch_size,
+                   "rank_levels": [4, 8, 16], "method": "raflora",
+                   "backend": backend,
+                   "device_count": jax.device_count()},
+        "pipeline_depths": list(depths),
+        "per_round_s": {k: ts for k, ts in times.items()},
+        "median_s": medians,
+        "momentum_dispatch_audit": audit,
+        **speedups,
+    }
+    _merge_artifact({"async": async_result})
+
+    for k in servers:
+        emit(f"round_latency/{k}", medians[k] * 1e6,
+             f"median_round_ms={medians[k] * 1e3:.1f}")
+    for d in depths:
+        emit(f"round_latency/speedup_async{d}", 0.0,
+             f"{speedups[f'speedup_async{d}_over_batched']:.2f}x")
+    print(f"# artifact: {ARTIFACT}")
+    return async_result
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=("batched", "sharded"),
-                    default="batched")
+    ap.add_argument("--engine", choices=("batched", "sharded", "async",
+                                         "all"), default="batched")
     args = ap.parse_args()
-    if args.engine == "sharded":
-        # must precede the first jax initialization: standalone sharded
-        # sweeps get an 8-virtual-device CPU host platform
+    if args.engine != "batched":
+        # must precede the first jax initialization: standalone sweeps get
+        # an 8-virtual-device CPU host platform
         os.environ.setdefault(
             "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    if args.engine == "sharded":
         run_sharded()
+    elif args.engine == "async":
+        run_async()
+    elif args.engine == "all":
+        run()
+        run_sharded()
+        run_async()
     else:
         run()

@@ -1,4 +1,6 @@
-from repro.checkpointing.checkpoint import (load_metadata, load_pytree,
+from repro.checkpointing.checkpoint import (load_flat, load_metadata,
+                                            load_pytree, save_flat,
                                             save_pytree)
 
-__all__ = ["load_metadata", "load_pytree", "save_pytree"]
+__all__ = ["load_flat", "load_metadata", "load_pytree", "save_flat",
+           "save_pytree"]

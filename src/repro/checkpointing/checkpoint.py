@@ -1,12 +1,60 @@
-"""Round-resumable checkpointing: pytrees <-> npz with path-keyed arrays."""
+"""Round-resumable checkpointing: pytrees <-> npz with path-keyed arrays.
+
+Both the array payload (``.npz``) and the metadata sidecar (``.meta.json``)
+are written ATOMICALLY: content goes to a temp file in the target directory
+first and is moved into place with ``os.replace``. With async checkpointing
+overlapping training a crash mid-save is a live possibility; a torn write
+must leave either the previous complete checkpoint or the new one, never a
+half-written npz that ``restore()`` half-loads.
+
+Path spellings: every entry point accepts both ``save("ckpt")`` and
+``save("ckpt.npz")``. The npz always lands at ``<stem>.npz`` and the
+metadata at ``<stem>.meta.json`` (stem = path with any trailing ``.npz``
+stripped), so the two spellings are interchangeable between save and load.
+"""
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Optional, Tuple
+import tempfile
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+
+def _stem(path: str) -> str:
+    """Normalize both accepted spellings to the extensionless stem."""
+    return path[:-len(".npz")] if path.endswith(".npz") else path
+
+
+def _atomic_savez(npz_path: str, arrays: dict) -> None:
+    """np.savez to a temp file in the target dir, then os.replace."""
+    dirname = os.path.dirname(npz_path) or "."
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".npz")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, npz_path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _atomic_write_text(path: str, text: str) -> None:
+    dirname = os.path.dirname(path) or "."
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
 def _flatten(tree) -> dict:
@@ -47,19 +95,17 @@ def _json_safe(obj):
 
 
 def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat = _flatten(tree)
-    np.savez(path, **flat)
+    """Atomically write ``<stem>.npz`` (and ``<stem>.meta.json``)."""
+    stem = _stem(path)
+    _atomic_savez(stem + ".npz", _flatten(tree))
     if metadata is not None:
-        with open(path + ".meta.json", "w") as f:
-            json.dump(_json_safe(metadata), f)
+        _atomic_write_text(stem + ".meta.json",
+                           json.dumps(_json_safe(metadata)))
 
 
 def load_pytree(path: str, like) -> Any:
     """Restore into the structure of ``like`` (shape/dtype template)."""
-    if not path.endswith(".npz"):
-        path = path + ".npz"
-    data = np.load(path)
+    data = np.load(_stem(path) + ".npz")
 
     def fetch(p, x):
         if x is None:
@@ -75,12 +121,35 @@ def load_pytree(path: str, like) -> Any:
 
 
 def load_metadata(path: str) -> Optional[dict]:
-    meta_path = (path if path.endswith(".npz") else path + ".npz") + ".meta.json"
-    meta_path = meta_path.replace(".npz.meta.json", ".meta.json") \
-        if not os.path.exists(meta_path) else meta_path
-    candidates = [path + ".meta.json", meta_path]
-    for c in candidates:
-        if os.path.exists(c):
-            with open(c) as f:
+    """Metadata for either path spelling.
+
+    The canonical location is ``<stem>.meta.json``; ``<path>.meta.json`` is
+    also probed so sidecars written next to an explicit ``.npz`` spelling by
+    older code keep loading. (The old implementation built
+    ``<path>.npz.meta.json`` -- a name no writer ever produced -- and then
+    string-replaced it back, a dead branch this replaces.)
+    """
+    for candidate in (_stem(path) + ".meta.json", path + ".meta.json"):
+        if os.path.exists(candidate):
+            with open(candidate) as f:
                 return json.load(f)
     return None
+
+
+# -- flat, template-free array blobs ----------------------------------------
+#
+# ``save_pytree``/``load_pytree`` need a pytree template on load. Server
+# momentum state and the async engine's pending-plan buffer have no natural
+# template at restore time (their structure depends on what was in flight),
+# so they serialize as FLAT string-keyed array dicts instead.
+
+def save_flat(path: str, arrays: Dict[str, np.ndarray]) -> None:
+    """Atomically write a flat {key: array} dict to ``<stem>.npz``."""
+    _atomic_savez(_stem(path) + ".npz",
+                  {k: np.asarray(v) for k, v in arrays.items()})
+
+
+def load_flat(path: str) -> Dict[str, np.ndarray]:
+    """Load a flat {key: array} dict saved by ``save_flat``."""
+    with np.load(_stem(path) + ".npz") as data:
+        return {k: data[k] for k in data.files}

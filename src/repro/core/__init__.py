@@ -2,7 +2,7 @@
 from repro.core.aggregation import (AggregationResult, Aggregator, METHODS,
                                     aggregate_flexlora, aggregate_flora,
                                     aggregate_hetlora, aggregate_raflora,
-                                    pad_stack)
+                                    pad_stack, staleness_discount)
 from repro.core.energy import (EnergyTrace, effective_rank, energies,
                                energy_breakdown, higher_rank_energy_ratio,
                                rho)
@@ -23,5 +23,6 @@ __all__ = [
     "energy_breakdown", "h_sampling", "higher_rank_energy_ratio",
     "mean_field_floor", "mean_field_step", "omega_flexlora", "omega_raflora",
     "pad_stack", "partition_bounds", "prev_boundary", "rho", "rho_series",
+    "staleness_discount",
     "simulate_expected", "svd_realloc_dense", "svd_realloc_factored",
 ]

@@ -67,6 +67,38 @@ def _weights(n_k: Sequence[float]) -> np.ndarray:
     return n / n.sum()
 
 
+def staleness_discount(n_k: Sequence[float],
+                       staleness: Optional[Sequence[int]],
+                       gamma: float = 1.0) -> np.ndarray:
+    """Staleness-discounted effective sample counts for async aggregation.
+
+    Client k whose update is ``staleness[k]`` aggregations old contributes
+    with ``n_k * gamma**staleness[k]`` -- the discount folds into the
+    n_k-DERIVED weights (FedAvg weights, FlexLoRA/raFLoRA omega rows, DoRA
+    magnitude weights) BEFORE their normalization, so:
+
+    * totals are preserved: every weight family normalizes over the
+      discounted counts, so the weights of a fixed client set sum to the
+      same total as the synchronous round (no silent global down-weighting
+      -- staleness only shifts RELATIVE mass toward fresher clients);
+    * ghost clients (n_k = 0) stay exactly zero;
+    * the raFLoRA effective-contributor sets and the Eq. 8 fallback are
+      untouched (membership is rank-based, not weight-based).
+
+    ``staleness=None``, ``gamma=1``, or an all-zero staleness vector are
+    exact no-ops (the input counts are returned unscaled), which is what
+    makes ``pipeline_depth=1`` reduce bit-level to the batched engine.
+    """
+    n = np.asarray(n_k, dtype=np.float64)
+    if staleness is None or gamma == 1.0:
+        return n
+    s = np.broadcast_to(np.asarray(staleness, dtype=np.float64), n.shape)
+    if not s.any():
+        return n
+    assert gamma > 0.0, gamma  # gamma<=0 would zero real clients
+    return n * np.power(float(gamma), s)
+
+
 # ---------------------------------------------------------------------------
 # aggregation rules
 # ---------------------------------------------------------------------------
@@ -508,16 +540,21 @@ class Aggregator:
         return omega, (fb if fb.any() else None)
 
     def _weight_args(self, ranks, n_k):
-        """(warg, fallback) jnp inputs for ``_dispatch_stacked``."""
+        """(warg, fallback) inputs for ``_dispatch_stacked``.
+
+        Returned as NUMPY: the jitted bucket pipelines transfer them at
+        dispatch. Eager ``jnp.asarray`` here would synchronize with
+        in-flight device work on the CPU client and stall the async round
+        engine's dispatch pipeline."""
         if self.method == "fedavg":
             ranks_arr = np.asarray(ranks)
             assert (ranks_arr == ranks_arr[0]).all(), \
                 "fedavg requires homogeneous ranks"
         if self.method in ("fedavg", "hetlora", "ffa", "flora"):
-            return jnp.asarray(_weights(n_k), jnp.float32), None
+            return np.asarray(_weights(n_k), np.float32), None
         omega, fallback = self._svd_weights(ranks, n_k)
-        return (jnp.asarray(omega),
-                None if fallback is None else jnp.asarray(fallback))
+        return (np.asarray(omega),
+                None if fallback is None else np.asarray(fallback))
 
     def aggregate_stack(self, bs, as_, ranks, n_k, global_b=None,
                         global_a=None) -> AggregationResult:
@@ -537,7 +574,8 @@ class Aggregator:
         return AggregationResult(b_g, a_g, sigma, merge_delta=dw)
 
     def aggregate_grouped(self, group_bs, group_as, ranks, n_k,
-                          global_bs=None, global_as=None
+                          global_bs=None, global_as=None,
+                          staleness=None, gamma: float = 1.0
                           ) -> AggregationResult:
         """Batched round engine hot path: aggregate a shape bucket straight
         from per-rank-group factor stacks.
@@ -548,8 +586,13 @@ class Aggregator:
         global factors. Bucket assembly (stack adapters, pad ranks,
         concatenate groups) AND aggregation run in one jitted dispatch.
         Returns an AggregationResult with a leading bucket-adapter axis.
+
+        ``staleness``/``gamma``: the async round engine's staleness-
+        discounted weighting (``staleness_discount``) -- per-client
+        aggregation ages folded into the n_k-derived weights.
         """
-        warg, fallback = self._weight_args(ranks, n_k)
+        warg, fallback = self._weight_args(
+            ranks, staleness_discount(n_k, staleness, gamma))
         b_g, a_g, sigma, dw = _grouped_core(
             tuple(tuple(bt) for bt in group_bs),
             tuple(tuple(at) for at in group_as),
@@ -561,7 +604,8 @@ class Aggregator:
         return AggregationResult(b_g, a_g, sigma, merge_delta=dw)
 
     def aggregate_grouped_sharded(self, group_bs, group_as, ranks, n_k,
-                                  mesh, global_bs=None, global_as=None
+                                  mesh, global_bs=None, global_as=None,
+                                  staleness=None, gamma: float = 1.0
                                   ) -> AggregationResult:
         """Sharded round engine hot path: ``aggregate_grouped`` with the
         client axis sharded over the mesh's ``data`` axis and every
@@ -573,20 +617,20 @@ class Aggregator:
         rows are computed from the REAL clients only and scattered with
         zeros at ghost positions, so ghosts contribute exactly nothing to
         any reduction AND leave the raFLoRA effective-contributor counts /
-        Eq. 8 fallback untouched.
+        Eq. 8 fallback untouched. ``staleness``/``gamma`` discount exactly
+        as in ``aggregate_grouped`` (a ghost's discounted count is still 0).
         """
         n_shards = mesh.shape["data"]
         sizes = [bt[0].shape[0] for bt in group_bs]
         assert all(g % n_shards == 0 for g in sizes), (sizes, n_shards)
-        n_arr = np.asarray(n_k, dtype=np.float64)
+        n_arr = staleness_discount(n_k, staleness, gamma)
         real = np.flatnonzero(n_arr > 0)
         warg_real, fallback = self._weight_args(
             [ranks[i] for i in real], n_arr[real])
         warg_np = np.asarray(warg_real)
         warg = np.zeros((len(n_k),) + warg_np.shape[1:], warg_np.dtype)
         warg[real] = warg_np
-        group_w = tuple(jnp.asarray(w) for w in
-                        np.split(warg, np.cumsum(sizes)[:-1]))
+        group_w = tuple(np.split(warg, np.cumsum(sizes)[:-1]))
         fn = sharded_grouped_fn(mesh, max(self.rank_levels), self.backend,
                                 self.method)
         b_g, a_g, sigma, dw = fn(
@@ -595,5 +639,5 @@ class Aggregator:
             group_w,
             None if global_bs is None else tuple(global_bs),
             None if global_as is None else tuple(global_as),
-            None if fallback is None else jnp.asarray(fallback))
+            fallback)
         return AggregationResult(b_g, a_g, sigma, merge_delta=dw)

@@ -2,47 +2,53 @@
 
 "Energy" = squared singular values. ``rho_r`` is the normalized cumulative
 energy ratio; rank collapse = (1 - rho_{r_1}) -> 0 over rounds.
+
+All metrics here are computed in NUMPY on purpose: they are host-side
+bookkeeping, never traced inside jit, and ``EnergyTrace.record`` runs on
+the server's round path with device work in flight -- on jax's CPU client
+even tiny eager jnp ops synchronize with the queue, stalling the async
+round engine's pipeline. Inputs may still be jax arrays (``np.asarray``
+materializes them).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
 
-def energies(sigma: jnp.ndarray) -> jnp.ndarray:
+def energies(sigma) -> np.ndarray:
     """e_i = sigma_i^2 (descending order preserved)."""
-    return jnp.square(sigma.astype(jnp.float32))
+    return np.square(np.asarray(sigma, np.float32))
 
 
-def cumulative_energy(sigma: jnp.ndarray, r: int) -> jnp.ndarray:
+def cumulative_energy(sigma, r: int) -> np.ndarray:
     """E_r = sum_{i<=r} e_i."""
     return energies(sigma)[:r].sum()
 
 
-def rho(sigma: jnp.ndarray, r: int) -> jnp.ndarray:
+def rho(sigma, r: int) -> np.ndarray:
     """rho_r = E_r / E_{r_max} in [0, 1]."""
     e = energies(sigma)
     total = e.sum()
-    return jnp.where(total > 0, e[:r].sum() / jnp.maximum(total, 1e-30), 0.0)
+    return np.where(total > 0, e[:r].sum() / np.maximum(total, 1e-30), 0.0)
 
 
-def higher_rank_energy_ratio(sigma: jnp.ndarray, r1: int) -> jnp.ndarray:
+def higher_rank_energy_ratio(sigma, r1: int) -> np.ndarray:
     """1 - rho_{r1}: the quantity whose decay defines rank collapse."""
     return 1.0 - rho(sigma, r1)
 
 
-def effective_rank(sigma: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+def effective_rank(sigma, eps: float = 1e-12) -> np.ndarray:
     """Entropy-based effective rank (Roy & Vetterli): exp(H(p)), p = e/sum e."""
     e = energies(sigma)
-    p = e / jnp.maximum(e.sum(), eps)
-    h = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, eps)), 0.0))
-    return jnp.exp(h)
+    p = e / np.maximum(e.sum(), eps)
+    h = -np.sum(np.where(p > 0, p * np.log(np.maximum(p, eps)), 0.0))
+    return np.exp(h)
 
 
-def energy_breakdown(sigma: jnp.ndarray,
+def energy_breakdown(sigma,
                      rank_levels: Sequence[int]) -> dict:
     """Per-partition energy fractions (the stacked bars of Figure 2a/2b)."""
     from repro.core.partitions import partition_bounds

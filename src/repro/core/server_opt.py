@@ -15,13 +15,30 @@ The SVD truncations introduce the same rank-r_max projection the base
 method already applies each round, so the approximation error is of the
 same order as FlexLoRA/raFLoRA's own reallocation. Composes with any
 aggregation method; exercised in tests/test_server_opt.py.
+
+Two call surfaces:
+
+* ``apply`` -- one adapter at a time (the sequential reference engine).
+* ``apply_bucket`` -- one JITTED dispatch per shape bucket (the batched /
+  sharded / async round engines): the whole bucket's layer-stacked factors
+  run the identical stacked-QR-SVD math vmapped over every leading batch
+  axis, preserving the engines' one-dispatch-per-bucket design.
+  ``bucket_calls`` counts those dispatches so ``bench_round_latency`` can
+  assert momentum adds <= 1 per bucket per round. Bucketed state lives
+  STACKED under the bucket key (no per-adapter slice ops on the hot path),
+  but checkpoints always serialize per adapter (``state_arrays``), so they
+  are engine-portable and the async engine's buffered deltas always land in
+  the same keyed slot regardless of which round delivered them.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.svd import svd_realloc_factored
 
@@ -34,13 +51,53 @@ def _stack(*pairs):
 
 
 def _trunc(u, v, r_max):
-    if u.ndim == 3:  # layer-stacked: vmap
-        import jax
-        b, a, _ = jax.vmap(lambda uu, vv: svd_realloc_factored(uu, vv, r_max)
-                           )(u, v)
+    """Rank-r_max truncation of a factor stack, batched over ANY leading
+    axes (scalar pair, (L, d, R) scan stacks, (P, L, d, R) buckets)."""
+    if u.ndim == 2:
+        b, a, _ = svd_realloc_factored(u, v, r_max)
         return b, a
-    b, a, _ = svd_realloc_factored(u, v, r_max)
-    return b, a
+    lead = u.shape[:-2]
+    d, rr = u.shape[-2:]
+    n = v.shape[-1]
+    b, a, _ = jax.vmap(lambda uu, vv: svd_realloc_factored(uu, vv, r_max))(
+        u.reshape((-1, d, rr)), v.reshape((-1, rr, n)))
+    return b.reshape(lead + (d, r_max)), a.reshape(lead + (r_max, n))
+
+
+def _momentum_step(old_b, old_a, new_b, new_a, state_b, state_a, beta, eta,
+                   r_max):
+    """One momentum update on (possibly batch-stacked) factor pairs.
+
+    state_b/state_a of None means "no accumulated momentum yet" (the first
+    round): m_0 = Delta_0 exactly, matching the dense FedAvgM recursion with
+    zero-initialized momentum.
+    """
+    du, dv = _stack((new_b, new_a), (old_b, -old_a))
+    if state_b is None:
+        mu, mv = du, dv
+    else:
+        sq = beta ** 0.5
+        mu, mv = _stack((sq * state_b, sq * state_a), (du, dv))
+    b_m, a_m = _trunc(mu, mv, r_max)
+    gu, gv = _stack((old_b, old_a), (eta * b_m, a_m))
+    b_g, a_g = _trunc(gu, gv, r_max)
+    return b_g, a_g, b_m, a_m
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "eta", "r_max"))
+def _bucket_core(old_bs, old_as, new_b, new_a, state_b, state_a, *,
+                 beta, eta, r_max):
+    """The whole bucket's momentum update as ONE XLA program.
+
+    old_bs/old_as: tuples over bucket adapters of (…, d, r_max) /
+    (…, r_max, n) arrays (stacked inside the program, so the assembly costs
+    no extra dispatch); new_b/new_a: the aggregation result's
+    (P, …, d, r_max)/(P, …, r_max, n) stacks; state_b/state_a: the
+    bucket-stacked momentum state, or None on the first round.
+    """
+    return _momentum_step(jnp.stack(old_bs), jnp.stack(old_as),
+                          new_b, new_a, state_b, state_a,
+                          beta, eta, r_max)
 
 
 @dataclass
@@ -50,6 +107,9 @@ class FactoredServerMomentum:
     beta: float = 0.9
     eta: float = 1.0
     state: Optional[Dict] = None
+    # jitted bucket dispatches issued so far (bench_round_latency asserts
+    # momentum adds <= 1 dispatch per bucket per round)
+    bucket_calls: int = 0
 
     def apply(self, adapter_key, old_ba: Tuple, new_ba: Tuple,
               r_max: int) -> Tuple:
@@ -59,16 +119,90 @@ class FactoredServerMomentum:
             self.state = {}
         b_old, a_old = old_ba
         b_new, a_new = new_ba
-        # delta = new - old as a factor stack (sign folded into A)
-        du, dv = _stack((b_new, a_new), (b_old, -a_old))
-        if adapter_key in self.state:
-            b_m, a_m = self.state[adapter_key]
-            sq = self.beta ** 0.5
-            mu, mv = _stack((sq * b_m, sq * a_m), (du, dv))
-        else:
-            mu, mv = du, dv
-        b_m, a_m = _trunc(mu, mv, r_max)
+        prev = self.state.get(adapter_key)
+        b_g, a_g, b_m, a_m = _momentum_step(
+            b_old, a_old, b_new, a_new,
+            None if prev is None else prev[0],
+            None if prev is None else prev[1],
+            self.beta, self.eta, r_max)
         self.state[adapter_key] = (b_m, a_m)
-        # W_new = W_old + eta * m
-        gu, gv = _stack((b_old, a_old), (self.eta * b_m, a_m))
-        return _trunc(gu, gv, r_max)
+        return b_g, a_g
+
+    def apply_bucket(self, adapter_keys: Sequence, old_pairs: Sequence[Tuple],
+                     new_b, new_a, r_max: int) -> Tuple:
+        """Momentum for a whole shape bucket in ONE jitted dispatch.
+
+        ``old_pairs``: the per-adapter global (B, A) pairs in bucket order;
+        ``new_b``/``new_a``: the aggregation result's stacked
+        (P, …, d, r_max)/(P, …, r_max, n) factors (the layout
+        ``Aggregator.aggregate_grouped`` returns). Identical math to
+        per-adapter ``apply``, batched over the bucket axis.
+
+        State for a bucket lives STACKED under the tuple-of-adapter-keys
+        bucket key -- reading/writing it enqueues no per-adapter slice ops,
+        which matters because jax's CPU client bounds in-flight
+        computations and the async engine lives or dies by a shallow
+        dispatch queue. Per-adapter entries (from ``apply`` or a restored
+        checkpoint) are migrated into the bucket stack on first use.
+        """
+        if self.state is None:
+            self.state = {}
+        bucket_key = tuple(adapter_keys)
+        prev = self.state.get(bucket_key)
+        if prev is None and all(k in self.state for k in adapter_keys):
+            # one-time migration: per-adapter entries -> bucket stack
+            prev = (jnp.stack([self.state[k][0] for k in adapter_keys]),
+                    jnp.stack([self.state[k][1] for k in adapter_keys]))
+            for k in adapter_keys:
+                del self.state[k]
+        b_g, a_g, b_m, a_m = _bucket_core(
+            tuple(b for b, _ in old_pairs),
+            tuple(a for _, a in old_pairs),
+            new_b, new_a,
+            None if prev is None else prev[0],
+            None if prev is None else prev[1],
+            beta=self.beta, eta=self.eta, r_max=r_max)
+        self.bucket_calls += 1
+        self.state[bucket_key] = (b_m, a_m)
+        return b_g, a_g
+
+    # -- checkpointing ------------------------------------------------------
+
+    @staticmethod
+    def _is_bucket_key(key) -> bool:
+        return (isinstance(key, tuple) and len(key) > 0
+                and isinstance(key[0], tuple))
+
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        """Flat path-keyed arrays for ``checkpointing.save_flat``.
+
+        Always serialized PER ADAPTER (bucket stacks are sliced), so
+        checkpoints are engine-portable regardless of which call surface
+        produced the state. Keys: ``<adapter path joined by '/'>`` +
+        ``"/B_m"`` | ``"/A_m"``; adapter paths contain no slashes, so the
+        encoding is invertible.
+        """
+        out: Dict[str, np.ndarray] = {}
+        for key, (b_m, a_m) in (self.state or {}).items():
+            if self._is_bucket_key(key):
+                for j, adapter in enumerate(key):
+                    name = "/".join(adapter)
+                    out[name + "/B_m"] = np.asarray(b_m[j])
+                    out[name + "/A_m"] = np.asarray(a_m[j])
+            else:
+                name = "/".join(key) if isinstance(key, tuple) else str(key)
+                out[name + "/B_m"] = np.asarray(b_m)
+                out[name + "/A_m"] = np.asarray(a_m)
+        return out
+
+    def load_state_arrays(self, arrays: Dict[str, np.ndarray]) -> None:
+        """Inverse of ``state_arrays``: rebuild {adapter: (B_m, A_m)}."""
+        state: Dict = {}
+        for name, arr in arrays.items():
+            path, leaf = name.rsplit("/", 1)
+            key = tuple(path.split("/"))
+            pair = state.setdefault(key, [None, None])
+            pair[0 if leaf == "B_m" else 1] = jnp.asarray(arr)
+        for key, (b_m, a_m) in state.items():
+            assert b_m is not None and a_m is not None, key
+        self.state = {k: (b, a) for k, (b, a) in state.items()}

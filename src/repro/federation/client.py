@@ -22,6 +22,12 @@ slices contribute zero to the forward, their gradients are identically zero
 zero -- bit-for-bit the state sequential training leaves OUTSIDE its r_k
 slice, which aggregation zero-pads anyway. One compilation and one XLA
 dispatch cover the whole heterogeneous round.
+
+``dispatch_group_masked`` wraps either masked runner as a NON-BLOCKING
+handle pair (factor stacks, loss array) for the async round engine: jax's
+async dispatch returns enqueued arrays immediately, so the server can
+pipeline the next round's training against the current round's aggregation
+without any ``jax.block_until_ready``/host-transfer synchronization point.
 """
 from __future__ import annotations
 
@@ -35,6 +41,18 @@ import numpy as np
 from repro.core.lora import merge_lora, split_lora
 from repro.models.transformer import Model
 from repro.optim import AdamW
+
+
+def _stack_steps(xs) -> "np.ndarray":
+    """Batch-leaf stacking on the HOST when the leaves are numpy (the
+    data-pipeline common case): an eager ``jnp.stack`` would synchronize
+    with in-flight device work on jax's CPU client, serializing the async
+    round engine's pipeline. Device-array leaves fall back to jnp.stack.
+    Shared by the trainers' step-axis stacking here and the server's
+    client-axis stacking (``federation/server.py``)."""
+    if all(isinstance(x, np.ndarray) for x in xs):
+        return np.stack(xs)
+    return jnp.stack(xs)
 
 
 class LocalTrainer:
@@ -207,6 +225,29 @@ class LocalTrainer:
             self._vstep_cache[key] = jax.jit(sharded)
         return self._vstep_cache[key]
 
+    def dispatch_group_masked(self, base, global_lora, ranks: Sequence[int],
+                              batch_stacks: List[dict], lr: float,
+                              mesh=None) -> Tuple[dict, object]:
+        """Non-blocking all-rank group dispatch: (factor stacks, loss handle).
+
+        The async round engine's entry point. Both returns are plain jax
+        arrays produced by the jitted (or shard_mapped, when ``mesh`` is
+        given) masked runner -- jax's async dispatch means this function
+        returns as soon as the computation is ENQUEUED; nothing here (and
+        nothing the caller does short of ``np.asarray``/item reads) blocks
+        on device execution, so round t+1's training can be in flight while
+        round t's aggregation is still running. The loss handle is
+        ``metrics["loss"]`` unmaterialized (None when the group ran zero
+        steps); callers convert it to floats only at finalize time.
+        """
+        if mesh is not None:
+            lora_g, metrics = self.train_group_masked_sharded(
+                base, global_lora, ranks, batch_stacks, lr, mesh)
+        else:
+            lora_g, metrics = self.train_group_masked(
+                base, global_lora, ranks, batch_stacks, lr)
+        return lora_g, metrics.get("loss")
+
     def train(self, base, global_lora, rank: int,
               batch_iter: Iterable[dict], lr: float) -> Tuple[dict, dict]:
         """Run local epochs; returns (trained lora tree, last metrics)."""
@@ -260,13 +301,13 @@ class LocalTrainer:
         r_max = self.model.lora.r_max
         mask = (np.arange(r_max)[None, :]
                 < np.asarray(ranks)[:, None]).astype(np.float32)
-        scales = jnp.asarray([self.model.lora.scaling(int(r))
-                              for r in ranks], jnp.float32)
+        scales = np.asarray([self.model.lora.scaling(int(r))
+                             for r in ranks], np.float32)
         runner = self.masked_runner(len(batch_stacks))
-        stacks = (jax.tree.map(lambda *xs: jnp.stack(xs), *batch_stacks)
+        stacks = (jax.tree.map(lambda *xs: _stack_steps(xs), *batch_stacks)
                   if batch_stacks else ())
-        return runner(global_lora, base, stacks, jnp.float32(lr),
-                      jnp.asarray(mask), scales)
+        return runner(global_lora, base, stacks, np.float32(lr),
+                      mask, scales)
 
     def train_group_masked_sharded(self, base, global_lora,
                                    ranks: Sequence[int],
@@ -286,10 +327,10 @@ class LocalTrainer:
         assert len(ranks) % n_shards == 0, (len(ranks), n_shards)
         mask = (np.arange(r_max)[None, :]
                 < np.asarray(ranks)[:, None]).astype(np.float32)
-        scales = jnp.asarray([self.model.lora.scaling(int(r))
-                              for r in ranks], jnp.float32)
+        scales = np.asarray([self.model.lora.scaling(int(r))
+                             for r in ranks], np.float32)
         runner = self.masked_runner_sharded(len(batch_stacks), mesh)
-        stacks = (jax.tree.map(lambda *xs: jnp.stack(xs), *batch_stacks)
+        stacks = (jax.tree.map(lambda *xs: _stack_steps(xs), *batch_stacks)
                   if batch_stacks else ())
-        return runner(global_lora, base, stacks, jnp.float32(lr),
-                      jnp.asarray(mask), scales)
+        return runner(global_lora, base, stacks, np.float32(lr),
+                      mask, scales)

@@ -51,14 +51,21 @@ def fedvit_config(d_model: int = 128, num_layers: int = 2,
 
 
 def _to_batch(x: np.ndarray, y: np.ndarray, num_positions: int) -> dict:
-    """Classification batch: label read out at position 0."""
+    """Classification batch: label read out at position 0.
+
+    Returned as NUMPY arrays deliberately: batch building is the host-side
+    data pipeline, and on jax's CPU client any eager device touch (even a
+    transfer) synchronizes with in-flight computations. Keeping batches in
+    host memory until the training dispatch transfers them is what lets the
+    async round engine overlap round t+1's data pipeline with round t's
+    device execution."""
     b = x.shape[0]
     targets = np.zeros((b, num_positions), np.int32)
     targets[:, 0] = y
     mask = np.zeros((b, num_positions), np.float32)
     mask[:, 0] = 1.0
-    return {"embeds": jnp.asarray(x), "targets": jnp.asarray(targets),
-            "loss_mask": jnp.asarray(mask)}
+    return {"embeds": np.asarray(x, np.float32), "targets": targets,
+            "loss_mask": mask}
 
 
 @dataclass
@@ -87,6 +94,8 @@ def build_experiment(method: str = "raflora", *,
                      server_momentum_beta: float = 0.0,
                      round_engine: str = "batched",
                      mesh=None,
+                     pipeline_depth: int = 1,
+                     staleness_gamma: float = 1.0,
                      data_seed: int = 0) -> FLExperiment:
     fl = FLConfig(aggregator=method, num_clients=20, participation=0.25,
                   num_rounds=40, local_batch_size=32, learning_rate=2e-3,
@@ -144,7 +153,9 @@ def build_experiment(method: str = "raflora", *,
     server = FederatedLoRA(model, fl, lora, registry, batch_fn,
                            backend=backend, partial_up_to=partial_up_to,
                            server_momentum=server_momentum,
-                           round_engine=round_engine, mesh=mesh)
+                           round_engine=round_engine, mesh=mesh,
+                           pipeline_depth=pipeline_depth,
+                           staleness_gamma=staleness_gamma)
     test_batch = _to_batch(x_te[:512], y_te[:512], data.patches)
     return FLExperiment(server=server, model=model, test_batch=test_batch,
                         registry=registry)

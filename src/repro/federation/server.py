@@ -28,11 +28,32 @@ Two round engines (DESIGN.md "Batched round engine"):
   as per-shard partials reduced by ONE ``jax.lax.psum`` per bucket before
   the unchanged SVD reallocation (launch/fl_dryrun.py lowers the very same
   program on the mocked production pod mesh).
+
+* ``round_engine="async"`` (DESIGN.md §6): the round as explicit
+  plan -> train -> aggregate STAGES with FedBuff-style BUFFERED
+  aggregation. Every round plans and dispatches one ``RoundPlan``'s masked
+  vmapped local training as non-blocking jax handles
+  (``client.dispatch_group_masked``) into a ``pipeline_depth``-deep buffer;
+  when the buffer fills, ONE staleness-discounted bucketed aggregation +
+  SVD realloc consumes every pending plan. Plan age in rounds is its
+  staleness (mixed 0..depth-1 inside each aggregation); clients'
+  aggregation weights are discounted by ``gamma**staleness`` folded into
+  the n_k-derived weights (``core.aggregation.staleness_discount`` --
+  ghost-client zero-weighting and the Eq. 8 fallback untouched).
+  Aggregation, SVD, momentum and the global write-back amortize over depth
+  rounds, and the host path between dispatches is deliberately jax-free
+  (numpy batches/weights, flush-time-only device reads) so training
+  dispatches pipeline against in-flight aggregation work instead of
+  synchronizing with it. ``pipeline_depth=1`` reduces exactly to the
+  batched engine (zero staleness is an arithmetic no-op); an optional mesh
+  routes both stages through the sharded dispatches instead.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -44,7 +65,7 @@ from repro.configs.base import FLConfig, LoRAConfig
 from repro.core.aggregation import Aggregator, weighted_avg
 from repro.core.energy import EnergyTrace
 from repro.core.lora import merge_lora, split_lora
-from repro.federation.client import LocalTrainer
+from repro.federation.client import LocalTrainer, _stack_steps
 from repro.federation.topology import ClientRegistry
 from repro.models.transformer import Model
 from repro.optim import get_schedule
@@ -61,6 +82,72 @@ class RoundStats:
     wall_time_s: float
 
 
+@dataclass
+class BucketedUpdate:
+    """Aggregation output of the grouped engines, kept STACKED per shape
+    bucket: ``buckets`` entries are (adapter parents, B stack (P, …, d, r),
+    A stack (P, …, r, n)); ``mags`` holds DoRA magnitudes. Never unstacked
+    per adapter on the hot path -- the write-back slices inside ONE jitted
+    program (``_write_bucketed``), because every eager slice is a separate
+    computation against jax's bounded CPU in-flight queue and would stall
+    the async engine's dispatch pipeline."""
+
+    buckets: List[tuple] = field(default_factory=list)
+    mags: Dict = field(default_factory=dict)
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_parents",))
+def _write_bucketed(lora_tree, bucket_stacks, mags, *, bucket_parents):
+    """Write a ``BucketedUpdate`` back into the model-layout lora tree as
+    one XLA program (swapaxes/slice/astype plumbing included)."""
+    from repro.core.lora import _is_lora_path
+    lookup = {p: (bi, j) for bi, group in enumerate(bucket_parents)
+              for j, p in enumerate(group)}
+
+    def rebuild(path, x):
+        if x is None or not _is_lora_path(path):
+            return x
+        parent = tuple(str(getattr(p, "key", p)) for p in path[:-1])
+        if path[-1].key == "lora_m":
+            m_new = mags.get((parent, "m"))
+            return x if m_new is None else m_new.astype(x.dtype)
+        bi, j = lookup[parent]
+        b_g, a_g = bucket_stacks[bi]
+        if path[-1].key == "lora_a":
+            return jnp.swapaxes(b_g[j], -2, -1).astype(x.dtype)
+        return jnp.swapaxes(a_g[j], -2, -1).astype(x.dtype)
+
+    return jax.tree_util.tree_map_with_path(rebuild, lora_tree,
+                                            is_leaf=lambda x: x is None)
+
+
+@dataclass
+class RoundPlan:
+    """One round's sampled work order, carried between the round stages.
+
+    Everything rng-dependent (client sample, data batches) is fixed at PLAN
+    time, so the sampling stream is identical across engines and pipeline
+    depths. After the train stage the plan carries the dispatched group
+    factor stacks and per-group loss handles -- unmaterialized jax arrays
+    (``client.dispatch_group_masked``), which is what lets the async engine
+    buffer trained-but-not-yet-aggregated rounds without blocking.
+    """
+
+    round: int                 # the logical round this plan aggregates into
+    version: int               # global model version when training dispatched
+    clients: List[int]
+    ranks: List[int]
+    n_k: List[int]
+    lr: float
+    client_batches: Optional[list] = None   # dropped once training dispatched
+    # grouped engines: [(members, r_max, {adapter_path: stacked factors})]
+    group_factors: Optional[list] = None
+    loss_parts: Optional[list] = None       # [(members, loss handle | None)]
+    # sequential engine: per-client factor dicts + eager float losses
+    client_factors: Optional[list] = None
+    losses: Optional[list] = None
+
+
 class FederatedLoRA:
     """End-to-end heterogeneous-rank FedLoRA driver."""
 
@@ -72,16 +159,30 @@ class FederatedLoRA:
                  partial_up_to: Optional[int] = None,
                  server_momentum=None,
                  round_engine: str = "batched",
-                 mesh=None):
+                 mesh=None,
+                 pipeline_depth: int = 1,
+                 staleness_gamma: float = 1.0):
         """batch_fn(client_id, rng) -> list of training batches (dicts).
 
         ``round_engine="sharded"`` runs the batched engine's dispatches as
         shard_map programs over ``mesh``'s ``data`` axis (defaults to a
         1-D mesh over every visible device, ``launch/mesh.py::make_fl_mesh``).
+
+        ``round_engine="async"`` buffers rounds: up to ``pipeline_depth``
+        trained plans are in flight (training dispatched, aggregation
+        pending), one buffered aggregation consumes them all, and stale
+        contributions are discounted by ``staleness_gamma**staleness``
+        (gamma=1: no discount). ``pipeline_depth=1`` IS the batched engine.
+        An explicit ``mesh`` routes the async stages through the sharded
+        dispatches.
         """
-        assert round_engine in ("batched", "sequential", "sharded"), \
-            round_engine
+        assert round_engine in ("batched", "sequential", "sharded",
+                                "async"), round_engine
+        assert pipeline_depth >= 1, pipeline_depth
+        assert 0.0 < staleness_gamma <= 1.0, staleness_gamma
         self.round_engine = round_engine
+        self.pipeline_depth = pipeline_depth if round_engine == "async" else 1
+        self.staleness_gamma = staleness_gamma
         if round_engine == "sharded" and mesh is None:
             from repro.launch.mesh import make_fl_mesh
             mesh = make_fl_mesh()
@@ -109,6 +210,12 @@ class FederatedLoRA:
         self.energy = EnergyTrace(lora.rank_levels)
         self.history: List[RoundStats] = []
         self._extract_jit = None   # lazily-built jitted factor extractor
+        # async engine state: FIFO of trained-but-unaggregated plans
+        # (their rounds are already counted) and the next round to plan
+        self._pending: "deque[RoundPlan]" = deque()
+        self._plan_idx = 0
+        # finalized rounds whose stats still hold unmaterialized handles
+        self._stat_queue: deque = deque()
 
     # -- adapter plumbing ---------------------------------------------------
 
@@ -160,8 +267,19 @@ class FederatedLoRA:
         pairs, mags = self._extract_jit(lora_tree, rank)
         return {**pairs, **mags}
 
-    def _write_factors(self, results: Dict[tuple, tuple]) -> None:
-        """Write aggregated (b_g, a_g) back into the global lora tree."""
+    def _write_factors(self, results) -> None:
+        """Write aggregated (b_g, a_g) back into the global lora tree.
+
+        ``BucketedUpdate`` (grouped engines) writes in ONE jitted dispatch;
+        a per-adapter dict (sequential reference) writes eagerly."""
+        if isinstance(results, BucketedUpdate):
+            self.global_lora = _write_bucketed(
+                self.global_lora,
+                tuple((b, a) for _, b, a in results.buckets),
+                results.mags,
+                bucket_parents=tuple(parents
+                                     for parents, _, _ in results.buckets))
+            return
         from repro.core.lora import _is_lora_path
 
         def rebuild(path, x):
@@ -229,15 +347,19 @@ class FederatedLoRA:
         cloning keeps their losses/gradients finite so 0-weighted NaNs can
         never poison the cross-shard psum.
 
-        Returns (group_factors, losses): group_factors entries are
+        Returns (group_factors, loss_parts): group_factors entries are
         (members, r_max, {adapter_path: stacked factors}) where members[j]
         is the sampled-client index at stacked position j, or -1 for a
-        ghost; losses in sampled-client order (ghost losses dropped)."""
+        ghost; loss_parts entries are (members, loss handle) with the loss
+        handle an UNMATERIALIZED jax array (or None for a zero-step group)
+        -- nothing in this function blocks on device execution, so the
+        async engine can buffer the whole round as in-flight handles
+        (``_losses_from_parts`` materializes them at finalize time)."""
         groups: Dict[int, List[int]] = {}
         for i, batches in enumerate(client_batches):
             groups.setdefault(len(batches), []).append(i)
         group_factors = []
-        losses = [float("nan")] * len(ranks)
+        loss_parts = []
         r_max = self.lora_cfg.r_max
         r_min = min(self.lora_cfg.rank_levels)
         for steps, idxs in sorted(groups.items()):
@@ -252,20 +374,18 @@ class FederatedLoRA:
                                key=lambda j: (j % n_shards, j // n_shards))
                 members = [members[j] for j in order]
             g_ranks = [ranks[i] if i >= 0 else r_min for i in members]
+            # stack on the HOST (numpy) -- an eager jnp.stack would
+            # synchronize with in-flight device work on the CPU client and
+            # break the async engine's overlap; the training dispatch
+            # transfers the stacked batches
             stacks = [
-                jax.tree.map(lambda *xs: jnp.stack(xs),
+                jax.tree.map(lambda *xs: _stack_steps(xs),
                              *[client_batches[i if i >= 0 else idxs[0]][t]
                                for i in members])
                 for t in range(steps)]
-            if sharded:
-                lora_g, metrics = self.trainer.train_group_masked_sharded(
-                    self.base, self.global_lora, g_ranks, stacks, lr,
-                    self.mesh)
-            else:
-                lora_g, metrics = self.trainer.train_group_masked(
-                    self.base, self.global_lora, g_ranks, stacks, lr)
-            loss_g = np.asarray(metrics.get(
-                "loss", jnp.full((len(members),), jnp.nan)))
+            lora_g, loss_g = self.trainer.dispatch_group_masked(
+                self.base, self.global_lora, g_ranks, stacks, lr,
+                mesh=self.mesh if sharded else None)
             # masked training leaves zeros beyond each client's rank, which
             # is exactly the zero-padded (G, ..., d, r_max) stack layout the
             # grouped aggregation expects; _extract_factors is shape-
@@ -273,10 +393,23 @@ class FederatedLoRA:
             group_factors.append((members, r_max,
                                   self._extract_factors_batched(lora_g,
                                                                 r_max)))
+            loss_parts.append((members, loss_g))
+        return group_factors, loss_parts
+
+    @staticmethod
+    def _losses_from_parts(loss_parts, num_clients: int) -> List[float]:
+        """Materialize per-group loss handles into sampled-client-order
+        floats (ghost losses dropped). The one host transfer of the train
+        stage, deferred to round finalize so pipelined rounds never block
+        on it early."""
+        losses = [float("nan")] * num_clients
+        for members, loss_g in loss_parts:
+            arr = (np.asarray(loss_g) if loss_g is not None
+                   else np.full((len(members),), np.nan))
             for j, i in enumerate(members):
                 if i >= 0:
-                    losses[i] = float(loss_g[j])
-        return group_factors, losses
+                    losses[i] = float(arr[j])
+        return losses
 
     # -- aggregation (both engines) ------------------------------------------
 
@@ -314,9 +447,9 @@ class FederatedLoRA:
         return results, deltas, self._sigma_probe(parents, sigmas)
 
     def _aggregate_grouped(self, group_factors, ranks, n_k, *,
-                           sharded: bool):
-        """Batched AND sharded engines: bucket adapters by factor shape and
-        aggregate each bucket with ONE jitted call.
+                           sharded: bool, staleness=None):
+        """Batched, sharded AND async engines: bucket adapters by factor
+        shape and aggregate each bucket with ONE jitted call.
 
         The client axis is assembled group-by-group (clients stay in rank-
         group order, with ranks/n_k permuted to match), so each bucket needs
@@ -325,24 +458,39 @@ class FederatedLoRA:
         ``aggregate_grouped_sharded`` (client axis left sharded over the
         mesh, one psum per bucket); ghost members (-1) ride along with
         n_k=0 so every weight they receive -- including the DoRA magnitude
-        FedAvg weights -- is exactly zero."""
-        results, deltas, sigmas = {}, {}, {}
+        FedAvg weights -- is exactly zero.
+
+        ``staleness``: per-sampled-client aggregation ages (async engine);
+        folded into every n_k-derived weight via
+        ``aggregation.staleness_discount`` with ``self.staleness_gamma``.
+        Server momentum, when configured, applies per bucket in ONE jitted
+        dispatch (``FactoredServerMomentum.apply_bucket``) instead of an
+        unjitted per-adapter host loop. Returns a ``BucketedUpdate`` (plus
+        flora deltas and the lazy sigma probe) -- per-adapter unstacking is
+        deferred into the jitted write-back."""
+        from repro.core.aggregation import staleness_discount
+        update = BucketedUpdate()
+        deltas = {}
+        sigma_probe = None
         r_max = self.lora_cfg.r_max
         r_min = min(self.lora_cfg.rank_levels)
+        gamma = self.staleness_gamma
         global_factors = self._extract_factors_batched(self.global_lora,
                                                        r_max)
         # group-order permutation of the client axis (ghosts: rank r_min,
-        # zero samples)
+        # zero samples, zero staleness)
         members = [i for mem, _, _ in group_factors for i in mem]
         ranks_o = [ranks[i] if i >= 0 else r_min for i in members]
         n_k_o = [n_k[i] if i >= 0 else 0 for i in members]
-        w_np = np.asarray(n_k_o, dtype=np.float64)
+        stal_o = (None if staleness is None else
+                  [staleness[i] if i >= 0 else 0 for i in members])
+        w_np = staleness_discount(n_k_o, stal_o, gamma)
         w_clients = jnp.asarray(w_np / w_np.sum())
         parents = list(group_factors[0][2])
         for parent in [p for p in parents if self._is_magnitude(p)]:
             # DoRA magnitudes: weighted FedAvg (not rank-structured)
             ms = jnp.concatenate([fg[parent] for _, _, fg in group_factors])
-            results[parent] = weighted_avg(ms, w_clients)
+            update.mags[parent] = weighted_avg(ms, w_clients)
         buckets: Dict[tuple, List] = {}
         for parent in parents:
             if self._is_magnitude(parent):
@@ -356,20 +504,32 @@ class FederatedLoRA:
                 ranks_o, n_k_o)
             kwargs = dict(
                 global_bs=[global_factors[p][0] for p in group],
-                global_as=[global_factors[p][1] for p in group])
+                global_as=[global_factors[p][1] for p in group],
+                staleness=stal_o, gamma=gamma)
             if sharded:
                 res = self.aggregator.aggregate_grouped_sharded(
                     *args, self.mesh, **kwargs)
             else:
                 res = self.aggregator.aggregate_grouped(*args, **kwargs)
-            for j, parent in enumerate(group):
-                res_j = type(res)(
-                    res.b_g[j], res.a_g[j],
-                    None if res.sigma is None else res.sigma[j],
-                    None if res.merge_delta is None else res.merge_delta[j])
-                self._record_result(parent, global_factors[parent], res_j,
-                                    results, deltas, sigmas)
-        return results, deltas, self._sigma_probe(parents, sigmas)
+            if self.server_momentum is not None:
+                # whole-bucket momentum: one jitted stacked-QR-SVD dispatch
+                b_new, a_new = self.server_momentum.apply_bucket(
+                    tuple(group), [global_factors[p] for p in group],
+                    res.b_g, res.a_g, r_max)
+            else:
+                b_new, a_new = res.b_g, res.a_g
+            update.buckets.append((tuple(group), b_new, a_new))
+            if res.merge_delta is not None:
+                for j, parent in enumerate(group):
+                    deltas[parent] = res.merge_delta[j]
+            if res.sigma is not None and sigma_probe is None:
+                # energy probe = the FIRST adapter's spectrum (bucket order
+                # preserves first-seen parent order). Kept as the UNSLICED
+                # bucket stack handle -- even an eager slice would
+                # synchronize with the device; flush_stats slices/averages
+                # in numpy after the one d2h transfer.
+                sigma_probe = ("bucket_stack", res.sigma)
+        return update, deltas, sigma_probe
 
     def _record_result(self, parent, global_pair, res, results, deltas,
                        sigmas) -> None:
@@ -384,58 +544,225 @@ class FederatedLoRA:
             sigmas[parent] = res.sigma
 
     @staticmethod
-    def _sigma_probe(parents, sigmas) -> Optional[np.ndarray]:
-        """First adapter's spectrum (layer-averaged) as the energy probe."""
+    def _sigma_probe(parents, sigmas) -> Optional[jnp.ndarray]:
+        """First adapter's spectrum (layer-averaged) as the energy probe.
+
+        Returned UNMATERIALIZED (a lazy jax array): reading it is the round's
+        device-sync point, so it happens at stat-materialization time, not
+        inside the aggregate stage."""
         for parent in parents:
             if parent in sigmas:
-                sig = np.asarray(sigmas[parent])
+                sig = jnp.asarray(sigmas[parent])
                 return sig if sig.ndim == 1 else sig.mean(axis=0)
         return None
 
-    # -- the round ----------------------------------------------------------
+    # -- the round: plan -> train -> aggregate stages ------------------------
+
+    @property
+    def _sharded_dispatch(self) -> bool:
+        """Whether the grouped stages run through the shard_map dispatches
+        (the sharded engine always; the async engine iff given a mesh)."""
+        return (self.round_engine == "sharded"
+                or (self.round_engine == "async" and self.mesh is not None))
+
+    def _plan_round(self) -> RoundPlan:
+        """PLAN stage: sample clients/ranks/n_k/lr and draw data batches.
+
+        Consumes the rng in strict round order (one ``sample_round`` + one
+        ``batch_fn`` per client), so the sampling stream is identical across
+        engines AND pipeline depths -- a resumed or re-depth'd run sees the
+        same clients."""
+        fl = self.fl
+        clients = self.registry.sample_round(fl.clients_per_round,
+                                             self.rng).tolist()
+        plan = RoundPlan(
+            round=self._plan_idx, version=self.round_idx, clients=clients,
+            ranks=[int(self.registry.ranks[c]) for c in clients],
+            n_k=[max(self.registry.num_samples(c), 1) for c in clients],
+            lr=self.schedule(self._plan_idx),
+            client_batches=[self.batch_fn(cid, self.rng) for cid in clients])
+        self._plan_idx += 1
+        return plan
+
+    def _train_stage(self, plan: RoundPlan) -> None:
+        """TRAIN stage: dispatch the plan's local training. Grouped engines
+        are non-blocking (jax handles stay enqueued); the sequential
+        reference trains eagerly."""
+        if self.round_engine == "sequential":
+            plan.client_factors, plan.losses = self._train_sequential(
+                plan.client_batches, plan.ranks, plan.lr)
+        else:
+            plan.group_factors, plan.loss_parts = self._train_grouped(
+                plan.client_batches, plan.ranks, plan.lr,
+                sharded=self._sharded_dispatch)
+        plan.client_batches = None     # free the host-side batch copies
+
+    def _aggregate_stage(self, plan: RoundPlan, staleness: int = 0):
+        """AGGREGATE stage: bucketed aggregation + SVD realloc (+ bucketed
+        server momentum) of one trained plan against the CURRENT global
+        adapters, discounting by the plan's staleness."""
+        if self.round_engine == "sequential":
+            return self._aggregate_sequential(plan.client_factors,
+                                              plan.ranks, plan.n_k)
+        return self._aggregate_grouped(
+            plan.group_factors, plan.ranks, plan.n_k,
+            sharded=self._sharded_dispatch,
+            staleness=[staleness] * len(plan.clients))
+
+    def _finalize_round(self, plan: RoundPlan, results, deltas, sigma_probe,
+                        t0: float) -> RoundStats:
+        """Write back the aggregate (``results=None`` on async buffer-fill
+        rounds: the global model is unchanged), record energy/stats,
+        advance the round counter.
+
+        All host sync points (loss materialization, sigma probe) are
+        deferred through the stat queue: the synchronous engines flush it
+        immediately (keep=0 -- identical behavior to before), while the
+        async engine keeps up to ``pipeline_depth - 1`` rounds' stats as
+        unmaterialized handles so the host never waits for the device
+        inside the pipelined window. The returned RoundStats object is
+        patched IN PLACE when its handles materialize; ``run()``, ``save``
+        and ``drain_pending`` flush, so histories read after any of those
+        are always complete."""
+        if results is not None:
+            self._write_factors(results)
+        if deltas:
+            self._merge_flora_delta(deltas)
+        stats = RoundStats(
+            round=plan.round, clients=plan.clients, ranks=plan.ranks,
+            lr=plan.lr, mean_client_loss=float("nan"),
+            sigma_probe=None, wall_time_s=time.time() - t0)
+        self.history.append(stats)
+        self.round_idx += 1
+        self._stat_queue.append((stats, plan, sigma_probe))
+        keep = (self.pipeline_depth - 1
+                if self.round_engine == "async" else 0)
+        self.flush_stats(keep=keep)
+        return stats
+
+    @staticmethod
+    def _materialize_probe(sigma_probe) -> Optional[np.ndarray]:
+        """One d2h transfer + numpy slice/average of a probe handle."""
+        if sigma_probe is None:
+            return None
+        if (isinstance(sigma_probe, tuple)
+                and sigma_probe[0] == "bucket_stack"):
+            arr = np.asarray(sigma_probe[1])[0]
+        else:
+            arr = np.asarray(sigma_probe)
+        return arr if arr.ndim == 1 else arr.mean(axis=0)
+
+    def flush_stats(self, keep: int = 0) -> None:
+        """Materialize queued round stats (oldest first) until at most
+        ``keep`` remain pending: loss handles -> mean client loss, sigma
+        probe -> energy trace + history entry."""
+        while len(self._stat_queue) > keep:
+            stats, plan, sigma_probe = self._stat_queue.popleft()
+            probe = self._materialize_probe(sigma_probe)
+            if probe is not None:
+                self.energy.record(probe)
+                stats.sigma_probe = probe
+            losses = (plan.losses if plan.losses is not None
+                      else self._losses_from_parts(plan.loss_parts,
+                                                   len(plan.ranks)))
+            # nanmean: a zero-batch client trains 0 steps and reports NaN --
+            # a per-client condition that must not poison the round stat
+            loss_arr = np.asarray(losses, dtype=np.float64)
+            stats.mean_client_loss = (
+                float(np.nanmean(loss_arr))
+                if not np.all(np.isnan(loss_arr)) else float("nan"))
 
     def run_round(self) -> RoundStats:
+        if self.round_engine == "async":
+            return self._run_round_async()
         t0 = time.time()
-        fl = self.fl
-        m = fl.clients_per_round
-        clients = self.registry.sample_round(m, self.rng).tolist()
-        ranks = [int(self.registry.ranks[c]) for c in clients]
-        n_k = [max(self.registry.num_samples(c), 1) for c in clients]
-        lr = self.schedule(self.round_idx)
-        # one batch_fn call per client, in sampled order, regardless of
-        # engine -- keeps the data rng stream identical across engines
-        client_batches = [self.batch_fn(cid, self.rng) for cid in clients]
+        plan = self._plan_round()
+        self._train_stage(plan)
+        results, deltas, sigma_probe = self._aggregate_stage(plan)
+        return self._finalize_round(plan, results, deltas, sigma_probe, t0)
 
-        if self.round_engine == "sequential":
-            client_factors, losses = self._train_sequential(
-                client_batches, ranks, lr)
-            results, deltas, sigma_probe = self._aggregate_sequential(
-                client_factors, ranks, n_k)
-        else:
-            sharded = self.round_engine == "sharded"
-            group_factors, losses = self._train_grouped(
-                client_batches, ranks, lr, sharded=sharded)
-            results, deltas, sigma_probe = self._aggregate_grouped(
-                group_factors, ranks, n_k, sharded=sharded)
+    def _run_round_async(self) -> RoundStats:
+        """One async round: plan + dispatch this round's training
+        (non-blocking -- nothing here waits on the device), buffer the
+        plan, and run ONE buffered aggregation when ``pipeline_depth``
+        plans are pending.
 
+        This is FedBuff-style buffered aggregation on a deterministic
+        cadence: the server applies one staleness-discounted aggregation
+        per ``pipeline_depth`` training rounds, consuming the whole buffer
+        in one bucketed dispatch. Plan age in rounds IS the staleness
+        (mixed 0..depth-1 within every aggregation), so
+        ``staleness_gamma`` shifts relative weight toward fresher rounds.
+        The wins: (a) aggregation + SVD realloc + global write-back +
+        momentum amortize over depth rounds (fewer server steps for the
+        same training throughput -- measurable even on a serial host), and
+        (b) training dispatches never wait for aggregation, so on parallel
+        hardware round t+1's local training overlaps the buffered
+        aggregation's device time. ``pipeline_depth=1`` aggregates every
+        round with zero staleness -- exactly the batched engine.
+
+        Buffer-fill rounds report their training losses; sigma_probe (and
+        an energy-trace entry) appears on aggregation rounds only.
+        """
+        t0 = time.time()
+        plan = self._plan_round()
+        self._train_stage(plan)
+        self._pending.append(plan)
+        results, deltas, sigma_probe = None, None, None
+        if len(self._pending) >= self.pipeline_depth:
+            results, deltas, sigma_probe = self._aggregate_buffer(plan.round)
+        return self._finalize_round(plan, results, deltas, sigma_probe, t0)
+
+    def _aggregate_buffer(self, as_of_round: int):
+        """Aggregate EVERY pending plan in one buffered, staleness-
+        discounted bucketed step (plan age in rounds = staleness). Member
+        indices are offset into the merged sampled-client axis; the merged
+        client set runs through the SAME grouped bucket pipeline as a
+        single round's."""
+        plans = list(self._pending)
+        self._pending.clear()
+        ranks = [r for p in plans for r in p.ranks]
+        n_k = [n for p in plans for n in p.n_k]
+        group_factors, staleness, off = [], [], 0
+        for p in plans:
+            staleness += [as_of_round - p.round] * len(p.clients)
+            group_factors += [
+                ([m + off if m >= 0 else -1 for m in mem], r_max, fg)
+                for mem, r_max, fg in p.group_factors]
+            off += len(p.clients)
+        out = self._aggregate_grouped(
+            group_factors, ranks, n_k,
+            sharded=self._sharded_dispatch, staleness=staleness)
+        for p in plans:
+            # consumed by the aggregation dispatch; only loss_parts are
+            # still needed (stat flush) -- dropping the factor-stack refs
+            # caps retained memory at the buffer itself, not depth extra
+            # rounds of trained factors riding the stat queue
+            p.group_factors = None
+        return out
+
+    def drain_pending(self) -> Optional[np.ndarray]:
+        """Flush a partially filled aggregation buffer early: run the
+        buffered aggregation now instead of waiting for the cadence (e.g.
+        before a final evaluation). No new round is recorded -- the
+        pending plans' rounds already reported their stats -- but the
+        aggregate updates the global model, the energy trace, and the last
+        history entry's sigma probe. Returns the probe (None if nothing
+        was pending)."""
+        if not self._pending:
+            return None
+        as_of = self._pending[-1].round
+        results, deltas, sigma_probe = self._aggregate_buffer(as_of)
         self._write_factors(results)
         if deltas:
             self._merge_flora_delta(deltas)
-        if sigma_probe is not None:
-            self.energy.record(jnp.asarray(sigma_probe))
-
-        # nanmean: a zero-batch client trains 0 steps and reports NaN --
-        # that is a per-client condition and must not poison the round stat
-        loss_arr = np.asarray(losses, dtype=np.float64)
-        mean_loss = (float(np.nanmean(loss_arr))
-                     if not np.all(np.isnan(loss_arr)) else float("nan"))
-        stats = RoundStats(
-            round=self.round_idx, clients=clients, ranks=ranks, lr=lr,
-            mean_client_loss=mean_loss,
-            sigma_probe=sigma_probe, wall_time_s=time.time() - t0)
-        self.history.append(stats)
-        self.round_idx += 1
-        return stats
+        self.flush_stats()
+        probe = self._materialize_probe(sigma_probe)
+        if probe is not None:
+            self.energy.record(probe)
+            if self.history:
+                self.history[-1].sigma_probe = probe
+        return probe
 
     def run(self, rounds: Optional[int] = None,
             eval_fn: Optional[Callable] = None,
@@ -444,7 +771,9 @@ class FederatedLoRA:
         for _ in range(rounds):
             self.run_round()
             if eval_fn is not None and self.round_idx % eval_every == 0:
+                self.flush_stats()      # eval callbacks see complete history
                 eval_fn(self)
+        self.flush_stats()
         return self.history
 
     # -- evaluation / state --------------------------------------------------
@@ -472,24 +801,116 @@ class FederatedLoRA:
             d["sigma_probe"] = np.asarray(d["sigma_probe"], np.float32)
         return RoundStats(**d)
 
+    # -- pending-plan (de)serialization: the async engine's in-flight buffer
+    #
+    # A pending plan's training was dispatched against global adapters that
+    # may no longer exist by save time, so re-planning from the rng on
+    # restore could NOT reproduce it -- the trained factor stacks themselves
+    # are checkpointed (flat arrays, no pytree template needed on load).
+    # Key encoding: "g{gi}/P/{adapter path}/b|a" for factor pairs,
+    # "g{gi}/M/{adapter path}" for DoRA magnitudes, "g{gi}/loss" for the
+    # per-group loss vector.
+
+    @staticmethod
+    def _plan_arrays(plan: RoundPlan) -> Dict[str, np.ndarray]:
+        arrays: Dict[str, np.ndarray] = {}
+        for gi, (members, r_max, factors) in enumerate(plan.group_factors):
+            for parent, val in factors.items():
+                if FederatedLoRA._is_magnitude(parent):
+                    arrays[f"g{gi}/M/" + "/".join(parent[0])] = \
+                        np.asarray(val)
+                else:
+                    b, a = val
+                    key = f"g{gi}/P/" + "/".join(parent)
+                    arrays[key + "/b"] = np.asarray(b)
+                    arrays[key + "/a"] = np.asarray(a)
+        for gi, (_, loss_g) in enumerate(plan.loss_parts):
+            if loss_g is not None:
+                arrays[f"g{gi}/loss"] = np.asarray(loss_g)
+        return arrays
+
+    @staticmethod
+    def _plan_meta(plan: RoundPlan) -> dict:
+        return {"round": plan.round, "version": plan.version,
+                "clients": plan.clients, "ranks": plan.ranks,
+                "n_k": plan.n_k, "lr": plan.lr,
+                "groups": [{"members": list(members), "r_max": r_max}
+                           for members, r_max, _ in plan.group_factors]}
+
+    @staticmethod
+    def _plan_from_arrays(meta: dict, arrays: Dict[str, np.ndarray]
+                          ) -> RoundPlan:
+        group_factors, loss_parts = [], []
+        for gi, g in enumerate(meta["groups"]):
+            factors: Dict[tuple, object] = {}
+            prefix = f"g{gi}/"
+            pairs: Dict[tuple, dict] = {}
+            for key, arr in arrays.items():
+                if not key.startswith(prefix):
+                    continue
+                rest = key[len(prefix):]
+                if rest.startswith("M/"):
+                    factors[(tuple(rest[2:].split("/")), "m")] = \
+                        jnp.asarray(arr)
+                elif rest.startswith("P/"):
+                    path, leaf = rest[2:].rsplit("/", 1)
+                    pairs.setdefault(tuple(path.split("/")), {})[leaf] = \
+                        jnp.asarray(arr)
+            for parent, ba in pairs.items():
+                factors[parent] = (ba["b"], ba["a"])
+            members = [int(m) for m in g["members"]]
+            group_factors.append((members, int(g["r_max"]), factors))
+            loss = arrays.get(prefix + "loss")
+            loss_parts.append((members,
+                               None if loss is None else jnp.asarray(loss)))
+        return RoundPlan(
+            round=int(meta["round"]), version=int(meta["version"]),
+            clients=[int(c) for c in meta["clients"]],
+            ranks=[int(r) for r in meta["ranks"]],
+            n_k=[int(n) for n in meta["n_k"]], lr=float(meta["lr"]),
+            group_factors=group_factors, loss_parts=loss_parts)
+
     def save(self, path: str) -> None:
-        from repro.checkpointing.checkpoint import save_pytree
+        from repro.checkpointing.checkpoint import save_flat, save_pytree
+        self.flush_stats()      # checkpointed history/energy are complete
         save_pytree(path + ".base", self.base)
         # full server state rides in the metadata: rng stream, energy trace,
         # and round history -- without them a resumed run samples a
         # DIFFERENT client sequence and judges collapse on a truncated trace
-        save_pytree(path + ".lora", self.global_lora,
-                    metadata={"round": self.round_idx,
-                              "method": self.fl.aggregator,
-                              "rng_state": self.rng.bit_generator.state,
-                              "energy": self.energy.state_dict(),
-                              "history": [self._stats_to_meta(s)
-                                          for s in self.history]})
+        meta = {"round": self.round_idx,
+                "method": self.fl.aggregator,
+                "rng_state": self.rng.bit_generator.state,
+                "energy": self.energy.state_dict(),
+                "history": [self._stats_to_meta(s) for s in self.history]}
+        # server momentum: without its (B_m, A_m) pairs a resumed
+        # beta > 0 run silently restarts momentum from zero and diverges
+        # from the uninterrupted run
+        if self.server_momentum is not None and self.server_momentum.state:
+            save_flat(path + ".momentum",
+                      self.server_momentum.state_arrays())
+            meta["momentum"] = True
+        # async engine: dispatched-but-unaggregated plans ride along so a
+        # resumed run aggregates the SAME trained factors the uninterrupted
+        # run would have
+        if self._pending:
+            meta["pending"] = [self._plan_meta(p) for p in self._pending]
+            for i, plan in enumerate(self._pending):
+                save_flat(path + f".pending{i}", self._plan_arrays(plan))
+        save_pytree(path + ".lora", self.global_lora, metadata=meta)
 
     def restore(self, path: str) -> None:
-        from repro.checkpointing.checkpoint import load_metadata, load_pytree
+        from repro.checkpointing.checkpoint import (load_flat, load_metadata,
+                                                    load_pytree)
         self.base = load_pytree(path + ".base", self.base)
         self.global_lora = load_pytree(path + ".lora", self.global_lora)
+        # in-flight state always resets to the CHECKPOINT's -- restoring
+        # onto a server that has already run rounds (a mid-experiment
+        # rollback) must not leak its pre-restore stat handles, pending
+        # plans, or momentum into the restored run
+        self._stat_queue.clear()
+        self._pending.clear()
+        if self.server_momentum is not None:
+            self.server_momentum.state = None
         meta = load_metadata(path + ".lora")
         if meta:
             self.round_idx = meta.get("round", self.round_idx)
@@ -502,3 +923,12 @@ class FederatedLoRA:
             if meta.get("history") is not None:
                 self.history = [self._stats_from_meta(d)
                                 for d in meta["history"]]
+            if meta.get("momentum") and self.server_momentum is not None:
+                self.server_momentum.load_state_arrays(
+                    load_flat(path + ".momentum"))
+            for i, pm in enumerate(meta.get("pending") or []):
+                self._pending.append(self._plan_from_arrays(
+                    pm, load_flat(path + f".pending{i}")))
+        # pending plans belong to ALREADY-COUNTED rounds (the buffered-
+        # aggregation cadence), so planning resumes at round_idx itself
+        self._plan_idx = self.round_idx

@@ -18,7 +18,15 @@ paths are lowered and compared; this is the roofline evidence for the
 §Perf "never materialize dW" iteration.
 
   PYTHONPATH=src python -m repro.launch.fl_dryrun [--multi-pod] \
-      [--d 4096] [--n 4096] [--clients 64]
+      [--d 4096] [--n 4096] [--clients 64] [--pipeline-depth 1]
+
+``--pipeline-depth D`` lowers the ASYNC engine's buffered aggregation
+instead: one aggregation consuming D buffered rounds is the SAME
+``sharded_grouped_fn`` program with a D-times-larger client axis (the
+staleness discounts are omega DATA, not program structure), so the dry run
+shows exactly how the collective bytes and FLOPs of a buffered step scale
+with depth -- dense stays a (d, n) all-reduce regardless of D; the factored
+stack widens to R = D*M*r_max.
 """
 import argparse
 import sys
@@ -59,16 +67,22 @@ def main(argv=None) -> int:
     ap.add_argument("--clients", type=int, default=64)
     ap.add_argument("--r-max", type=int, default=64)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="lower the async engine's buffered aggregation: "
+                         "one step consuming this many rounds' clients")
     args = ap.parse_args(argv)
 
     chips = 512 if args.multi_pod else 256
+    merged_clients = args.clients * args.pipeline_depth
+    tag = (f"d{args.d}xn{args.n}xM{args.clients}"
+           + (f"x{args.pipeline_depth}buf" if args.pipeline_depth > 1
+              else ""))
     for backend in ("dense", "factored"):
         lowered, compiled, mesh = lower_aggregation(
-            d=args.d, n=args.n, clients=args.clients, r_max=args.r_max,
+            d=args.d, n=args.n, clients=merged_clients, r_max=args.r_max,
             multi_pod=args.multi_pod, backend=backend)
         rep = analyze_compiled(
-            lowered, compiled, arch=f"fl-agg-{backend}",
-            shape=f"d{args.d}xn{args.n}xM{args.clients}",
+            lowered, compiled, arch=f"fl-agg-{backend}", shape=tag,
             mesh_name="2x16x16" if args.multi_pod else "16x16", chips=chips)
         print(f"[OK] fl-aggregation backend={backend:9s} "
               f"tc={rep.t_compute*1e6:9.2f}us tm={rep.t_memory*1e6:9.2f}us "

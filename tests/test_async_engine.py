@@ -1,0 +1,324 @@
+"""Async pipelined round engine (ISSUE 3 tentpole): buffered staleness-
+discounted aggregation must reduce EXACTLY to the batched engine at
+``pipeline_depth=1``, and the staleness weighting must never silently
+down-weight a client set.
+
+Structured like ``tests/test_sharded_engine.py``: per-round equivalence is
+asserted for every method in ``METHODS`` from identical initial state, with
+adapter PRODUCTS compared (sign-stable, unlike raw SVD factors).
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic fixed-grid shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.aggregation import METHODS, staleness_discount
+from repro.federation.experiment import build_experiment
+
+
+def _one_round(method, engine, *, lora_over=None, **kw):
+    lora_over = lora_over or {"rank_levels": (4, 8, 16),
+                              "rank_probs": (0.34, 0.33, 0.33)}
+    exp = build_experiment(
+        method,
+        fl_overrides={"num_rounds": 1, "num_clients": 8,
+                      "participation": 0.5},
+        lora_overrides=lora_over,
+        samples_per_class=30, num_classes=6, d_model=32,
+        batches_per_round=1, round_engine=engine, **kw)
+    hist = exp.server.run(1)
+    return exp, hist
+
+
+def _assert_round_equal(runs, ref="batched", other="async"):
+    (e1, h1), (e2, h2) = runs[ref], runs[other]
+    for s1, s2 in zip(h1, h2):
+        assert s1.clients == s2.clients and s1.ranks == s2.ranks
+        np.testing.assert_allclose(s1.mean_client_loss, s2.mean_client_loss,
+                                   rtol=1e-4)
+        if s1.sigma_probe is not None:
+            np.testing.assert_allclose(s1.sigma_probe, s2.sigma_probe,
+                                       rtol=1e-4, atol=1e-4)
+    r_max = e1.server.lora_cfg.r_max
+    f1 = e1.server._extract_factors(e1.server.global_lora, r_max)
+    f2 = e2.server._extract_factors(e2.server.global_lora, r_max)
+    for parent in f1:
+        if isinstance(parent, tuple) and len(parent) == 2 \
+                and parent[1] == "m":
+            np.testing.assert_allclose(np.asarray(f1[parent]),
+                                       np.asarray(f2[parent]),
+                                       rtol=1e-4, atol=1e-5)
+            continue
+        d1 = np.asarray(f1[parent][0] @ f1[parent][1])
+        d2 = np.asarray(f2[parent][0] @ f2[parent][1])
+        np.testing.assert_allclose(
+            d1, d2, atol=1e-4 * max(1.0, np.abs(d1).max()))
+    for a, b in zip(jax.tree.leaves(e1.server.base),
+                    jax.tree.leaves(e2.server.base)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestAsyncDepthOneEquivalence:
+    """``round_engine="async", pipeline_depth=1`` IS the batched engine:
+    per-round equivalence for every aggregation method (the async engine
+    inherits the batched engine's correctness lattice)."""
+
+    @pytest.mark.parametrize("method", METHODS)
+    def test_async_depth1_matches_batched(self, method):
+        lora_over = ({"rank_levels": (8,), "rank_probs": (1.0,)}
+                     if method == "fedavg"       # fedavg needs equal ranks
+                     else None)
+        runs = {"batched": _one_round(method, "batched",
+                                      lora_over=lora_over),
+                "async": _one_round(method, "async", lora_over=lora_over,
+                                    pipeline_depth=1)}
+        _assert_round_equal(runs)
+
+    def test_async_depth1_matches_sequential(self):
+        runs = {"sequential": _one_round("raflora", "sequential"),
+                "async": _one_round("raflora", "async", pipeline_depth=1)}
+        _assert_round_equal(runs, ref="sequential")
+
+
+class TestBufferedCadence:
+    """pipeline_depth > 1: one buffered aggregation per depth rounds, the
+    client-sampling stream identical to the synchronous engines, stats
+    complete after ``run()``."""
+
+    def _make(self, depth, **kw):
+        return build_experiment(
+            "raflora",
+            fl_overrides={"num_rounds": 8, "num_clients": 8,
+                          "participation": 0.5},
+            lora_overrides={"rank_levels": (4, 8, 16),
+                            "rank_probs": (0.34, 0.33, 0.33)},
+            samples_per_class=20, num_classes=4, d_model=32,
+            batches_per_round=1, round_engine="async",
+            pipeline_depth=depth, **kw)
+
+    def test_sampling_stream_invariant_to_depth(self):
+        """The rng is consumed in strict round order at PLAN time, so the
+        sampled clients per round are identical across depths (and match
+        the batched engine)."""
+        batched = build_experiment(
+            "raflora",
+            fl_overrides={"num_rounds": 6, "num_clients": 8,
+                          "participation": 0.5},
+            lora_overrides={"rank_levels": (4, 8, 16),
+                            "rank_probs": (0.34, 0.33, 0.33)},
+            samples_per_class=20, num_classes=4, d_model=32,
+            batches_per_round=1, round_engine="batched")
+        batched.server.run(6)
+        ref = [s.clients for s in batched.server.history]
+        for depth in (2, 3):
+            exp = self._make(depth)
+            exp.server.run(6)
+            assert [s.clients for s in exp.server.history] == ref
+
+    def test_aggregation_cadence_and_stats(self):
+        exp = self._make(2)
+        hist = exp.server.run(6)
+        # buffer-fill rounds carry losses but no spectrum; aggregation
+        # rounds (every 2nd) carry the buffered aggregate's sigma probe
+        assert all(np.isfinite(s.mean_client_loss) for s in hist)
+        assert [s.sigma_probe is not None for s in hist] == \
+            [False, True, False, True, False, True]
+        assert len(exp.server.energy.rho_r1) == 3   # one per aggregation
+        assert len(exp.server._pending) == 0
+
+    def test_training_progresses_under_staleness_discount(self):
+        exp = self._make(2, staleness_gamma=0.5)
+        hist = exp.server.run(8)
+        losses = [s.mean_client_loss for s in hist]
+        assert np.isfinite(losses).all()
+        assert losses[-1] < losses[0]      # still learns
+
+    def test_drain_pending_flushes_partial_buffer(self):
+        exp = self._make(3)
+        exp.server.run(4)                  # agg at round 2; round 3 pending
+        assert len(exp.server._pending) == 1
+        before = len(exp.server.energy.rho_r1)
+        probe = exp.server.drain_pending()
+        assert probe is not None
+        assert len(exp.server._pending) == 0
+        assert len(exp.server.energy.rho_r1) == before + 1
+        assert exp.server.drain_pending() is None   # idempotent when empty
+
+    def test_momentum_one_dispatch_per_bucket_per_aggregation(self):
+        exp = self._make(2, server_momentum_beta=0.9)
+        exp.server.run(6)
+        mom = exp.server.server_momentum
+        n_aggs = len(exp.server.energy.rho_r1)
+        n_buckets = len(mom.state)
+        assert n_aggs == 3 and n_buckets > 0
+        assert mom.bucket_calls <= n_aggs * n_buckets
+
+
+class TestAsyncResume:
+    """ISSUE 3 acceptance: save -> restore -> run equals the uninterrupted
+    run exactly with ``server_momentum_beta > 0``, INCLUDING a non-empty
+    pending buffer at save time (the trained-but-unaggregated plans are
+    checkpointed and re-consumed, momentum state rides along)."""
+
+    def _make(self):
+        return build_experiment(
+            "raflora",
+            fl_overrides={"num_rounds": 8, "num_clients": 8,
+                          "participation": 0.5},
+            lora_overrides={"rank_levels": (4, 8, 16),
+                            "rank_probs": (0.34, 0.33, 0.33)},
+            samples_per_class=20, num_classes=4, d_model=32,
+            batches_per_round=1, round_engine="async", pipeline_depth=2,
+            server_momentum_beta=0.9)
+
+    def test_resume_with_pending_buffer_and_momentum(self, tmp_path):
+        full = self._make()
+        full.server.run(5)
+
+        part = self._make()
+        part.server.run(3)                 # round 3 trained, unaggregated
+        assert len(part.server._pending) == 1
+        assert part.server.server_momentum.state
+        path = str(tmp_path / "async_ckpt")
+        part.server.save(path)
+
+        resumed = self._make()
+        resumed.server.restore(path)
+        assert resumed.server.round_idx == 3
+        assert len(resumed.server._pending) == 1
+        assert resumed.server.server_momentum.state
+        resumed.server.run(2)
+
+        for sf, sr in zip(full.server.history, resumed.server.history):
+            assert sf.clients == sr.clients and sf.ranks == sr.ranks
+            np.testing.assert_allclose(sf.mean_client_loss,
+                                       sr.mean_client_loss, rtol=1e-6)
+            if sf.sigma_probe is not None:
+                np.testing.assert_allclose(sf.sigma_probe, sr.sigma_probe,
+                                           rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(full.server.energy.rho_r1,
+                                   resumed.server.energy.rho_r1, rtol=1e-6)
+        for a, b in zip(jax.tree.leaves(full.server.global_lora),
+                        jax.tree.leaves(resumed.server.global_lora)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# staleness-discounted weight properties (ISSUE 3 satellite)
+# ---------------------------------------------------------------------------
+
+n_k_strategy = st.lists(st.integers(1, 500), min_size=2, max_size=12)
+gamma_strategy = st.floats(0.1, 1.0)
+
+
+def _random_staleness(n, seed):
+    return np.random.default_rng(seed).integers(0, 4, size=n)
+
+
+class TestStalenessDiscountProperties:
+    """For ANY interleaving of staleness ages with pipeline_depth > 1:
+    the weights of a fixed client set sum to the same total as the
+    synchronous round (no silent down-weighting), and gamma=1 reproduces
+    the synchronous aggregate on identical factors."""
+
+    @given(n_k=n_k_strategy, gamma=gamma_strategy)
+    @settings(max_examples=20, deadline=None)
+    def test_fedavg_weights_preserve_total(self, n_k, gamma):
+        from repro.core.aggregation import _weights
+        stal = _random_staleness(len(n_k), seed=len(n_k))
+        w_sync = _weights(np.asarray(n_k, np.float64))
+        w_async = _weights(staleness_discount(n_k, stal, gamma))
+        assert np.isclose(w_async.sum(), w_sync.sum())   # both total 1
+        assert (w_async >= 0).all()
+
+    @given(n_k=n_k_strategy, gamma=gamma_strategy)
+    @settings(max_examples=20, deadline=None)
+    def test_omega_partition_totals_preserved(self, n_k, gamma):
+        """raFLoRA's per-partition omega columns keep the synchronous
+        column totals under any staleness interleaving: the discount
+        shifts RELATIVE mass, never the per-partition mass itself (and the
+        Eq. 8 fallback mask is untouched)."""
+        from repro.core.partitions import omega_raflora
+        rng = np.random.default_rng(sum(n_k))
+        levels = (4, 8, 16)
+        ranks = rng.choice(levels, size=len(n_k))
+        stal = _random_staleness(len(n_k), seed=sum(n_k))
+        om_sync, fb_sync = omega_raflora(ranks, n_k, levels)
+        om_async, fb_async = omega_raflora(
+            ranks, staleness_discount(n_k, stal, gamma), levels)
+        np.testing.assert_allclose(om_async.sum(axis=0), om_sync.sum(axis=0),
+                                   atol=1e-12)
+        np.testing.assert_array_equal(fb_async, fb_sync)
+
+    @given(n_k=n_k_strategy)
+    @settings(max_examples=10, deadline=None)
+    def test_gamma_one_and_zero_staleness_are_exact_noops(self, n_k):
+        stal = _random_staleness(len(n_k), seed=1)
+        out = staleness_discount(n_k, stal, gamma=1.0)
+        np.testing.assert_array_equal(out, np.asarray(n_k, np.float64))
+        out0 = staleness_discount(n_k, np.zeros(len(n_k), np.int64), 0.5)
+        np.testing.assert_array_equal(out0, np.asarray(n_k, np.float64))
+        assert staleness_discount(n_k, None, 0.5).dtype == np.float64
+
+    @given(gamma=st.floats(0.1, 0.9))
+    @settings(max_examples=10, deadline=None)
+    def test_staler_clients_lose_relative_weight(self, gamma):
+        from repro.core.aggregation import _weights
+        n_k = [100, 100, 100]
+        stal = [0, 1, 2]
+        w = _weights(staleness_discount(n_k, stal, gamma))
+        assert w[0] > w[1] > w[2]
+        np.testing.assert_allclose(w[1] / w[0], gamma, rtol=1e-10)
+
+    def test_gamma_one_reproduces_synchronous_aggregate(self):
+        """Aggregator.aggregate_grouped with arbitrary mixed staleness and
+        gamma=1 returns bit-identical results to the synchronous call on
+        identical factor stacks, for the whole SVD family."""
+        from repro.core.aggregation import Aggregator
+        key = jax.random.PRNGKey(0)
+        m, d, n, r = 5, 12, 10, 8
+        bs = jax.random.normal(key, (m, 1, d, r))
+        as_ = jax.random.normal(jax.random.fold_in(key, 1), (m, 1, r, n))
+        gb = jax.random.normal(jax.random.fold_in(key, 2), (1, d, r))
+        ga = jax.random.normal(jax.random.fold_in(key, 3), (1, r, n))
+        ranks = [4, 8, 4, 8, 8]
+        n_k = [10, 20, 30, 40, 50]
+        stal = [3, 0, 2, 1, 0]
+        for method in ("flexlora", "raflora", "hetlora"):
+            agg = Aggregator(method, (4, 8))
+            sync = agg.aggregate_grouped(
+                [[bs[:, :, :, :]]], [[as_]], ranks, n_k,
+                global_bs=[gb], global_as=[ga])
+            asyn = agg.aggregate_grouped(
+                [[bs]], [[as_]], ranks, n_k,
+                global_bs=[gb], global_as=[ga],
+                staleness=stal, gamma=1.0)
+            np.testing.assert_array_equal(np.asarray(sync.b_g),
+                                          np.asarray(asyn.b_g))
+            np.testing.assert_array_equal(np.asarray(sync.a_g),
+                                          np.asarray(asyn.a_g))
+
+    def test_gamma_below_one_changes_mixed_staleness_aggregate(self):
+        """Sanity: with mixed staleness the discount must actually shift
+        the aggregate (it is not a hidden no-op)."""
+        from repro.core.aggregation import Aggregator
+        key = jax.random.PRNGKey(7)
+        m, d, n, r = 4, 12, 10, 8
+        bs = jax.random.normal(key, (m, 1, d, r))
+        as_ = jax.random.normal(jax.random.fold_in(key, 1), (m, 1, r, n))
+        agg = Aggregator("flexlora", (4, 8))
+        base = agg.aggregate_grouped([[bs]], [[as_]], [8] * m, [10] * m)
+        disc = agg.aggregate_grouped([[bs]], [[as_]], [8] * m, [10] * m,
+                                     staleness=[0, 1, 2, 3], gamma=0.5)
+        assert not np.allclose(np.asarray(base.b_g @ base.a_g),
+                               np.asarray(disc.b_g @ disc.a_g), atol=1e-6)

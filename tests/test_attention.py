@@ -77,10 +77,16 @@ class TestBlockwise:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=1e-5)
 
-    @given(l=st.integers(3, 50), seed=st.integers(0, 100))
+    @given(l=st.sampled_from([3, 7, 15, 16, 17, 31, 33, 47, 50]),
+           seed=st.integers(0, 100))
     @settings(max_examples=25, deadline=None)
     def test_ragged_lengths(self, l, seed):
-        """Non-block-multiple sequence lengths pad correctly."""
+        """Non-block-multiple sequence lengths pad correctly.
+
+        Lengths are drawn from a fixed set spanning below/at/above block
+        boundaries: every DISTINCT length compiles a fresh attention
+        program, so a free-range integer strategy made this the single
+        slowest cold-run test while adding no extra padding coverage."""
         key = jax.random.PRNGKey(seed)
         q, k, v = make_qkv(key, l=l)
         got = blockwise_attention(q, k, v, causal=True, block_q=16,

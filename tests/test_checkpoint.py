@@ -1,0 +1,139 @@
+"""Checkpoint torn-write protection + path-spelling coverage (ISSUE 3
+satellite): ``save_pytree`` must be atomic (temp file + ``os.replace``) so
+a crash mid-save -- likely once async checkpointing overlaps training --
+leaves either the previous complete checkpoint or the new one, never a
+half-written npz that ``restore()`` half-loads. Both ``save("ckpt")`` and
+``save("ckpt.npz")`` spellings must interoperate, and ``load_metadata``'s
+old dead ``.npz.meta.json`` rewrite branch is replaced by stem
+normalization."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing.checkpoint import (load_flat, load_metadata,
+                                            load_pytree, save_flat,
+                                            save_pytree)
+
+
+def _tree():
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": jnp.ones((3,), jnp.float32), "none": None}
+
+
+class TestPathSpellings:
+    """save/load must accept both the bare-stem and the explicit ``.npz``
+    spelling, in any combination."""
+
+    @pytest.mark.parametrize("save_as", ["ckpt", "ckpt.npz"])
+    @pytest.mark.parametrize("load_as", ["ckpt", "ckpt.npz"])
+    def test_pytree_roundtrip_any_spelling(self, tmp_path, save_as, load_as):
+        tree = _tree()
+        save_pytree(str(tmp_path / save_as), tree, metadata={"round": 7})
+        files = sorted(os.listdir(tmp_path))
+        assert files == ["ckpt.meta.json", "ckpt.npz"]   # ONE canonical set
+        got = load_pytree(str(tmp_path / load_as), tree)
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(tree["w"]))
+        assert got["none"] is None
+        meta = load_metadata(str(tmp_path / load_as))
+        assert meta == {"round": 7}
+
+    def test_legacy_sidecar_next_to_npz_spelling_still_loads(self, tmp_path):
+        """Older code wrote ``<path>.meta.json`` next to an explicit
+        ``.npz`` path; the probe order must keep loading it."""
+        save_pytree(str(tmp_path / "old"), _tree())
+        with open(tmp_path / "old.npz.meta.json", "w") as f:
+            json.dump({"legacy": True}, f)
+        assert load_metadata(str(tmp_path / "old.npz")) == {"legacy": True}
+
+    def test_flat_roundtrip_both_spellings(self, tmp_path):
+        arrays = {"layer0/B_m": np.ones((4, 2), np.float32),
+                  "layer0/A_m": np.zeros((2, 3), np.float32)}
+        save_flat(str(tmp_path / "mom.npz"), arrays)
+        got = load_flat(str(tmp_path / "mom"))
+        assert set(got) == set(arrays)
+        np.testing.assert_array_equal(got["layer0/B_m"],
+                                      arrays["layer0/B_m"])
+
+
+class TestAtomicity:
+    """A failing save must leave the previous checkpoint intact and no
+    stray temp files behind."""
+
+    def test_failed_npz_write_preserves_previous_checkpoint(
+            self, tmp_path, monkeypatch):
+        path = str(tmp_path / "ckpt")
+        tree = _tree()
+        save_pytree(path, tree, metadata={"round": 1})
+
+        calls = {"n": 0}
+        real_savez = np.savez
+
+        def exploding_savez(f, **kw):
+            calls["n"] += 1
+            # write a prefix then die -- simulates a crash mid-write
+            f.write(b"\x00" * 16)
+            raise OSError("disk full")
+
+        monkeypatch.setattr(np, "savez", exploding_savez)
+        bigger = {"w": jnp.full((2, 3), 9.0), "b": jnp.zeros((3,)),
+                  "none": None}
+        with pytest.raises(OSError):
+            save_pytree(path, bigger, metadata={"round": 2})
+        monkeypatch.setattr(np, "savez", real_savez)
+
+        assert calls["n"] == 1
+        # previous checkpoint fully intact, metadata untouched
+        got = load_pytree(path, tree)
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(tree["w"]))
+        assert load_metadata(path) == {"round": 1}
+        # no temp litter
+        assert sorted(os.listdir(tmp_path)) == ["ckpt.meta.json", "ckpt.npz"]
+
+    def test_metadata_written_after_arrays(self, tmp_path):
+        """Both files land atomically under their canonical names -- a
+        reader never observes a .npz without its .meta.json from the SAME
+        save (os.replace per file; the npz is replaced first)."""
+        path = str(tmp_path / "state")
+        save_pytree(path, _tree(), metadata={"v": 1})
+        save_pytree(path + ".npz", _tree(), metadata={"v": 2})
+        assert load_metadata(path) == {"v": 2}
+        assert sorted(os.listdir(tmp_path)) == ["state.meta.json",
+                                                "state.npz"]
+
+
+class TestServerCheckpointMomentum:
+    """ISSUE 3 satellite (ROADMAP): FactoredServerMomentum state must
+    survive save/restore -- previously a resumed ``server_momentum_beta>0``
+    run silently restarted momentum from zero."""
+
+    def test_momentum_state_roundtrip(self, tmp_path):
+        from repro.core.server_opt import FactoredServerMomentum
+        mom = FactoredServerMomentum(beta=0.9)
+        key_a = ("params", "layer0", "q_proj")
+        key_b = ("params", "layer0", "v_proj")
+        b = jnp.ones((6, 4)) * 0.3
+        a = jnp.ones((4, 5)) * 0.2
+        mom.apply(key_a, (jnp.zeros((6, 4)), jnp.zeros((4, 5))), (b, a), 4)
+        # bucketed entry as well: per-adapter serialization must slice it
+        mom.apply_bucket((key_b,), [(jnp.zeros((6, 4)), jnp.zeros((4, 5)))],
+                         b[None], a[None], 4)
+        arrays = mom.state_arrays()
+        assert set(arrays) == {"params/layer0/q_proj/B_m",
+                               "params/layer0/q_proj/A_m",
+                               "params/layer0/v_proj/B_m",
+                               "params/layer0/v_proj/A_m"}
+        save_flat(str(tmp_path / "m"), arrays)
+
+        back = FactoredServerMomentum(beta=0.9)
+        back.load_state_arrays(load_flat(str(tmp_path / "m")))
+        assert set(back.state) == {key_a, key_b}
+        np.testing.assert_allclose(np.asarray(back.state[key_a][0]),
+                                   np.asarray(mom.state[key_a][0]))
+        np.testing.assert_allclose(
+            np.asarray(back.state[key_b][0]),
+            np.asarray(mom.state[(key_b,)][0][0]))

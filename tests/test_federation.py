@@ -114,6 +114,39 @@ class TestCheckpointResumeState:
         assert (full.server.energy.collapsed()
                 == resumed.server.energy.collapsed())
 
+    def test_resume_with_server_momentum_matches_uninterrupted(self, quick,
+                                                               tmp_path):
+        """ISSUE 3 satellite: ``save``/``restore`` must carry the
+        FactoredServerMomentum (B_m, A_m) state -- a resumed
+        ``server_momentum_beta > 0`` run previously restarted momentum
+        from zero and diverged from the uninterrupted run."""
+        kw = dict(server_momentum_beta=0.9)
+        full = quick("raflora", **kw)
+        full.server.run(4)
+
+        part = quick("raflora", **kw)
+        part.server.run(2)
+        assert part.server.server_momentum.state   # momentum accumulated
+        path = str(tmp_path / "momentum_ckpt")
+        part.server.save(path)
+
+        resumed = quick("raflora", **kw)
+        resumed.server.restore(path)
+        assert resumed.server.server_momentum.state  # state restored
+        resumed.server.run(2)
+
+        for s_full, s_res in zip(full.server.history,
+                                 resumed.server.history):
+            assert s_full.clients == s_res.clients
+            np.testing.assert_allclose(s_full.mean_client_loss,
+                                       s_res.mean_client_loss, rtol=1e-5)
+            np.testing.assert_allclose(s_full.sigma_probe, s_res.sigma_probe,
+                                       rtol=1e-4, atol=1e-5)
+        for a, b in zip(jax.tree.leaves(full.server.global_lora),
+                        jax.tree.leaves(resumed.server.global_lora)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+
 
 class TestPaperClaims:
     """The paper's qualitative claims, reproduced in-training (not just in

