@@ -21,6 +21,12 @@ Studies (all merged into one artifact):
   The sweep also runs a momentum-equipped experiment and asserts server
   momentum cost <= ONE jitted dispatch per bucket per aggregation
   (``FactoredServerMomentum.bucket_calls`` -- the ISSUE 3 satellite).
+* ``--backend kernel`` (ISSUE 4): the FUSED KERNEL aggregation backend
+  (Pallas weighted-stack + Gram-core grids feeding the Gram-core SVD
+  realloc, DESIGN.md §4.3) on the batched AND sharded engines, against the
+  factored jnp baseline. On CPU the kernels run interpret-mode -- the
+  sweep tracks the configuration's latency, not MXU throughput (that is
+  ``bench_kernels`` on hardware).
 * ``--engine all``: every study, one process (``tools/ci.sh bench``).
 
 The sharded/async sweeps are STANDALONE-ONLY (``python -m
@@ -273,18 +279,76 @@ def run_async(rounds: int = 8, warmup: int = 4, d_model: int = 128,
     return async_result
 
 
+def run_kernel_backend(rounds: int = 8, warmup: int = 2, d_model: int = 64,
+                       batches_per_round: int = 1,
+                       local_batch_size: int = 16) -> dict:
+    """Kernel-backend latency sweep (ISSUE 4 acceptance artifact): the
+    fused Pallas aggregation on the batched and sharded engines against
+    the factored jnp baseline, interleaved-block-timed like every other
+    study. The sharded run uses every visible device, so under the forced
+    8-device platform its per-bucket (d+n, R) psums are real."""
+    import jax
+    from repro.launch.mesh import make_fl_mesh
+    total = rounds + warmup
+    servers = {
+        "batched_factored": _make("batched", rounds=total, d_model=d_model,
+                                  batches_per_round=batches_per_round,
+                                  local_batch_size=local_batch_size,
+                                  backend="factored").server,
+        "batched_kernel": _make("batched", rounds=total, d_model=d_model,
+                                batches_per_round=batches_per_round,
+                                local_batch_size=local_batch_size,
+                                backend="kernel").server,
+        "sharded_kernel": _make("sharded", rounds=total, d_model=d_model,
+                                batches_per_round=batches_per_round,
+                                local_batch_size=local_batch_size,
+                                backend="kernel",
+                                mesh=make_fl_mesh()).server,
+    }
+    times = _time_blocks(servers, blocks=rounds, rounds_per_block=1,
+                         warmup=warmup)
+
+    medians = {k: float(np.median(ts)) for k, ts in times.items()}
+    result = {
+        "config": {"clients_per_round": 8, "rounds_timed": rounds,
+                   "warmup_rounds": warmup, "d_model": d_model,
+                   "batches_per_round": batches_per_round,
+                   "local_batch_size": local_batch_size,
+                   "rank_levels": [4, 8, 16], "method": "raflora",
+                   "device_count": jax.device_count(),
+                   "note": "Pallas kernels run interpret-mode on CPU"},
+        "per_round_s": {k: ts for k, ts in times.items()},
+        "median_s": medians,
+        "kernel_over_factored_batched":
+            medians["batched_factored"] / medians["batched_kernel"],
+    }
+    _merge_artifact({"kernel_backend": result})
+
+    for k in servers:
+        emit(f"round_latency/{k}", medians[k] * 1e6,
+             f"median_round_ms={medians[k] * 1e3:.1f}")
+    print(f"# artifact: {ARTIFACT}")
+    return result
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=("batched", "sharded", "async",
                                          "all"), default="batched")
+    ap.add_argument("--backend", choices=("factored", "kernel"),
+                    default="factored",
+                    help="'kernel' runs the fused-Pallas backend sweep "
+                         "instead of the engine studies")
     args = ap.parse_args()
-    if args.engine != "batched":
+    if args.engine != "batched" or args.backend == "kernel":
         # must precede the first jax initialization: standalone sweeps get
         # an 8-virtual-device CPU host platform
         os.environ.setdefault(
             "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-    if args.engine == "sharded":
+    if args.backend == "kernel":
+        run_kernel_backend()
+    elif args.engine == "sharded":
         run_sharded()
     elif args.engine == "async":
         run_async()
@@ -292,5 +356,6 @@ if __name__ == "__main__":
         run()
         run_sharded()
         run_async()
+        run_kernel_backend()
     else:
         run()

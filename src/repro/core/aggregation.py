@@ -18,8 +18,10 @@ Methods
 
 ``backend="dense"`` materializes dW (paper-faithful); ``backend="factored"``
 uses the QR low-rank SVD (beyond-paper, bit-compatible up to float error);
-``backend="kernel"`` routes the weighted contraction through the Pallas
-rank-partition kernel (TPU path, interpret-mode on CPU).
+``backend="kernel"`` is the fused Pallas path (TPU kernels, interpret-mode
+on CPU): sqrt-weighted U_c/V_c stacks + (R, R) Gram cores on-chip feeding
+``svd_realloc_gram`` -- O((d+n)R) memory, dW never materialized, on every
+engine including the sharded one (DESIGN.md §4.3).
 """
 from __future__ import annotations
 
@@ -36,7 +38,8 @@ from repro.core import partitions as parts
 from repro.core.svd import (check_fallback_globals, dense_fallback_term,
                             dense_from_weighted, factored_append_fallback,
                             factored_from_weighted, factored_stack_batched,
-                            svd_realloc_dense, svd_realloc_factored)
+                            svd_realloc_dense, svd_realloc_factored,
+                            svd_realloc_gram)
 
 
 @dataclass
@@ -185,13 +188,14 @@ def _weighted_svd(bs, as_, omega, global_b, global_a, fallback, r_max,
     stacks from lax.scan models, (M, P, L, d, r) shape buckets from the
     batched round engine. Dense/factored backends vmap the pipeline over
     each batch axis in turn; the kernel backend flattens the batch axes and
-    lowers the whole bucket through one layer-batched Pallas grid.
+    lowers the whole bucket through the fused layer-batched Pallas grids
+    (stack + Gram cores, never dW -- ``_agg_kernel_stacked``).
     """
     check_fallback_globals(fallback, global_b, global_a)
     if bs.ndim > 3:
         if backend == "kernel":
-            return _weighted_svd_kernel_batched(bs, as_, omega, global_b,
-                                                global_a, fallback, r_max)
+            return _agg_kernel_stacked(bs, as_, omega, global_b,
+                                       global_a, fallback, r_max)
         def one_slice(bs_l, as_l, gb_l, ga_l):
             res = _weighted_svd(bs_l, as_l, omega, gb_l, ga_l, fallback,
                                 r_max, backend)
@@ -213,19 +217,21 @@ def _weighted_svd(bs, as_, omega, global_b, global_a, fallback, r_max,
         b_g, a_g, sigma = svd_realloc_factored(u_c, v_c, r_max)
     elif backend == "kernel":
         from repro.kernels import ops as kernel_ops
-        dw = kernel_ops.rank_partition_agg(bs, as_, omega, global_b, global_a,
-                                           fallback)
-        b_g, a_g, sigma = svd_realloc_dense(dw, r_max)
+        u_c, v_c, g_u, g_v = kernel_ops.factored_stack_gram(
+            bs, as_, omega, global_b, global_a, fallback)
+        b_g, a_g, sigma = svd_realloc_gram(u_c, v_c, g_u, g_v, r_max)
     else:
         raise ValueError(f"unknown backend {backend!r}")
     return AggregationResult(b_g, a_g, sigma)
 
 
-def _weighted_svd_kernel_batched(bs, as_, omega, global_b, global_a,
-                                 fallback, r_max) -> AggregationResult:
+def _agg_kernel_stacked(bs, as_, omega, global_b, global_a,
+                        fallback, r_max) -> AggregationResult:
     """Kernel backend for batch-stacked factors: flatten every batch axis
-    into one layer axis, run the layer-batched Pallas grid once, then SVD
-    the resulting (L, d, n) aggregates as one batched realloc."""
+    into one layer axis, run the fused layer-batched Pallas grids once
+    (sqrt-weighted U_c/V_c stacks + (R, R) Gram cores -- DESIGN.md §4.3,
+    the Eq. 8 fallback riding as one extra client), then one batched
+    Gram-core SVD realloc. dW (L, d, n) is never materialized."""
     from repro.kernels import ops as kernel_ops
     lead = bs.shape[1:-2]                     # batch axes after clients
     m, d, r = bs.shape[0], bs.shape[-2], bs.shape[-1]
@@ -235,10 +241,10 @@ def _weighted_svd_kernel_batched(bs, as_, omega, global_b, global_a,
     as_l = jnp.moveaxis(as_.reshape(m, layers, r, n), 0, 1)
     gb = None if global_b is None else global_b.reshape(layers, d, r_max)
     ga = None if global_a is None else global_a.reshape(layers, r_max, n)
-    dw = kernel_ops.rank_partition_agg_layered(bs_l, as_l, omega, gb, ga,
-                                               fallback)       # (L, d, n)
+    u_c, v_c, g_u, g_v = kernel_ops.factored_stack_gram_layered(
+        bs_l, as_l, omega, gb, ga, fallback)
     b_g, a_g, sigma = jax.vmap(
-        functools.partial(svd_realloc_dense, r_max=r_max))(dw)
+        functools.partial(svd_realloc_gram, r_max=r_max))(u_c, v_c, g_u, g_v)
     return AggregationResult(b_g.reshape(lead + (d, r_max)),
                              a_g.reshape(lead + (r_max, n)),
                              sigma.reshape(lead + (r_max,)))
@@ -334,12 +340,15 @@ def _grouped_core(group_bs, group_as, warg, global_bs, global_as, fallback,
 # dW stacking, and the weighted-diagonal contraction behind the SVD-realloc
 # methods -- becomes a per-shard partial sum followed by ONE ``jax.lax.psum``.
 # The dense family all-reduces the (..., d, n) contraction; the factored
-# family all-reduces the zero-scattered (d, R) / (R, n) factor stack (each
-# shard writes its own column block, so the psum is an all-gather in
-# disguise and the reduced stack equals the single-device one up to client
-# ordering, which the SVD does not see). The SVD reallocation itself is the
-# UNCHANGED single-device math (``svd_realloc_dense`` /
-# ``svd_realloc_factored``) applied to the reduced, replicated result.
+# AND kernel families all-reduce the zero-scattered (d, R) / (R, n) factor
+# stack (each shard writes its own column block, so the psum is an
+# all-gather in disguise and the reduced stack equals the single-device one
+# up to client ordering, which the SVD does not see) -- the kernel backend
+# builds its shard-local block with the layered Pallas stack grid over
+# resident clients only (DESIGN.md §4.3). The SVD reallocation itself is
+# the UNCHANGED single-device math (``svd_realloc_dense`` /
+# ``svd_realloc_factored`` / the Pallas-Gram ``svd_realloc_gram``) applied
+# to the reduced, replicated result.
 
 def _realloc_dense_lead(dw, r_max):
     """Batched ``svd_realloc_dense`` over any leading bucket/layer axes."""
@@ -358,6 +367,19 @@ def _realloc_factored_lead(u_c, v_c, r_max):
     b, a, s = jax.vmap(functools.partial(
         svd_realloc_factored, r_max=r_max))(
         u_c.reshape((-1, d, rr)), v_c.reshape((-1, rr, n)))
+    return (b.reshape(lead + (d, r_max)), a.reshape(lead + (r_max, n)),
+            s.reshape(lead + (r_max,)))
+
+
+def _realloc_gram_lead(u_c, v_c, g_u, g_v, r_max):
+    """Batched ``svd_realloc_gram`` over any leading bucket/layer axes."""
+    lead = u_c.shape[:-2]
+    d, rr = u_c.shape[-2:]
+    n = v_c.shape[-1]
+    b, a, s = jax.vmap(functools.partial(
+        svd_realloc_gram, r_max=r_max))(
+        u_c.reshape((-1, d, rr)), v_c.reshape((-1, rr, n)),
+        g_u.reshape((-1, rr, rr)), g_v.reshape((-1, rr, rr)))
     return (b.reshape(lead + (d, r_max)), a.reshape(lead + (r_max, n)),
             s.reshape(lead + (r_max,)))
 
@@ -390,9 +412,17 @@ def _sharded_partial(group_bs, group_as, group_w, gb, ga, *, r_max,
     if method == "flora":
         b_g, a_g, dw = _flora_delta(bs, as_, w)
         return b_g, a_g, jax.lax.psum(dw, axis)
-    # SVD family: w is the (m_loc, r_max) omega matrix
-    if backend == "factored":
-        u_loc, v_loc = factored_stack_batched(bs, as_, w)
+    # SVD family: w is the (m_loc, r_max) omega matrix. Both low-rank
+    # backends reduce the zero-scattered (d+n, R) stack -- the factored
+    # backend builds its shard-local block with jnp, the kernel backend
+    # with the layered Pallas stack grid over the shard's RESIDENT clients
+    # only (DESIGN.md §4.3); the collective stays ONE psum per bucket.
+    if backend in ("factored", "kernel"):
+        if backend == "kernel":
+            from repro.kernels import ops as kernel_ops
+            u_loc, v_loc = kernel_ops.factored_stack_lead(bs, as_, w)
+        else:
+            u_loc, v_loc = factored_stack_batched(bs, as_, w)
         width = u_loc.shape[-1]
         shard_idx = jnp.int32(0)        # flat shard index over the axes
         n_shards = 1
@@ -409,9 +439,7 @@ def _sharded_partial(group_bs, group_as, group_w, gb, ga, *, r_max,
         v_full = jax.lax.dynamic_update_slice_in_dim(v_full, v_loc, off,
                                                      axis=-2)
         return jax.lax.psum(u_full, axis), jax.lax.psum(v_full, axis)
-    # dense (and kernel: the per-shard partial is the same contraction the
-    # layered Pallas grid computes post-reduction; on the sharded path the
-    # partial runs as a plain einsum so the collective stays a (d, n) psum)
+    # dense: the paper-faithful (..., d, n) all-reduce
     dw = jnp.einsum("m...dr,mr,m...rn->...dn", bs.astype(jnp.float32),
                     w.astype(jnp.float32), as_.astype(jnp.float32))
     return jax.lax.psum(dw, axis)
@@ -445,10 +473,11 @@ def sharded_grouped_fn(mesh, r_max: int, backend: str, method: str,
         axes=axes, axis_sizes=axis_sizes)
 
     def fn(group_bs, group_as, group_w, global_bs, global_as, fallback):
+        from repro.sharding.specs import client_spec
         check_fallback_globals(fallback, global_bs, global_as)
         gb = None if global_bs is None else jnp.stack(global_bs)
         ga = None if global_as is None else jnp.stack(global_as)
-        cl = P(axes if len(axes) > 1 else axes[0])
+        cl = client_spec(axes)
         red = shard_map(partial_fn, mesh=mesh,
                         in_specs=(cl, cl, cl, P(), P()),
                         out_specs=P(), check_rep=False)(
@@ -459,12 +488,22 @@ def sharded_grouped_fn(mesh, r_max: int, backend: str, method: str,
         if method == "flora":
             b_g, a_g, dw = red
             return b_g, a_g, None, dw
-        if backend == "factored":
+        if backend in ("factored", "kernel"):
             u_c, v_c = red
             if fallback is not None:
+                # appended exactly once, AFTER the cross-shard reduction
                 u_c, v_c = factored_append_fallback(u_c, v_c, gb, ga,
                                                     fallback)
-            b_g, a_g, sigma = _realloc_factored_lead(u_c, v_c, r_max)
+            if backend == "kernel":
+                # (R, R) Gram cores of the reduced, replicated stack via
+                # the Pallas grids, then the Gram-core realloc -- the same
+                # math as the single-host kernel path (DESIGN.md §4.3)
+                from repro.kernels import ops as kernel_ops
+                g_u, g_v = kernel_ops.factored_gram_lead(u_c, v_c)
+                b_g, a_g, sigma = _realloc_gram_lead(u_c, v_c, g_u, g_v,
+                                                     r_max)
+            else:
+                b_g, a_g, sigma = _realloc_factored_lead(u_c, v_c, r_max)
         else:
             dw = red
             if fallback is not None:

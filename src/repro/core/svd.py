@@ -81,6 +81,62 @@ def svd_realloc_factored(u_c: jnp.ndarray, v_c: jnp.ndarray, r_max: int
     return u_full * s[None, :], vt_full, s
 
 
+def svd_realloc_gram(u_c: jnp.ndarray, v_c: jnp.ndarray,
+                     g_u: jnp.ndarray, g_v: jnp.ndarray, r_max: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Factored SVD realloc from precomputed (R, R) Gram cores
+    (DESIGN.md §4.3 -- the kernel backend's route).
+
+    u_c (d, R); v_c (R, n); g_u = U_c^T U_c; g_v = V_c V_c^T. The Pallas
+    kernels compute the two Gram accumulations on the MXU; everything here
+    is (R x R)-sized except the two final (d, R) @ (R, r_max) /
+    (r_max, R) @ (R, n) projections:
+
+        G_u = P_u diag(lam_u) P_u^T   =>   U_c = Q_u S_u P_u^T,
+        G_v = P_v diag(lam_v) P_v^T   =>   V_c = P_v S_v Q_v^T,
+        U_c V_c = Q_u [S_u (P_u^T P_v) S_v] Q_v^T,
+
+    with S = sqrt(lam) and Q_u = U_c P_u S_u^+ orthonormal on the numerical
+    range. SVD of the bracketed (R x R) core gives the spectrum; the
+    truncated factors fold Q_u / Q_v back through ONE matmul per side.
+
+    vs the QR route (``svd_realloc_factored``): no (d, R)/(n, R)
+    orthogonalization at all -- but the Gram squaring halves the attainable
+    precision (singular values below ~sqrt(eps) * sigma_max sit under the
+    eigensolver's noise floor). Rank is cut at lam > R * eps * lam_max;
+    zero-padded client columns land exactly there and contribute nothing.
+    """
+    u_c = u_c.astype(jnp.float32)
+    v_c = v_c.astype(jnp.float32)
+    eps = jnp.finfo(jnp.float32).eps
+    rr = u_c.shape[-1]
+
+    def _whiten(gram):
+        lam, p = jnp.linalg.eigh(gram.astype(jnp.float32))
+        lam = jnp.maximum(lam, 0.0)
+        keep = lam > rr * eps * jnp.max(lam)
+        s = jnp.where(keep, jnp.sqrt(lam), 0.0)
+        inv = jnp.where(keep, 1.0 / jnp.where(keep, jnp.sqrt(lam), 1.0), 0.0)
+        return s, inv, p
+
+    s_u, inv_u, p_u = _whiten(g_u)
+    s_v, inv_v, p_v = _whiten(g_v)
+    core = (s_u[:, None] * (p_u.T @ p_v)) * s_v[None, :]      # (R, R)
+    w1, s, w2t = jnp.linalg.svd(core, full_matrices=False)
+    left = p_u @ (inv_u[:, None] * w1)                        # (R, R)
+    right = (w2t * inv_v[None, :]) @ p_v.T                    # (R, R)
+    k = min(rr, r_max)
+    b_g = (u_c @ left[:, :k]) * s[None, :k]                   # (d, k)
+    a_g = right[:k] @ v_c                                     # (k, n)
+    s = s[:k]
+    if k < r_max:
+        pad = r_max - k
+        b_g = jnp.pad(b_g, ((0, 0), (0, pad)))
+        a_g = jnp.pad(a_g, ((0, pad), (0, 0)))
+        s = jnp.pad(s, (0, pad))
+    return b_g, a_g, s
+
+
 def factored_from_weighted(bs: jnp.ndarray, as_: jnp.ndarray,
                            omega: jnp.ndarray,
                            global_b: Optional[jnp.ndarray] = None,

@@ -14,7 +14,9 @@ Two round engines (DESIGN.md "Batched round engine"):
   (client.py) -- and aggregation stacks every same-shape adapter into one
   (M, P, ..., d, r) bucket and runs one jitted weighted-contraction +
   batched QR/SVD realloc per bucket (the "kernel" backend lowers a bucket
-  through a single layer-batched Pallas grid).
+  through the fused layer-batched Pallas grids -- sqrt-weighted factor
+  stacks + (R, R) Gram cores feeding the Gram-core SVD realloc, so dW is
+  never materialized; DESIGN.md §4.3).
 * ``round_engine="sequential"``: the original per-client / per-adapter
   reference loop, kept for bit-level comparison (tests assert the two match
   to float tolerance) and for debugging.
@@ -27,7 +29,12 @@ Two round engines (DESIGN.md "Batched round engine"):
   the stacked-factor contraction sum_k B_k diag(omega_k) A_k is computed
   as per-shard partials reduced by ONE ``jax.lax.psum`` per bucket before
   the unchanged SVD reallocation (launch/fl_dryrun.py lowers the very same
-  program on the mocked production pod mesh).
+  program on the mocked production pod mesh). Every backend is
+  engine-complete here, including "kernel": each shard builds its local
+  zero-scattered (d+n, R) factor-stack partial with the layered Pallas
+  grid over its resident clients only, the psum stays one (d+n, R)
+  all-reduce, and the Gram-core realloc runs on the reduced stack
+  (DESIGN.md §4.3 -- no silent einsum downgrade).
 
 * ``round_engine="async"`` (DESIGN.md §6): the round as explicit
   plan -> train -> aggregate STAGES with FedBuff-style BUFFERED

@@ -1,8 +1,11 @@
 """Pallas TPU kernels for the perf-critical compute of the system.
 
-  lora_apply          -- fused dense + LoRA adapter matmul
-  rank_partition_agg  -- the paper's Eq. 8 aggregation as one contraction
-  ssd_scan            -- Mamba-2 chunked SSD (dual form)
+  lora_apply           -- fused dense + LoRA adapter matmul
+  rank_partition_agg   -- the paper's Eq. 8 aggregation as one contraction
+  factored_stack_gram  -- Eq. 8 WITHOUT materializing dW: sqrt-weighted
+                          U_c/V_c stacks + (R, R) Gram cores feeding the
+                          Gram-core SVD realloc (DESIGN.md §4.3)
+  ssd_scan             -- Mamba-2 chunked SSD (dual form)
 
 Each kernel ships with a pure-jnp oracle in ref.py and a jit'd public
 wrapper in ops.py; kernels run under interpret=True on CPU and compile via

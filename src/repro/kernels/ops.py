@@ -14,21 +14,20 @@ import jax.numpy as jnp
 
 from repro.core.svd import check_fallback_globals
 from repro.kernels.lora_apply import lora_apply_pallas
-from repro.kernels.rank_partition_agg import (rank_partition_agg_layered_pallas,
-                                              rank_partition_agg_pallas)
+from repro.kernels.rank_partition_agg import (gram_left_layered_pallas,
+                                              gram_right_layered_pallas,
+                                              rank_partition_agg_layered_pallas,
+                                              rank_partition_agg_pallas,
+                                              weighted_stack_a_layered_pallas,
+                                              weighted_stack_b_layered_pallas)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 _ON_TPU = jax.default_backend() == "tpu"
 _INTERPRET = not _ON_TPU
 
 
-def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+# pad-to-multiple: the ONE zero-pad helper, shared with the kernel grids
+from repro.kernels.rank_partition_agg import _pad_axis as _pad_to
 
 
 def _tile_block(padded: int, preferred: int = 256, lane: int = 128) -> int:
@@ -71,22 +70,18 @@ def rank_partition_agg(bs: jnp.ndarray, as_: jnp.ndarray, omega: jnp.ndarray,
     bs (M, d, r); as_ (M, r, n); omega (M, r); optional global factors enter
     as one extra "client" carrying the empty-partition fallback (Eq. 8).
     """
-    check_fallback_globals(fallback, global_b, global_a)
-    if fallback is not None:
-        bs = jnp.concatenate([bs, global_b[None].astype(bs.dtype)], axis=0)
-        as_ = jnp.concatenate([as_, global_a[None].astype(as_.dtype)], axis=0)
-        omega = jnp.concatenate(
-            [omega, fallback[None].astype(omega.dtype)], axis=0)
-    d, r = bs.shape[1], bs.shape[2]
-    n = as_.shape[-1]
-    bsp = _pad_to(_pad_to(bs, 1, 128), 2, 8)
-    asp = _pad_to(_pad_to(as_, 1, 8), 2, 128)
+    bs, as_, omega = _append_fallback_client(bs, as_, omega, global_b,
+                                             global_a, fallback,
+                                             layer_axes=0)
+    # only r needs padding (to the 8-sublane tile); the kernel pads and
+    # re-slices non-divisible d / n extents itself
+    bsp = _pad_to(bs, 2, 8)
+    asp = _pad_to(as_, 1, 8)
     omp = _pad_to(omega, 1, 8)
-    dw = rank_partition_agg_pallas(
+    return rank_partition_agg_pallas(
         bsp, asp, omp,
         block_d=_tile_block(bsp.shape[1]), block_n=_tile_block(asp.shape[2]),
         interpret=_INTERPRET)
-    return dw[:d, :n]
 
 
 @jax.jit
@@ -103,23 +98,157 @@ def rank_partition_agg_layered(bs: jnp.ndarray, as_: jnp.ndarray,
     per layer carrying the empty-partition fallback (Eq. 8).
     Returns dW (L, d, n) f32.
     """
-    check_fallback_globals(fallback, global_b, global_a)
-    if fallback is not None:
-        bs = jnp.concatenate([bs, global_b[:, None].astype(bs.dtype)], axis=1)
-        as_ = jnp.concatenate([as_, global_a[:, None].astype(as_.dtype)],
-                              axis=1)
-        omega = jnp.concatenate(
-            [omega, fallback[None].astype(omega.dtype)], axis=0)
-    d, r = bs.shape[2], bs.shape[3]
-    n = as_.shape[-1]
-    bsp = _pad_to(_pad_to(bs, 2, 128), 3, 8)
-    asp = _pad_to(_pad_to(as_, 2, 8), 3, 128)
+    bs, as_, omega = _append_fallback_client(bs, as_, omega, global_b,
+                                             global_a, fallback,
+                                             layer_axes=1)
+    # only r needs padding (to the 8-sublane tile); the kernel pads and
+    # re-slices non-divisible d / n extents itself
+    bsp = _pad_to(bs, 3, 8)
+    asp = _pad_to(as_, 2, 8)
     omp = _pad_to(omega, 1, 8)
-    dw = rank_partition_agg_layered_pallas(
+    return rank_partition_agg_layered_pallas(
         bsp, asp, omp,
         block_d=_tile_block(bsp.shape[2]), block_n=_tile_block(asp.shape[3]),
         interpret=_INTERPRET)
-    return dw[:, :d, :n]
+
+
+# -- fused factored aggregation (DESIGN.md §4.3): O((d+n)R) memory ----------
+#
+# The kernel backend's hot path: build the sqrt(omega)-weighted column
+# stacks U_c / V_c and their (R x R) Gram cores with Pallas kernels, then
+# SVD-realloc via core/svd.svd_realloc_gram -- dW (d, n) is NEVER formed.
+# The Eq. 8 empty-partition fallback enters as one extra "client" whose
+# omega row is the fallback indicator, exactly as on the dense kernel path.
+# These helpers are plain traced functions (no own jit) so the aggregation
+# pipelines can call them inside their jitted / shard_map'd bodies.
+
+def _append_fallback_client(bs, as_, omega, global_b, global_a, fallback,
+                            *, layer_axes: int):
+    """Concatenate the global factors as client M+1 carrying ``fallback``.
+
+    ``layer_axes`` leading axes precede the client axis (0 for (M, d, r),
+    1 for (L, M, d, r)); the global factors carry those axes without the
+    client axis."""
+    check_fallback_globals(fallback, global_b, global_a)
+    if fallback is None:
+        return bs, as_, omega
+    ax = layer_axes
+    bs = jnp.concatenate(
+        [bs, jnp.expand_dims(global_b, ax).astype(bs.dtype)], axis=ax)
+    as_ = jnp.concatenate(
+        [as_, jnp.expand_dims(global_a, ax).astype(as_.dtype)], axis=ax)
+    omega = jnp.concatenate([omega, fallback[None].astype(omega.dtype)],
+                            axis=0)
+    return bs, as_, omega
+
+
+def factored_stack_layered(bs: jnp.ndarray, as_: jnp.ndarray,
+                           omega: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
+    """bs (L, M, d, r); as_ (L, M, r, n); omega (M, r) ->
+    U_c (L, d, M*r8), V_c (L, M*r8, n) f32 (r zero-padded to a multiple of
+    8 -- zero columns are spectrum-inert and keep the R width tile-able;
+    the stack grids pad and re-slice d / n themselves)."""
+    bsp = _pad_to(bs, 3, 8)
+    asp = _pad_to(as_, 2, 8)
+    omp = _pad_to(omega, 1, 8)
+    u_c = weighted_stack_b_layered_pallas(
+        bsp, omp, block_d=_tile_block(bsp.shape[2]), interpret=_INTERPRET)
+    v_c = weighted_stack_a_layered_pallas(
+        asp, omp, block_n=_tile_block(asp.shape[3]), interpret=_INTERPRET)
+    return u_c, v_c
+
+
+def factored_gram_layered(u_c: jnp.ndarray, v_c: jnp.ndarray
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """u_c (L, d, R); v_c (L, R, n) -> Gram cores (L, R, R) x2. R is padded
+    to 8 so the core tiles; callers slice back to the incoming width."""
+    rr = u_c.shape[-1]
+    up = _pad_to(u_c, 2, 8)
+    vp = _pad_to(v_c, 1, 8)
+    g_u = gram_left_layered_pallas(up, block_d=_tile_block(up.shape[1]),
+                                   interpret=_INTERPRET)
+    g_v = gram_right_layered_pallas(vp, block_n=_tile_block(vp.shape[2]),
+                                    interpret=_INTERPRET)
+    return g_u[:, :rr, :rr], g_v[:, :rr, :rr]
+
+
+def factored_stack_lead(bs: jnp.ndarray, as_: jnp.ndarray,
+                        omega: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                     jnp.ndarray]:
+    """``svd.factored_stack_batched`` on the Pallas kernels, for factor
+    stacks with ANY batch axes between the client and matrix axes.
+
+    bs (M, *B, d, r); as_ (M, *B, r, n); omega (M, r). Returns
+    u_c (*B, d, M*r8), v_c (*B, M*r8, n) -- the layout the sharded round
+    engine zero-scatters and psums (DESIGN.md §5), built on-chip."""
+    m, r = bs.shape[0], bs.shape[-1]
+    d, n = bs.shape[-2], as_.shape[-1]
+    lead = bs.shape[1:-2]
+    layers = 1
+    for s in lead:
+        layers *= s
+    bs_l = jnp.moveaxis(bs.reshape(m, layers, d, r), 0, 1)
+    as_l = jnp.moveaxis(as_.reshape(m, layers, r, n), 0, 1)
+    u_c, v_c = factored_stack_layered(bs_l, as_l, omega)
+    width = u_c.shape[-1]
+    return (u_c.reshape(lead + (d, width)),
+            v_c.reshape(lead + (width, n)))
+
+
+def factored_gram_lead(u_c: jnp.ndarray, v_c: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``factored_gram_layered`` over ANY leading batch axes (or none)."""
+    lead = u_c.shape[:-2]
+    d, rr = u_c.shape[-2:]
+    n = v_c.shape[-1]
+    layers = 1
+    for s in lead:
+        layers *= s
+    g_u, g_v = factored_gram_layered(u_c.reshape(layers, d, rr),
+                                     v_c.reshape(layers, rr, n))
+    return g_u.reshape(lead + (rr, rr)), g_v.reshape(lead + (rr, rr))
+
+
+@jax.jit
+def factored_stack_gram(bs: jnp.ndarray, as_: jnp.ndarray,
+                        omega: jnp.ndarray,
+                        global_b: Optional[jnp.ndarray] = None,
+                        global_a: Optional[jnp.ndarray] = None,
+                        fallback: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                   jnp.ndarray, jnp.ndarray]:
+    """The whole fused factored front half for ONE adapter: (u_c, v_c,
+    g_u, g_v) for svd_realloc_gram.
+
+    bs (M, d, r); as_ (M, r, n); omega (M, r); optional global factors
+    enter as one extra "client" carrying the Eq. 8 fallback indicator.
+    """
+    bs, as_, omega = _append_fallback_client(bs, as_, omega, global_b,
+                                             global_a, fallback,
+                                             layer_axes=0)
+    u_c, v_c = factored_stack_layered(bs[None], as_[None], omega)
+    g_u, g_v = factored_gram_layered(u_c, v_c)
+    return u_c[0], v_c[0], g_u[0], g_v[0]
+
+
+@jax.jit
+def factored_stack_gram_layered(bs: jnp.ndarray, as_: jnp.ndarray,
+                                omega: jnp.ndarray,
+                                global_b: Optional[jnp.ndarray] = None,
+                                global_a: Optional[jnp.ndarray] = None,
+                                fallback: Optional[jnp.ndarray] = None
+                                ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                           jnp.ndarray, jnp.ndarray]:
+    """Layer-batched ``factored_stack_gram``: one kernel launch per shape
+    bucket. bs (L, M, d, r); as_ (L, M, r, n); omega (M, r) shared across
+    layers; global factors (L, d, r)/(L, r, n)."""
+    bs, as_, omega = _append_fallback_client(bs, as_, omega, global_b,
+                                             global_a, fallback,
+                                             layer_axes=1)
+    u_c, v_c = factored_stack_layered(bs, as_, omega)
+    g_u, g_v = factored_gram_layered(u_c, v_c)
+    return u_c, v_c, g_u, g_v
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

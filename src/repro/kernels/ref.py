@@ -28,6 +28,30 @@ def rank_partition_agg_ref(bs: jnp.ndarray, as_: jnp.ndarray,
                       omega.astype(jnp.float32), as_.astype(jnp.float32))
 
 
+def factored_stack_ref(bs: jnp.ndarray, as_: jnp.ndarray,
+                       omega: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sqrt-weighted column stacks U_c (d, M*r) / V_c (M*r, n) of
+    dW = U_c V_c (DESIGN.md §4.2 layout, client-major column blocks).
+
+    bs (M, d, r); as_ (M, r, n); omega (M, r).
+    """
+    m, d, r = bs.shape
+    n = as_.shape[-1]
+    sq = jnp.sqrt(jnp.maximum(omega.astype(jnp.float32), 0.0))
+    u = bs.astype(jnp.float32) * sq[:, None, :]
+    v = as_.astype(jnp.float32) * sq[:, :, None]
+    return (jnp.moveaxis(u, 0, 1).reshape(d, m * r), v.reshape(m * r, n))
+
+
+def gram_cores_ref(u_c: jnp.ndarray, v_c: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(G_u, G_v) = (U_c^T U_c, V_c V_c^T) -- the (R, R) cores the fused
+    kernel accumulates on-chip."""
+    u = u_c.astype(jnp.float32)
+    v = v_c.astype(jnp.float32)
+    return u.T @ u, v @ v.T
+
+
 def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
                  b: jnp.ndarray, c: jnp.ndarray, d_skip: jnp.ndarray,
                  chunk: int, init_state: Optional[jnp.ndarray] = None

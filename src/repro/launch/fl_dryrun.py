@@ -40,7 +40,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.aggregation import sharded_grouped_fn
 from repro.launch.hlo_analysis import analyze_compiled
 from repro.launch.mesh import make_production_mesh
-from repro.sharding.specs import batch_axes
+from repro.sharding.specs import batch_axes, client_spec
 
 
 def lower_aggregation(*, d: int, n: int, clients: int, r_max: int,
@@ -51,7 +51,7 @@ def lower_aggregation(*, d: int, n: int, clients: int, r_max: int,
     shares the reduction instead of replicating it."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     baxes = batch_axes(mesh)
-    cl = NamedSharding(mesh, P(baxes if len(baxes) > 1 else baxes[0]))
+    cl = NamedSharding(mesh, client_spec(baxes))
     bs = jax.ShapeDtypeStruct((clients, d, r_max), jnp.float32, sharding=cl)
     as_ = jax.ShapeDtypeStruct((clients, r_max, n), jnp.float32, sharding=cl)
     omega = jax.ShapeDtypeStruct((clients, r_max), jnp.float32, sharding=cl)
@@ -77,7 +77,14 @@ def main(argv=None) -> int:
     tag = (f"d{args.d}xn{args.n}xM{args.clients}"
            + (f"x{args.pipeline_depth}buf" if args.pipeline_depth > 1
               else ""))
-    for backend in ("dense", "factored"):
+    # "kernel" lowers the fused Pallas path (DESIGN.md §4.3): per-shard
+    # stack grids + the same (d+n, R) all-reduce as "factored", then the
+    # Gram-core realloc -- dW never appears in the program. Off-TPU the
+    # Pallas grids lower in INTERPRET mode (a while-loop emulation), so the
+    # kernel row's tc/tm columns are emulation artifacts; the tx/coll
+    # columns are the real datum -- identical to factored's, showing the
+    # fused path changes per-shard compute, not the collective.
+    for backend in ("dense", "factored", "kernel"):
         lowered, compiled, mesh = lower_aggregation(
             d=args.d, n=args.n, clients=merged_clients, r_max=args.r_max,
             multi_pod=args.multi_pod, backend=backend)

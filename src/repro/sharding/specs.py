@@ -31,6 +31,22 @@ def batch_axes(mesh) -> Tuple[str, ...]:
     return ("pod", DATA) if "pod" in mesh.axis_names else (DATA,)
 
 
+def client_spec(axes: Tuple[str, ...]) -> P:
+    """PartitionSpec sharding a LEADING CLIENT axis over ``axes``.
+
+    The federated round's one sharded axis (DESIGN.md §5): factor stacks,
+    omega rows, batch stacks and per-client metrics all shard their client
+    dimension over the mesh's batch axes -- ``("data",)`` on the live 1-D
+    FL mesh, ``("pod", "data")`` on the multi-pod dry run, where the pod
+    axis shares the reduction instead of replicating it. The single
+    implementation behind ``sharded_grouped_fn``'s in_specs and the
+    fl_dryrun lowerings, so the live engine and the dry run can never
+    drift apart on the client layout.
+    """
+    axes = tuple(axes)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
 class RoundEngineSpecs:
     """PartitionSpecs for the sharded federated round engine (DESIGN.md §5).
 

@@ -1,0 +1,85 @@
+"""Peak-memory regression tripwire for the fused kernel backend (ISSUE 4
+satellite): ``backend="kernel"`` must NEVER materialize a (d, n)-shaped
+intermediate -- that is the whole point of the fused factored path
+(DESIGN.md §4.3). The jitted bucket pipeline is lowered to optimized HLO
+and walked with ``launch/hlo_walker.parse_hlo``; at shapes where
+(d+n) R << d n, ANY array of d*n elements (or with trailing (d, n) /
+(n, d) dims) means the dense update crept back in. The dense backend is
+lowered too, as a positive control that the guard actually detects dW.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import aggregation
+from repro.launch.hlo_walker import _SHAPE, parse_hlo
+
+D, N, M, R_MAX = 192, 320, 3, 16
+
+
+def _compiled_text(backend: str, with_fallback: bool = True) -> str:
+    """Optimized HLO of ``_stacked_core`` (the batched engine's per-bucket
+    dispatch) for one (M, d, r) bucket of the raflora method."""
+    bs = jax.ShapeDtypeStruct((M, D, R_MAX), jnp.float32)
+    as_ = jax.ShapeDtypeStruct((M, R_MAX, N), jnp.float32)
+    om = jax.ShapeDtypeStruct((M, R_MAX), jnp.float32)
+    gb = jax.ShapeDtypeStruct((D, R_MAX), jnp.float32)
+    ga = jax.ShapeDtypeStruct((R_MAX, N), jnp.float32)
+    fb = jax.ShapeDtypeStruct((R_MAX,), jnp.float32) if with_fallback \
+        else None
+    lowered = aggregation._stacked_core.lower(
+        bs, as_, om, gb, ga, fb, r_max=R_MAX, backend=backend,
+        method="raflora")
+    return lowered.compile().as_text()
+
+
+def _offending_arrays(text: str):
+    """All (computation, op, dims) whose result holds >= d*n elements or
+    ends in (d, n)/(n, d) -- walked through the parsed call graph so every
+    computation (while bodies, fusions) is inspected, not just the entry."""
+    bad = []
+    comps = parse_hlo(text)
+    comps.pop("__entry_name__", None)
+    comps.pop("__entry__", None)
+    for comp in comps.values():
+        for op in comp.ops:
+            for m in _SHAPE.finditer(op.result_type):
+                dims = [int(x) for x in m.group(2).split(",") if x]
+                elems = 1
+                for x in dims:
+                    elems *= x
+                if elems >= D * N or (len(dims) >= 2
+                                      and set(dims[-2:]) == {D, N}):
+                    bad.append((comp.name, op.name, dims))
+    return bad
+
+
+class TestKernelPathNeverMaterializesDW:
+    def test_guard_detects_dense_dw(self):
+        """Positive control: the dense backend DOES materialize (d, n),
+        so the tripwire itself is known-live."""
+        assert _offending_arrays(_compiled_text("dense"))
+
+    @pytest.mark.parametrize("with_fallback", [False, True])
+    def test_kernel_path_is_dw_free(self, with_fallback):
+        """(d+n)R << dn here ((192+320)*64 vs 192*320): the fused path's
+        largest legal intermediates are the (d, R)/(R, n) stacks."""
+        bad = _offending_arrays(_compiled_text("kernel", with_fallback))
+        assert not bad, f"(d, n)-scale intermediates on the kernel path: " \
+                        f"{bad[:5]}"
+
+    def test_kernel_bucket_path_is_dw_free(self):
+        """The layered (whole-bucket) kernel route stays dW-free too:
+        a (P, L) bucket must not materialize (L, d, n) either."""
+        bs = jax.ShapeDtypeStruct((M, 2, D, R_MAX), jnp.float32)
+        as_ = jax.ShapeDtypeStruct((M, 2, R_MAX, N), jnp.float32)
+        om = jax.ShapeDtypeStruct((M, R_MAX), jnp.float32)
+        gb = jax.ShapeDtypeStruct((2, D, R_MAX), jnp.float32)
+        ga = jax.ShapeDtypeStruct((2, R_MAX, N), jnp.float32)
+        fb = jax.ShapeDtypeStruct((R_MAX,), jnp.float32)
+        lowered = aggregation._stacked_core.lower(
+            bs, as_, om, gb, ga, fb, r_max=R_MAX, backend="kernel",
+            method="raflora")
+        bad = _offending_arrays(lowered.compile().as_text())
+        assert not bad, f"(d, n)-scale intermediates in the bucket path: " \
+                        f"{bad[:5]}"

@@ -1,0 +1,63 @@
+"""Engine-matrix equivalence on the KERNEL backend (ISSUE 4 satellite):
+``backend="kernel"`` must be engine-complete -- sequential, batched,
+sharded and async(pipeline_depth=1) agree per round for every method in
+``METHODS``, so the fused Pallas path is a real configuration on every
+engine instead of a silent downgrade.
+
+Under plain tier-1 the host exposes a single CPU device (the sharded
+engine's collectives are degenerate); ``tools/ci.sh kernel-smoke`` re-runs
+this module under a forced 8-virtual-device CPU platform where the
+(d+n, R) factor-stack psums are real. Comparisons reuse the sharded-engine
+suite's comparator (loss, sigma probe, per-adapter products, DoRA
+magnitudes, FLoRA base merge).
+"""
+import pytest
+
+from repro.core.aggregation import METHODS
+from repro.federation.experiment import build_experiment
+from test_sharded_engine import _assert_round_equal
+
+ENGINES = ("sequential", "batched", "sharded", "async")
+
+
+def _run(method, engine, lora_over=None):
+    lora_over = lora_over or {"rank_levels": (4, 8, 16),
+                              "rank_probs": (0.34, 0.33, 0.33)}
+    exp = build_experiment(
+        method,
+        fl_overrides={"num_rounds": 1, "num_clients": 4,
+                      "participation": 1.0},
+        lora_overrides=lora_over,
+        samples_per_class=20, num_classes=4, d_model=32,
+        batches_per_round=1, backend="kernel", round_engine=engine,
+        pipeline_depth=1)
+    return exp, exp.server.run(1)
+
+
+class TestKernelEngineMatrix:
+    @pytest.mark.parametrize("method", METHODS)
+    def test_all_engines_agree(self, method):
+        lora_over = ({"rank_levels": (8,), "rank_probs": (1.0,)}
+                     if method == "fedavg"       # fedavg needs equal ranks
+                     else None)
+        runs = {eng: _run(method, eng, lora_over=lora_over)
+                for eng in ENGINES}
+        for other in ENGINES[1:]:
+            _assert_round_equal(runs, ref="sequential", other=other)
+
+
+class TestKernelFallbackAcrossEngines:
+    def test_fallback_active_every_engine(self):
+        """rank_probs puts every client at rank <= 8 with rank_levels up to
+        16, so the (8, 16] partition is empty EVERY round and the Eq. 8
+        fallback augmentation rides through the fused kernels on each
+        engine (as the extra sqrt(fallback)-weighted global client)."""
+        lora_over = {"rank_levels": (4, 8, 16),
+                     "rank_probs": (0.5, 0.5, 0.0)}
+        runs = {eng: _run("raflora", eng, lora_over=lora_over)
+                for eng in ENGINES}
+        srv = runs["sequential"][0].server
+        assert max(runs["sequential"][1][0].ranks) <= 8
+        assert srv.lora_cfg.r_max == 16
+        for other in ENGINES[1:]:
+            _assert_round_equal(runs, ref="sequential", other=other)

@@ -5,9 +5,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
 from repro.kernels import ops, ref
 from repro.kernels.lora_apply import lora_apply_pallas
-from repro.kernels.rank_partition_agg import rank_partition_agg_pallas
+from repro.kernels.rank_partition_agg import (
+    gram_left_layered_pallas, gram_right_layered_pallas,
+    rank_partition_agg_layered_pallas, rank_partition_agg_pallas,
+    weighted_stack_a_layered_pallas, weighted_stack_b_layered_pallas)
 
 
 class TestLoRAApplyKernel:
@@ -101,6 +109,159 @@ class TestRankPartitionAggKernel:
             .aggregate_layer(factors, ranks, [1., 1., 1.], gb, ga)
         np.testing.assert_allclose(np.asarray(r_d.b_g @ r_d.a_g),
                                    np.asarray(r_k.b_g @ r_k.a_g), atol=1e-4)
+
+
+class TestPadToTile:
+    """Non-tile-divisible shapes (ISSUE 4 satellite): the kernels used to
+    assert ``d % bd == 0`` and crash ``backend="kernel"`` on odd adapter
+    shapes; they now pad to the tile with zeros and slice back."""
+
+    def test_dense_kernel_odd_shapes(self):
+        key = jax.random.PRNGKey(0)
+        bs = jax.random.normal(key, (3, 300, 8))
+        as_ = jax.random.normal(jax.random.fold_in(key, 1), (3, 8, 520))
+        om = jax.random.uniform(jax.random.fold_in(key, 2), (3, 8))
+        got = rank_partition_agg_pallas(bs, as_, om, block_d=256,
+                                        block_n=256)
+        want = ref.rank_partition_agg_ref(bs, as_, om)
+        assert got.shape == (300, 520)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+
+    def test_layered_kernel_odd_shapes(self):
+        key = jax.random.PRNGKey(1)
+        bs = jax.random.normal(key, (2, 3, 300, 8))
+        as_ = jax.random.normal(jax.random.fold_in(key, 1), (2, 3, 8, 520))
+        om = jax.random.uniform(jax.random.fold_in(key, 2), (3, 8))
+        got = rank_partition_agg_layered_pallas(bs, as_, om, block_d=256,
+                                                block_n=256)
+        assert got.shape == (2, 300, 520)
+        for ll in range(2):
+            want = ref.rank_partition_agg_ref(bs[ll], as_[ll], om)
+            np.testing.assert_allclose(np.asarray(got[ll]),
+                                       np.asarray(want), atol=1e-4)
+
+    def test_fused_stack_gram_odd_shapes(self):
+        """The fused factored kernels inherit pad-to-tile for odd d / n."""
+        key = jax.random.PRNGKey(2)
+        d, n = 300, 520
+        bs = jax.random.normal(key, (1, 3, d, 8))
+        as_ = jax.random.normal(jax.random.fold_in(key, 1), (1, 3, 8, n))
+        om = jax.random.uniform(jax.random.fold_in(key, 2), (3, 8))
+        u = weighted_stack_b_layered_pallas(bs, om, block_d=256)
+        v = weighted_stack_a_layered_pallas(as_, om, block_n=256)
+        u_ref, v_ref = ref.factored_stack_ref(bs[0], as_[0], om)
+        np.testing.assert_allclose(np.asarray(u[0]), np.asarray(u_ref),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(v[0]), np.asarray(v_ref),
+                                   atol=1e-5)
+        g_u = gram_left_layered_pallas(u, block_d=256)
+        g_v = gram_right_layered_pallas(v, block_n=256)
+        gu_ref, gv_ref = ref.gram_cores_ref(u_ref, v_ref)
+        np.testing.assert_allclose(np.asarray(g_u[0]), np.asarray(gu_ref),
+                                   atol=1e-3, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(g_v[0]), np.asarray(gv_ref),
+                                   atol=1e-3, rtol=1e-5)
+
+    def test_gram_multiblock_mirror(self):
+        """R > br exercises the symmetric-Gram optimization: only
+        upper-triangle blocks are accumulated on-chip and the lower half
+        is mirrored -- must be exact and exactly symmetric."""
+        key = jax.random.PRNGKey(4)
+        u = jax.random.normal(key, (1, 100, 256))          # br=128: 2x2
+        v = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 132))
+        g_u = gram_left_layered_pallas(u, block_d=64)
+        g_v = gram_right_layered_pallas(v, block_n=64)
+        gu_ref, gv_ref = ref.gram_cores_ref(u[0], v[0])
+        np.testing.assert_allclose(np.asarray(g_u[0]), np.asarray(gu_ref),
+                                   atol=2e-3, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(g_v[0]), np.asarray(gv_ref),
+                                   atol=2e-3, rtol=1e-5)
+        assert np.array_equal(np.asarray(g_u[0]), np.asarray(g_u[0]).T)
+
+    def test_ops_wrapper_end_to_end_odd_shapes(self):
+        """Whole kernel-backend aggregation at (d, n) = (300, 520)."""
+        from repro.core import Aggregator
+        key = jax.random.PRNGKey(3)
+        factors = []
+        for i, r in enumerate([4, 8]):
+            kb, ka = jax.random.split(jax.random.fold_in(key, i))
+            factors.append((jax.random.normal(kb, (300, r)) * 0.1,
+                            jax.random.normal(ka, (r, 520)) * 0.1))
+        gb, ga = jnp.zeros((300, 8)), jnp.zeros((8, 520))
+        r_d = Aggregator("raflora", [4, 8], backend="dense") \
+            .aggregate_layer(factors, [4, 8], [1., 2.], gb, ga)
+        r_k = Aggregator("raflora", [4, 8], backend="kernel") \
+            .aggregate_layer(factors, [4, 8], [1., 2.], gb, ga)
+        scale = float(np.abs(np.asarray(r_d.sigma)).max())
+        np.testing.assert_allclose(np.asarray(r_d.b_g @ r_d.a_g),
+                                   np.asarray(r_k.b_g @ r_k.a_g),
+                                   atol=1e-3 * max(1.0, scale))
+
+
+LEVELS = (4, 8, 16)
+
+
+def _het_stack(seed, ranks, d, n, dtype):
+    key = jax.random.PRNGKey(seed)
+    factors = []
+    for i, r in enumerate(ranks):
+        kb, ka = jax.random.split(jax.random.fold_in(key, i))
+        factors.append(((jax.random.normal(kb, (d, r))).astype(dtype),
+                        (jax.random.normal(ka, (r, n))).astype(dtype)))
+    return factors
+
+
+class TestFusedFactoredProperty:
+    """Property tests (ISSUE 4 satellite): the kernel-factored product
+    B_g A_g and spectrum match the dense reference on random
+    heterogeneous-rank stacks, with and without the Eq. 8 fallback
+    augmentation, across f32/bf16 inputs.
+
+    Tolerances scale with sigma_max and are LOOSER than the QR-route
+    equivalences in test_svd.py: the kernel path's Gram cores square the
+    condition number (DESIGN.md §4.3), so agreement is ~sqrt(eps)
+    relative, not eps."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("with_fallback", [False, True])
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           m=st.integers(1, 5),
+           rank_idx=st.lists(st.integers(0, len(LEVELS) - 1),
+                             min_size=1, max_size=5))
+    def test_kernel_matches_dense(self, dtype, with_fallback, seed, m,
+                                  rank_idx):
+        from repro.core import Aggregator
+        from repro.core.partitions import omega_raflora
+        d, n = 24, 40
+        if with_fallback:
+            # all clients below the top level => the (8, 16] partition is
+            # empty and the Eq. 8 fallback indicator is active
+            ranks = [LEVELS[i % 2] for i in rank_idx[:m]] or [4]
+        else:
+            ranks = [LEVELS[i] for i in rank_idx[:m]] + [max(LEVELS)]
+        n_k = [1.0 + (i % 3) for i in range(len(ranks))]
+        _, fb = omega_raflora(ranks, n_k, LEVELS)
+        assert bool(fb.any()) == with_fallback
+        factors = _het_stack(seed, ranks, d, n, dtype)
+        key = jax.random.PRNGKey(seed + 1)
+        gb = jax.random.normal(key, (max(LEVELS), d)).T.astype(dtype)
+        ga = jax.random.normal(jax.random.fold_in(key, 1),
+                               (max(LEVELS), n)).astype(dtype)
+        res = {}
+        for backend in ("dense", "kernel"):
+            agg = Aggregator("raflora", LEVELS, backend=backend)
+            res[backend] = agg.aggregate_layer(factors, ranks, n_k,
+                                               global_b=gb, global_a=ga)
+        scale = max(1.0, float(np.abs(np.asarray(res["dense"].sigma)).max()))
+        np.testing.assert_allclose(
+            np.asarray(res["dense"].sigma), np.asarray(res["kernel"].sigma),
+            atol=1e-3 * scale)
+        np.testing.assert_allclose(
+            np.asarray(res["dense"].b_g @ res["dense"].a_g),
+            np.asarray(res["kernel"].b_g @ res["kernel"].a_g),
+            atol=2e-3 * scale)
 
 
 class TestSSDScanKernel:

@@ -11,11 +11,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
 from repro.core import pad_stack
 from repro.core.partitions import omega_flexlora, omega_raflora
 from repro.core.svd import (check_fallback_globals, dense_from_weighted,
                             factored_from_weighted, svd_realloc_dense,
-                            svd_realloc_factored)
+                            svd_realloc_factored, svd_realloc_gram)
 
 LEVELS = [4, 8, 16]
 R_MAX = 16
@@ -86,6 +91,88 @@ class TestDenseFactoredEquivalence:
         assert not np.any(np.asarray(b_f[:, 6:]))
         np.testing.assert_allclose(np.asarray(b_f @ a_f),
                                    np.asarray(u_c @ v_c), atol=1e-4)
+
+
+class TestGramReallocProperty:
+    """``svd_realloc_gram`` (the kernel backend's Gram-core route,
+    DESIGN.md §4.3) vs the dense reference, property-tested on random
+    heterogeneous-rank stacks with and without the Eq. 8 fallback
+    augmentation, f32 and bf16 inputs.
+
+    Tolerance is sqrt(eps)-scaled (looser than the QR route above): the
+    Gram cores square the condition number, which is the documented price
+    of computing them on-chip with one MXU pass."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           rank_idx=st.lists(st.integers(0, 2), min_size=1, max_size=6),
+           with_fallback=st.sampled_from([False, True]))
+    def test_gram_matches_dense(self, dtype, seed, rank_idx, with_fallback):
+        ranks = [LEVELS[i % (2 if with_fallback else 3)] for i in rank_idx]
+        if not with_fallback:
+            ranks = ranks + [R_MAX]      # top partition covered: no fallback
+        n_k = np.linspace(2, 20, len(ranks))
+        omega_np, fb_np = omega_raflora(ranks, n_k, LEVELS)
+        assert bool(fb_np.any()) == with_fallback
+        omega = jnp.asarray(omega_np)
+        fb = jnp.asarray(fb_np) if with_fallback else None
+        key = jax.random.PRNGKey(seed)
+        factors = []
+        for i, r in enumerate(ranks):
+            kb, ka = jax.random.split(jax.random.fold_in(key, i))
+            factors.append((jax.random.normal(kb, (D, r)).astype(dtype),
+                            jax.random.normal(ka, (r, N)).astype(dtype)))
+        bs, as_ = pad_stack(factors, R_MAX)
+        g_b = jax.random.normal(jax.random.fold_in(key, 91),
+                                (D, R_MAX)).astype(dtype)
+        g_a = jax.random.normal(jax.random.fold_in(key, 92),
+                                (R_MAX, N)).astype(dtype)
+        gb_arg = g_b if with_fallback else None
+        ga_arg = g_a if with_fallback else None
+        dw = dense_from_weighted(bs, as_, omega, gb_arg, ga_arg, fb)
+        b_d, a_d, s_d = svd_realloc_dense(dw, R_MAX)
+        u_c, v_c = factored_from_weighted(bs, as_, omega, gb_arg, ga_arg, fb)
+        g_u = u_c.T @ u_c
+        g_v = v_c @ v_c.T
+        b_g, a_g, s_g = svd_realloc_gram(u_c, v_c, g_u, g_v, R_MAX)
+        scale = max(1.0, float(np.abs(np.asarray(s_d)).max()))
+        np.testing.assert_allclose(np.asarray(s_d), np.asarray(s_g),
+                                   atol=1e-3 * scale)
+        np.testing.assert_allclose(np.asarray(b_d @ a_d),
+                                   np.asarray(b_g @ a_g),
+                                   atol=2e-3 * scale)
+
+    def test_gram_zero_pads_rank_deficient(self):
+        """R < r_max: trailing singular values exactly zero, factors
+        zero-padded -- mirroring ``svd_realloc_factored``'s contract."""
+        key = jax.random.PRNGKey(5)
+        u_c = jax.random.normal(key, (D, 6))
+        v_c = jax.random.normal(jax.random.fold_in(key, 1), (6, N))
+        b_g, a_g, s_g = svd_realloc_gram(u_c, v_c, u_c.T @ u_c,
+                                         v_c @ v_c.T, R_MAX)
+        assert b_g.shape == (D, R_MAX) and a_g.shape == (R_MAX, N)
+        assert np.all(np.asarray(s_g[6:]) == 0)
+        assert not np.any(np.asarray(b_g[:, 6:]))
+        np.testing.assert_allclose(np.asarray(b_g @ a_g),
+                                   np.asarray(u_c @ v_c), atol=1e-3)
+
+    def test_gram_ignores_zero_padded_columns(self):
+        """Zero client columns (rank padding / ghost clients) must be
+        spectrum-inert: the eigensolver sees them as exact-zero eigenpairs
+        cut by the rank threshold."""
+        key = jax.random.PRNGKey(7)
+        u_c = jax.random.normal(key, (D, 6))
+        v_c = jax.random.normal(jax.random.fold_in(key, 1), (6, N))
+        u_p = jnp.concatenate([u_c, jnp.zeros((D, 10))], axis=1)
+        v_p = jnp.concatenate([v_c, jnp.zeros((10, N))], axis=0)
+        b1, a1, s1 = svd_realloc_gram(u_c, v_c, u_c.T @ u_c,
+                                      v_c @ v_c.T, R_MAX)
+        b2, a2, s2 = svd_realloc_gram(u_p, v_p, u_p.T @ u_p,
+                                      v_p @ v_p.T, R_MAX)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(b1 @ a1), np.asarray(b2 @ a2),
+                                   atol=1e-3)
 
 
 class TestFallbackGuard:

@@ -11,6 +11,9 @@
 #   tools/ci.sh bench-full   # the whole quick benchmark suite (run.py)
 #   tools/ci.sh shard-smoke  # sharded round engine equivalence under a
 #                            # forced 8-virtual-device CPU host platform
+#   tools/ci.sh kernel-smoke # backend="kernel" engine matrix (sequential/
+#                            # batched/sharded/async x every METHODS) under
+#                            # a forced 8-virtual-device CPU host platform
 #
 # JAX_PLATFORMS=cpu keeps runs identical on machines that also have
 # accelerators; PYTHONHASHSEED pins dict/hash iteration for determinism.
@@ -31,7 +34,7 @@ case "$tier" in
     exec python -m pytest -x -q
     ;;
   smoke)
-    exec python -m pytest -x -q -k "not federation and not dryrun and not sharded_engine"
+    exec python -m pytest -x -q -k "not federation and not dryrun and not sharded_engine and not kernel_engines"
     ;;
   bench)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
@@ -44,8 +47,12 @@ case "$tier" in
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python -m pytest -x -q tests/test_sharded_engine.py
     ;;
+  kernel-smoke)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    exec python -m pytest -x -q tests/test_kernel_engines.py
+    ;;
   *)
-    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-full|shard-smoke]" >&2
+    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-full|shard-smoke|kernel-smoke]" >&2
     exit 2
     ;;
 esac
