@@ -27,6 +27,15 @@ Studies (all merged into one artifact):
   factored jnp baseline. On CPU the kernels run interpret-mode -- the
   sweep tracks the configuration's latency, not MXU throughput (that is
   ``bench_kernels`` on hardware).
+* ``--engine event`` (ISSUE 5): the EVENT-DRIVEN async engine on the
+  virtual clock -- buffer trigger type x straggler fraction, measuring
+  SIMULATED VIRTUAL TIME to a target higher-rank energy (plus per-fire
+  consumption stats). Unlike the wall-clock studies this sweep
+  characterizes scheduling outcomes: how quickly each trigger policy
+  accumulates aggregated energy when a straggler fraction delays updates.
+  Rows are APPENDED to the artifact's ``event.rows`` (never rewritten), so
+  the tracked file accumulates a history across PRs;
+  ``tools/bench_trend.py`` gates only the wall-clock engine rows.
 * ``--engine all``: every study, one process (``tools/ci.sh bench``).
 
 The sharded/async sweeps are STANDALONE-ONLY (``python -m
@@ -331,11 +340,95 @@ def run_kernel_backend(rounds: int = 8, warmup: int = 2, d_model: int = 64,
     return result
 
 
+def run_event(rounds: int = 10, d_model: int = 32,
+              local_batch_size: int = 8,
+              straggler_fracs=(0.0, 0.5),
+              target_energy: float = 0.25) -> dict:
+    """Event-driven scheduler sweep (ISSUE 5 acceptance artifact): buffer
+    trigger type x straggler fraction -> simulated-virtual-time-to-target-
+    energy for raFLoRA.
+
+    Per config the event engine runs ``rounds`` rounds + a drain on the
+    virtual clock; the recorded metric is the virtual time of the first
+    aggregation whose higher-rank energy ratio reaches ``target_energy``
+    (energy-trace entries map 1:1 to trigger firings), plus per-fire
+    consumption stats. Stragglers are drawn with the same seed across
+    trigger types, so rows are comparable within a sweep. Rows APPEND to
+    the tracked artifact -- reruns accumulate instead of rewriting, and
+    ``tools/bench_trend.py`` never gates them (virtual time is exactly
+    reproducible, so there is nothing to drift)."""
+    from repro.federation.events import (EventScheduler, standard_trigger,
+                                         standard_straggler_latency)
+    rows = []
+    for trig_name in ("count", "timeout", "staleness"):
+        for frac in straggler_fracs:
+            exp = _make("async", rounds=rounds, d_model=d_model,
+                        batches_per_round=1,
+                        local_batch_size=local_batch_size)
+            m = exp.server.fl.clients_per_round
+            trigger = standard_trigger(trig_name, m)
+            sched = EventScheduler(standard_straggler_latency(frac),
+                                   trigger, round_interval=1.0)
+            exp.server.set_event_scheduler(sched)
+            exp.server.run(rounds)
+            exp.server.drain_pending()
+            energy = exp.server.energy.higher_rank_ratio
+            fires = sched.fire_log
+            assert len(energy) == len(fires), (len(energy), len(fires))
+            vt = next((f.time for f, e in zip(fires, energy)
+                       if e >= target_energy), None)
+            rows.append({
+                "trigger": trigger.describe(),
+                "straggler_frac": frac,
+                "virtual_time_to_target_energy": vt,
+                "target_energy": target_energy,
+                "final_higher_rank_energy": float(energy[-1]),
+                "virtual_time_total": sched.clock.now,
+                "aggregations": len(fires),
+                "updates_aggregated": int(sum(f.consumed for f in fires)),
+                "max_staleness": int(max(f.max_staleness for f in fires)),
+                "rounds": rounds,
+            })
+            if vt is not None:
+                emit(f"round_latency/event_{trig_name}_s{frac}", vt * 1e6,
+                     f"vt_to_E>={target_energy}={vt:.1f} aggs={len(fires)}")
+            else:
+                # target never reached: no metric row (a 0.0 sentinel would
+                # read as the BEST outcome in the shared ROWS stream); the
+                # JSON row records null + the final energy
+                print(f"# event_{trig_name}_s{frac}: target energy "
+                      f"{target_energy} not reached in {rounds} rounds "
+                      f"(final {float(energy[-1]):.3f})")
+    # APPEND (never rewrite): the tracked artifact accumulates event rows.
+    # Histories are append-only, so whichever copy holds MORE rows is the
+    # superset -- seeding from it means a stale local artifact (or a
+    # pre-event one) can never truncate the tracked history.
+    existing = {}
+    for path in (ROOT_ARTIFACT, ARTIFACT):
+        if os.path.exists(path):
+            with open(path) as f:
+                section = json.load(f).get("event") or {}
+            if len(section.get("rows", [])) > len(existing.get("rows", [])):
+                existing = section
+    result = {
+        "config": {"clients_per_round": 8, "d_model": d_model,
+                   "local_batch_size": local_batch_size,
+                   "rank_levels": [4, 8, 16], "method": "raflora",
+                   "round_interval": 1.0,
+                   "latency": "straggler-tail lognormal(0.9, 0.2) x6"},
+        "rows": list(existing.get("rows", [])) + rows,
+    }
+    _merge_artifact({"event": result})
+    print(f"# artifact: {ARTIFACT}")
+    return result
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=("batched", "sharded", "async",
-                                         "all"), default="batched")
+                                         "event", "all"),
+                    default="batched")
     ap.add_argument("--backend", choices=("factored", "kernel"),
                     default="factored",
                     help="'kernel' runs the fused-Pallas backend sweep "
@@ -352,10 +445,13 @@ if __name__ == "__main__":
         run_sharded()
     elif args.engine == "async":
         run_async()
+    elif args.engine == "event":
+        run_event()
     elif args.engine == "all":
         run()
         run_sharded()
         run_async()
         run_kernel_backend()
+        run_event()
     else:
         run()

@@ -612,10 +612,34 @@ class Aggregator:
             method=self.method)
         return AggregationResult(b_g, a_g, sigma, merge_delta=dw)
 
+    def _present_weight_args(self, ranks, n_arr, present):
+        """(warg, fallback) with only ``present`` clients participating.
+
+        The event-driven engine aggregates PARTIAL cohorts (whoever has
+        arrived when the trigger fires); absent clients must contribute
+        exactly nothing AND stay out of every membership-derived quantity
+        (raFLoRA effective-contributor sets, the Eq. 8 fallback mask, the
+        fedavg homogeneity check) -- so weights are computed on the present
+        subset only and scattered back with zeros, exactly the ghost-client
+        rule of the sharded path. When every client is present this is
+        bit-identical to the unfiltered path (same inputs, same arrays),
+        which is what keeps the unit-latency event run equal to the
+        cadence engine.
+        """
+        n_arr = np.where(np.asarray(present, dtype=bool), n_arr, 0.0)
+        real = np.flatnonzero(n_arr > 0)
+        assert real.size > 0, "an aggregation fired with no present client"
+        warg_real, fallback = self._weight_args(
+            [ranks[i] for i in real], n_arr[real])
+        warg_np = np.asarray(warg_real)
+        warg = np.zeros((len(n_arr),) + warg_np.shape[1:], warg_np.dtype)
+        warg[real] = warg_np
+        return warg, fallback
+
     def aggregate_grouped(self, group_bs, group_as, ranks, n_k,
                           global_bs=None, global_as=None,
-                          staleness=None, gamma: float = 1.0
-                          ) -> AggregationResult:
+                          staleness=None, gamma: float = 1.0,
+                          present=None) -> AggregationResult:
         """Batched round engine hot path: aggregate a shape bucket straight
         from per-rank-group factor stacks.
 
@@ -629,9 +653,16 @@ class Aggregator:
         ``staleness``/``gamma``: the async round engine's staleness-
         discounted weighting (``staleness_discount``) -- per-client
         aggregation ages folded into the n_k-derived weights.
+
+        ``present``: optional per-client participation mask (event-driven
+        engine): absent clients get zero weight and are excluded from
+        membership-derived weighting (``_present_weight_args``).
         """
-        warg, fallback = self._weight_args(
-            ranks, staleness_discount(n_k, staleness, gamma))
+        n_arr = staleness_discount(n_k, staleness, gamma)
+        if present is not None:
+            warg, fallback = self._present_weight_args(ranks, n_arr, present)
+        else:
+            warg, fallback = self._weight_args(ranks, n_arr)
         b_g, a_g, sigma, dw = _grouped_core(
             tuple(tuple(bt) for bt in group_bs),
             tuple(tuple(at) for at in group_as),
@@ -644,8 +675,8 @@ class Aggregator:
 
     def aggregate_grouped_sharded(self, group_bs, group_as, ranks, n_k,
                                   mesh, global_bs=None, global_as=None,
-                                  staleness=None, gamma: float = 1.0
-                                  ) -> AggregationResult:
+                                  staleness=None, gamma: float = 1.0,
+                                  present=None) -> AggregationResult:
         """Sharded round engine hot path: ``aggregate_grouped`` with the
         client axis sharded over the mesh's ``data`` axis and every
         reduction backed by one ``jax.lax.psum`` (DESIGN.md §5).
@@ -657,18 +688,19 @@ class Aggregator:
         zeros at ghost positions, so ghosts contribute exactly nothing to
         any reduction AND leave the raFLoRA effective-contributor counts /
         Eq. 8 fallback untouched. ``staleness``/``gamma`` discount exactly
-        as in ``aggregate_grouped`` (a ghost's discounted count is still 0).
+        as in ``aggregate_grouped`` (a ghost's discounted count is still 0);
+        ``present`` additionally zeroes not-yet-arrived clients (the
+        event-driven engine's partial cohorts ride the same ghost rule).
         """
         n_shards = mesh.shape["data"]
         sizes = [bt[0].shape[0] for bt in group_bs]
         assert all(g % n_shards == 0 for g in sizes), (sizes, n_shards)
         n_arr = staleness_discount(n_k, staleness, gamma)
-        real = np.flatnonzero(n_arr > 0)
-        warg_real, fallback = self._weight_args(
-            [ranks[i] for i in real], n_arr[real])
-        warg_np = np.asarray(warg_real)
-        warg = np.zeros((len(n_k),) + warg_np.shape[1:], warg_np.dtype)
-        warg[real] = warg_np
+        # ghosts and absent clients share ONE masking rule
+        # (_present_weight_args): subset weights, scattered back with zeros
+        warg, fallback = self._present_weight_args(
+            ranks, n_arr,
+            np.ones(len(n_arr), dtype=bool) if present is None else present)
         group_w = tuple(np.split(warg, np.cumsum(sizes)[:-1]))
         fn = sharded_grouped_fn(mesh, max(self.rank_levels), self.backend,
                                 self.method)

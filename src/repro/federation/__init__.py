@@ -1,5 +1,19 @@
 from repro.federation.client import LocalTrainer
+from repro.federation.events import (BimodalLatency, BufferTrigger,
+                                     ClientLifecycle, ConstantLatency,
+                                     CountTrigger, EventScheduler,
+                                     LatencyModel, LifecycleEvent,
+                                     LognormalLatency, RecordingLatency,
+                                     StalenessBoundTrigger,
+                                     StragglerTailLatency, TimeoutTrigger,
+                                     TraceLatency, VirtualClock)
 from repro.federation.server import FederatedLoRA, RoundStats
 from repro.federation.topology import ClientRegistry
 
-__all__ = ["ClientRegistry", "FederatedLoRA", "LocalTrainer", "RoundStats"]
+__all__ = ["BimodalLatency", "BufferTrigger", "ClientLifecycle",
+           "ClientRegistry", "ConstantLatency", "CountTrigger",
+           "EventScheduler", "FederatedLoRA", "LatencyModel",
+           "LifecycleEvent", "LocalTrainer", "LognormalLatency",
+           "RecordingLatency", "RoundStats", "StalenessBoundTrigger",
+           "StragglerTailLatency", "TimeoutTrigger", "TraceLatency",
+           "VirtualClock"]

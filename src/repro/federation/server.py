@@ -54,6 +54,20 @@ Two round engines (DESIGN.md "Batched round engine"):
   synchronizing with it. ``pipeline_depth=1`` reduces exactly to the
   batched engine (zero staleness is an arithmetic no-op); an optional mesh
   routes both stages through the sharded dispatches instead.
+
+* ``round_engine="async"`` + ``event_scheduler=`` (DESIGN.md §7): the
+  buffered aggregation driven by ARRIVAL EVENTS on a deterministic virtual
+  clock instead of the fixed cadence. Each dispatched client's update
+  arrives after a seeded per-client latency draw
+  (``federation/events.py``); pluggable buffer triggers (count / virtual
+  timeout / staleness bound) decide when the buffered aggregation fires,
+  consuming exactly the updates that have arrived -- partial cohorts ride
+  the ghost-client zero-weight rule (``present`` mask), staleness is
+  arrival-time-derived (``floor(wait / round_interval)``), and client
+  lifecycle events (dropout / rejoin / mid-run join) reshape the sampling
+  pool between rounds. The count trigger under the unit-latency trace is
+  bit-equal to the ``pipeline_depth=k`` cadence path
+  (tests/test_events.py).
 """
 from __future__ import annotations
 
@@ -87,6 +101,8 @@ class RoundStats:
     mean_client_loss: float
     sigma_probe: Optional[np.ndarray]  # singular values of probe adapter
     wall_time_s: float
+    # event-driven engine: the virtual-clock time at the round's window end
+    virtual_time: Optional[float] = None
 
 
 @dataclass
@@ -168,7 +184,8 @@ class FederatedLoRA:
                  round_engine: str = "batched",
                  mesh=None,
                  pipeline_depth: int = 1,
-                 staleness_gamma: float = 1.0):
+                 staleness_gamma: float = 1.0,
+                 event_scheduler=None):
         """batch_fn(client_id, rng) -> list of training batches (dicts).
 
         ``round_engine="sharded"`` runs the batched engine's dispatches as
@@ -182,11 +199,18 @@ class FederatedLoRA:
         (gamma=1: no discount). ``pipeline_depth=1`` IS the batched engine.
         An explicit ``mesh`` routes the async stages through the sharded
         dispatches.
+
+        ``event_scheduler`` (requires ``round_engine="async"``): an
+        ``events.EventScheduler`` replacing the fixed cadence with
+        arrival-event buffer triggers on the virtual clock (see module
+        docstring / DESIGN.md §7).
         """
         assert round_engine in ("batched", "sequential", "sharded",
                                 "async"), round_engine
         assert pipeline_depth >= 1, pipeline_depth
         assert 0.0 < staleness_gamma <= 1.0, staleness_gamma
+        assert event_scheduler is None or round_engine == "async", \
+            "event_scheduler rides round_engine='async'"
         self.round_engine = round_engine
         self.pipeline_depth = pipeline_depth if round_engine == "async" else 1
         self.staleness_gamma = staleness_gamma
@@ -223,6 +247,32 @@ class FederatedLoRA:
         self._plan_idx = 0
         # finalized rounds whose stats still hold unmaterialized handles
         self._stat_queue: deque = deque()
+        # event-driven async engine: arrival-event scheduler on the
+        # virtual clock; "join" lifecycle events grow the client registry
+        self.event_scheduler = None
+        if event_scheduler is not None:
+            self.set_event_scheduler(event_scheduler)
+
+    def set_event_scheduler(self, scheduler) -> None:
+        """Attach an event scheduler before the first round -- lets callers
+        inspect the built registry first (e.g. pick the high-rank clients
+        as the straggler set) and then wire the scenario."""
+        assert self.round_engine == "async", self.round_engine
+        assert self.round_idx == 0 and not self._pending, \
+            "attach the event scheduler before running rounds"
+        self.event_scheduler = scheduler
+        scheduler.bind_join_hook(self._apply_join)
+
+    def _apply_join(self, ev) -> None:
+        """Apply a "join" lifecycle event to the registry. Idempotent: the
+        event declares the id it creates, so replaying the lifecycle prefix
+        after a checkpoint restore cannot double-register."""
+        if ev.client < self.registry.num_clients:
+            return                      # already applied (restore replay)
+        assert ev.client == self.registry.num_clients, \
+            (ev.client, self.registry.num_clients)
+        assert ev.rank is not None and ev.shard is not None, ev
+        self.registry.add_client(ev.rank, ev.shard)
 
     # -- adapter plumbing ---------------------------------------------------
 
@@ -454,7 +504,7 @@ class FederatedLoRA:
         return results, deltas, self._sigma_probe(parents, sigmas)
 
     def _aggregate_grouped(self, group_factors, ranks, n_k, *,
-                           sharded: bool, staleness=None):
+                           sharded: bool, staleness=None, present=None):
         """Batched, sharded AND async engines: bucket adapters by factor
         shape and aggregate each bucket with ONE jitted call.
 
@@ -470,6 +520,10 @@ class FederatedLoRA:
         ``staleness``: per-sampled-client aggregation ages (async engine);
         folded into every n_k-derived weight via
         ``aggregation.staleness_discount`` with ``self.staleness_gamma``.
+        ``present``: per-sampled-client participation mask (event-driven
+        engine): not-yet-arrived clients get exactly zero weight everywhere
+        -- including the DoRA magnitude FedAvg -- and are excluded from
+        membership-derived weighting (``Aggregator._present_weight_args``).
         Server momentum, when configured, applies per bucket in ONE jitted
         dispatch (``FactoredServerMomentum.apply_bucket``) instead of an
         unjitted per-adapter host loop. Returns a ``BucketedUpdate`` (plus
@@ -485,13 +539,17 @@ class FederatedLoRA:
         global_factors = self._extract_factors_batched(self.global_lora,
                                                        r_max)
         # group-order permutation of the client axis (ghosts: rank r_min,
-        # zero samples, zero staleness)
+        # zero samples, zero staleness, never present)
         members = [i for mem, _, _ in group_factors for i in mem]
         ranks_o = [ranks[i] if i >= 0 else r_min for i in members]
         n_k_o = [n_k[i] if i >= 0 else 0 for i in members]
         stal_o = (None if staleness is None else
                   [staleness[i] if i >= 0 else 0 for i in members])
+        pres_o = (None if present is None else
+                  [bool(present[i]) if i >= 0 else False for i in members])
         w_np = staleness_discount(n_k_o, stal_o, gamma)
+        if pres_o is not None:
+            w_np = np.where(np.asarray(pres_o, dtype=bool), w_np, 0.0)
         w_clients = jnp.asarray(w_np / w_np.sum())
         parents = list(group_factors[0][2])
         for parent in [p for p in parents if self._is_magnitude(p)]:
@@ -512,7 +570,7 @@ class FederatedLoRA:
             kwargs = dict(
                 global_bs=[global_factors[p][0] for p in group],
                 global_as=[global_factors[p][1] for p in group],
-                staleness=stal_o, gamma=gamma)
+                staleness=stal_o, gamma=gamma, present=pres_o)
             if sharded:
                 res = self.aggregator.aggregate_grouped_sharded(
                     *args, self.mesh, **kwargs)
@@ -578,10 +636,19 @@ class FederatedLoRA:
         Consumes the rng in strict round order (one ``sample_round`` + one
         ``batch_fn`` per client), so the sampling stream is identical across
         engines AND pipeline depths -- a resumed or re-depth'd run sees the
-        same clients."""
+        same clients.
+
+        With an event scheduler the sample is drawn from the ACTIVE client
+        pool (dropouts excluded, joined clients included); scenarios with
+        no lifecycle events keep ``active=None`` and therefore the exact
+        historical rng stream."""
         fl = self.fl
+        active = (None if self.event_scheduler is None else
+                  self.event_scheduler.active_clients(
+                      self.registry.num_clients))
         clients = self.registry.sample_round(fl.clients_per_round,
-                                             self.rng).tolist()
+                                             self.rng,
+                                             active=active).tolist()
         plan = RoundPlan(
             round=self._plan_idx, version=self.round_idx, clients=clients,
             ranks=[int(self.registry.ranks[c]) for c in clients],
@@ -662,13 +729,19 @@ class FederatedLoRA:
     def flush_stats(self, keep: int = 0) -> None:
         """Materialize queued round stats (oldest first) until at most
         ``keep`` remain pending: loss handles -> mean client loss, sigma
-        probe -> energy trace + history entry."""
+        probe -> energy trace + history entry. The event-driven engine can
+        fire several aggregations inside one round's window, so an entry
+        may carry a LIST of probe handles -- each is recorded in the energy
+        trace; the round's stats keep the last."""
         while len(self._stat_queue) > keep:
             stats, plan, sigma_probe = self._stat_queue.popleft()
-            probe = self._materialize_probe(sigma_probe)
-            if probe is not None:
-                self.energy.record(probe)
-                stats.sigma_probe = probe
+            probes = (sigma_probe if isinstance(sigma_probe, list)
+                      else [sigma_probe])
+            for handle in probes:
+                probe = self._materialize_probe(handle)
+                if probe is not None:
+                    self.energy.record(probe)
+                    stats.sigma_probe = probe
             losses = (plan.losses if plan.losses is not None
                       else self._losses_from_parts(plan.loss_parts,
                                                    len(plan.ranks)))
@@ -710,7 +783,12 @@ class FederatedLoRA:
 
         Buffer-fill rounds report their training losses; sigma_probe (and
         an energy-trace entry) appears on aggregation rounds only.
+
+        With an ``event_scheduler`` the cadence is replaced by arrival
+        events on the virtual clock (``_run_round_event``).
         """
+        if self.event_scheduler is not None:
+            return self._run_round_event()
         t0 = time.time()
         plan = self._plan_round()
         self._train_stage(plan)
@@ -720,6 +798,100 @@ class FederatedLoRA:
             results, deltas, sigma_probe = self._aggregate_buffer(plan.round)
         return self._finalize_round(plan, results, deltas, sigma_probe, t0)
 
+    # -- event-driven async rounds (DESIGN.md §7) ----------------------------
+
+    def _run_round_event(self) -> RoundStats:
+        """One event-driven round: plan + dispatch training at the current
+        virtual time, register per-client arrival events, then advance the
+        clock one ``round_interval`` processing arrivals / lifecycle events
+        in order. Every trigger firing runs ONE buffered aggregation over
+        exactly the arrived-but-unaggregated updates (partial cohorts ride
+        the ghost zero-weight rule) and applies it immediately, so later
+        fires in the same window see the updated global adapters."""
+        t0 = time.time()
+        sched = self.event_scheduler
+        plan = self._plan_round()
+        self._train_stage(plan)
+        self._pending.append(plan)
+        sched.dispatch(plan.round, plan.clients)
+        probes = []
+        for fire_time in sched.advance_window():
+            probe = self._fire_aggregation(fire_time)
+            if probe is not None:
+                probes.append(probe)
+        self._retire_completed()
+        stats = self._finalize_round(plan, None, None, probes or None, t0)
+        stats.virtual_time = sched.clock.now
+        return stats
+
+    def _fire_aggregation(self, fire_time: float):
+        """Aggregate every arrived-but-unaggregated client update at one
+        trigger firing and apply it to the global adapters. Returns the
+        (lazy) sigma probe handle, or None if nothing was buffered."""
+        results, deltas, sigma_probe = self._aggregate_arrivals(fire_time)
+        if results is None:
+            return None
+        self._write_factors(results)
+        if deltas:
+            self._merge_flora_delta(deltas)
+        return sigma_probe
+
+    def _aggregate_arrivals(self, fire_time: float):
+        """The event-driven buffered aggregation: merge the pending plans
+        that have ready (arrived, unconsumed) members into one bucketed
+        step -- full factor stacks with a ``present`` mask, so a plan can
+        be consumed across several fires, each member exactly once.
+        Staleness is arrival-time-derived (``EventScheduler.staleness_of``).
+        """
+        sched = self.event_scheduler
+        ready = sched.take_ready()
+        plans = [p for p in self._pending if p.round in ready]
+        if not plans:
+            return None, None, None
+        ranks, n_k, group_factors = self._merge_plan_groups(plans)
+        staleness, present = [], []
+        for p in plans:
+            arrived = ready[p.round]
+            for j in range(len(p.clients)):
+                present.append(j in arrived)
+                staleness.append(
+                    sched.staleness_of(fire_time, arrived[j])
+                    if j in arrived else 0)
+        return self._aggregate_grouped(
+            group_factors, ranks, n_k, sharded=self._sharded_dispatch,
+            staleness=staleness, present=present)
+
+    def _retire_completed(self) -> None:
+        """Drop pending plans whose every member has been aggregated or
+        lost to a dropout -- their factor stacks are no longer needed
+        (loss handles stay on the stat queue until flushed)."""
+        done = set(self.event_scheduler.completed_plans())
+        if not done:
+            return
+        for p in self._pending:
+            if p.round in done:
+                p.group_factors = None
+                self.event_scheduler.forget_plan(p.round)
+        self._pending = deque(p for p in self._pending
+                              if p.round not in done)
+
+    @staticmethod
+    def _merge_plan_groups(plans):
+        """Merge pending plans' rank-group factor stacks onto ONE sampled-
+        client axis: member indices rebase by each plan's offset (ghosts
+        stay -1). The single rebase rule shared by the cadence buffer and
+        the event-driven arrival aggregation -- their bit-equivalence
+        depends on it."""
+        ranks = [r for p in plans for r in p.ranks]
+        n_k = [n for p in plans for n in p.n_k]
+        group_factors, off = [], 0
+        for p in plans:
+            group_factors += [
+                ([m + off if m >= 0 else -1 for m in mem], r_max, fg)
+                for mem, r_max, fg in p.group_factors]
+            off += len(p.clients)
+        return ranks, n_k, group_factors
+
     def _aggregate_buffer(self, as_of_round: int):
         """Aggregate EVERY pending plan in one buffered, staleness-
         discounted bucketed step (plan age in rounds = staleness). Member
@@ -728,15 +900,9 @@ class FederatedLoRA:
         single round's."""
         plans = list(self._pending)
         self._pending.clear()
-        ranks = [r for p in plans for r in p.ranks]
-        n_k = [n for p in plans for n in p.n_k]
-        group_factors, staleness, off = [], [], 0
-        for p in plans:
-            staleness += [as_of_round - p.round] * len(p.clients)
-            group_factors += [
-                ([m + off if m >= 0 else -1 for m in mem], r_max, fg)
-                for mem, r_max, fg in p.group_factors]
-            off += len(p.clients)
+        ranks, n_k, group_factors = self._merge_plan_groups(plans)
+        staleness = [as_of_round - p.round
+                     for p in plans for _ in p.clients]
         out = self._aggregate_grouped(
             group_factors, ranks, n_k,
             sharded=self._sharded_dispatch, staleness=staleness)
@@ -755,7 +921,25 @@ class FederatedLoRA:
         pending plans' rounds already reported their stats -- but the
         aggregate updates the global model, the energy trace, and the last
         history entry's sigma probe. Returns the probe (None if nothing
-        was pending)."""
+        was pending).
+
+        Event-driven engine: the remaining arrival events are played out
+        (triggers still fire where due), then whatever is left buffered is
+        force-aggregated at the final virtual time -- in-flight updates of
+        dropped-out clients stay lost, by design."""
+        if self.event_scheduler is not None:
+            self.flush_stats()   # queued probes precede the drain's fires
+            probe = None
+            for fire_time in self.event_scheduler.drain():
+                handle = self._fire_aggregation(fire_time)
+                p = self._materialize_probe(handle)
+                if p is not None:
+                    self.energy.record(p)
+                    probe = p
+            self._retire_completed()
+            if probe is not None and self.history:
+                self.history[-1].sigma_probe = probe
+            return probe
         if not self._pending:
             return None
         as_of = self._pending[-1].round
@@ -903,6 +1087,12 @@ class FederatedLoRA:
             meta["pending"] = [self._plan_meta(p) for p in self._pending]
             for i, plan in enumerate(self._pending):
                 save_flat(path + f".pending{i}", self._plan_arrays(plan))
+        # event-driven engine: the virtual clock, the in-flight arrival
+        # queue, per-plan arrival/consumption bookkeeping and the latency
+        # models' rng streams -- without them a resumed run re-draws
+        # latencies and fires triggers at different virtual times
+        if self.event_scheduler is not None:
+            meta["events"] = self.event_scheduler.state_dict()
         save_pytree(path + ".lora", self.global_lora, metadata=meta)
 
     def restore(self, path: str) -> None:
@@ -936,6 +1126,18 @@ class FederatedLoRA:
             for i, pm in enumerate(meta.get("pending") or []):
                 self._pending.append(self._plan_from_arrays(
                     pm, load_flat(path + f".pending{i}")))
+            if self.event_scheduler is not None:
+                # resets to the CHECKPOINT's event state (pristine when the
+                # checkpoint was not event-driven); replays applied "join"
+                # events so the registry matches the restored round
+                self.event_scheduler.load_state_dict(meta.get("events"))
+            else:
+                # an event-driven checkpoint resumed without a scheduler
+                # would re-draw latencies and fire on the wrong cadence --
+                # refuse instead of silently diverging
+                assert meta.get("events") is None, \
+                    ("checkpoint carries event-scheduler state; attach an "
+                     "EventScheduler before restore()")
         # pending plans belong to ALREADY-COUNTED rounds (the buffered-
         # aggregation cadence), so planning resumes at round_idx itself
         self._plan_idx = self.round_idx

@@ -36,9 +36,29 @@ class ClientRegistry:
     def num_samples(self, k: int) -> int:
         return len(self.shards[k])
 
-    def sample_round(self, m: int, rng: np.random.Generator) -> np.ndarray:
-        """Uniform sampling without replacement (Alg. 1 line 3)."""
-        return rng.choice(self.num_clients, size=m, replace=False)
+    def add_client(self, rank: int, shard: np.ndarray) -> int:
+        """Register a NEW client mid-run (event-driven "join" lifecycle
+        event) and return its id. Ids are append-only so plans and shards
+        recorded before the join stay valid."""
+        cid = self.num_clients
+        self.ranks = np.append(self.ranks, int(rank)).astype(int)
+        self.shards.append(np.asarray(shard, dtype=np.int64))
+        return cid
+
+    def sample_round(self, m: int, rng: np.random.Generator,
+                     active: Optional[np.ndarray] = None) -> np.ndarray:
+        """Uniform sampling without replacement (Alg. 1 line 3).
+
+        ``active`` (event-driven engine): restrict sampling to this client
+        pool -- dropouts leave it, rejoined/joined clients enter it. A
+        round never samples more clients than are active. ``active=None``
+        keeps the exact historical rng consumption, so scenarios without
+        lifecycle events reproduce cadence-engine sampling bit-for-bit."""
+        if active is None:
+            return rng.choice(self.num_clients, size=m, replace=False)
+        active = np.asarray(active)
+        m = min(int(m), active.size)
+        return active[rng.choice(active.size, size=m, replace=False)]
 
     def coverage(self) -> np.ndarray:
         from repro.core.partitions import coverage

@@ -27,6 +27,17 @@ staleness discounts are omega DATA, not program structure), so the dry run
 shows exactly how the collective bytes and FLOPs of a buffered step scale
 with depth -- dense stays a (d, n) all-reduce regardless of D; the factored
 stack widens to R = D*M*r_max.
+
+``--trigger {count,timeout,staleness}`` lowers the EVENT-DRIVEN engine's
+buffered step instead (DESIGN.md §7): the event scheduler is SIMULATED on
+the host (virtual clock + straggler-tail latency, ``--straggler-fraction``)
+to obtain the trigger's actual fire-time cohort sizes, and the same
+``sharded_grouped_fn`` program is lowered at the p50 and p95 cohort
+(padded to the mesh's data-axis multiple, exactly like the live engine's
+ghost clients) -- i.e. the program the production mesh would run at a
+typical and at a tail firing. Staleness discounts and the ``present`` mask
+are omega DATA, so trigger choice changes the CLIENT-AXIS SIZE
+distribution, which is what the tx/coll columns quantify.
 """
 import argparse
 import sys
@@ -60,6 +71,31 @@ def lower_aggregation(*, d: int, n: int, clients: int, r_max: int,
     return lowered, lowered.compile(), mesh
 
 
+def simulate_trigger_cohorts(trigger: str, *, clients_per_round: int,
+                             rounds: int = 40,
+                             straggler_fraction: float = 0.25,
+                             seed: int = 0) -> list:
+    """Host-only event-scheduler simulation (no jax): the per-fire cohort
+    sizes the chosen trigger actually produces under a straggler-tail
+    latency model. These sizes parameterize the lowered program's client
+    axis -- the event-driven engine's ONLY program-structure effect."""
+    from repro.federation.events import (EventScheduler, standard_trigger,
+                                         standard_straggler_latency)
+    sched = EventScheduler(
+        standard_straggler_latency(straggler_fraction, seed=seed),
+        standard_trigger(trigger, clients_per_round), round_interval=1.0)
+    counts = []
+    for r in range(rounds):
+        sched.dispatch(r, list(range(clients_per_round)))
+        for _ in sched.advance_window():
+            ready = sched.take_ready()
+            counts.append(sum(len(rd) for rd in ready.values()))
+    for _ in sched.drain():
+        ready = sched.take_ready()
+        counts.append(sum(len(rd) for rd in ready.values()))
+    return counts
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--d", type=int, default=4096)
@@ -70,9 +106,51 @@ def main(argv=None) -> int:
     ap.add_argument("--pipeline-depth", type=int, default=1,
                     help="lower the async engine's buffered aggregation: "
                          "one step consuming this many rounds' clients")
+    ap.add_argument("--trigger",
+                    choices=("count", "timeout", "staleness"),
+                    help="lower the EVENT-DRIVEN buffered step at the "
+                         "simulated trigger's p50/p95 cohort sizes")
+    ap.add_argument("--straggler-fraction", type=float, default=0.25)
     args = ap.parse_args(argv)
 
     chips = 512 if args.multi_pod else 256
+
+    if args.trigger is not None:
+        counts = simulate_trigger_cohorts(
+            args.trigger, clients_per_round=args.clients,
+            straggler_fraction=args.straggler_fraction)
+        data_mult = 32 if args.multi_pod else 16   # pad like ghost clients
+        cohorts, seen = [], set()
+        for pct in (50, 95):
+            c = int(np.percentile(counts, pct))
+            merged = max(data_mult, -(-c // data_mult) * data_mult)
+            if merged not in seen:     # p50 == p95 happens (count trigger)
+                seen.add(merged)
+                cohorts.append((pct, merged))
+        print(f"[event] trigger={args.trigger} "
+              f"straggler_frac={args.straggler_fraction} fires={len(counts)} "
+              "cohorts "
+              + "/".join(f"p{pct}={m}" for pct, m in cohorts)
+              + f" (raw {int(np.percentile(counts, 50))}/"
+              f"{int(np.percentile(counts, 95))}, padded to x{data_mult})")
+        for pct, merged in cohorts:
+            tag = f"d{args.d}xn{args.n}xM{merged}p{pct}{args.trigger}"
+            for backend in ("dense", "factored", "kernel"):
+                lowered, compiled, mesh = lower_aggregation(
+                    d=args.d, n=args.n, clients=merged, r_max=args.r_max,
+                    multi_pod=args.multi_pod, backend=backend)
+                rep = analyze_compiled(
+                    lowered, compiled, arch=f"fl-agg-evt-{backend}",
+                    shape=tag,
+                    mesh_name="2x16x16" if args.multi_pod else "16x16",
+                    chips=chips)
+                print(f"[OK] fl-event p{pct} backend={backend:9s} "
+                      f"M={merged:4d} "
+                      f"tx={rep.t_collective*1e6:9.2f}us "
+                      f"coll={rep.coll_bytes/1e6:8.1f}MB "
+                      f"flops={rep.hlo_flops/1e9:9.2f}GF")
+        return 0
+
     merged_clients = args.clients * args.pipeline_depth
     tag = (f"d{args.d}xn{args.n}xM{args.clients}"
            + (f"x{args.pipeline_depth}buf" if args.pipeline_depth > 1

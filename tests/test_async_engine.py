@@ -67,6 +67,7 @@ def _assert_round_equal(runs, ref="batched", other="async"):
                                    rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 class TestAsyncDepthOneEquivalence:
     """``round_engine="async", pipeline_depth=1`` IS the batched engine:
     per-round equivalence for every aggregation method (the async engine
@@ -89,6 +90,7 @@ class TestAsyncDepthOneEquivalence:
         _assert_round_equal(runs, ref="sequential")
 
 
+@pytest.mark.slow
 class TestBufferedCadence:
     """pipeline_depth > 1: one buffered aggregation per depth rounds, the
     client-sampling stream identical to the synchronous engines, stats
@@ -163,6 +165,7 @@ class TestBufferedCadence:
         assert mom.bucket_calls <= n_aggs * n_buckets
 
 
+@pytest.mark.slow
 class TestAsyncResume:
     """ISSUE 3 acceptance: save -> restore -> run equals the uninterrupted
     run exactly with ``server_momentum_beta > 0``, INCLUDING a non-empty

@@ -5,10 +5,17 @@ leaves either the previous complete checkpoint or the new one, never a
 half-written npz that ``restore()`` half-loads. Both ``save("ckpt")`` and
 ``save("ckpt.npz")`` spellings must interoperate, and ``load_metadata``'s
 old dead ``.npz.meta.json`` rewrite branch is replaced by stem
-normalization."""
+normalization.
+
+ISSUE 5 satellite: the EVENT-DRIVEN engine's in-flight state -- virtual
+clock, pending arrival queue, per-plan arrival bookkeeping, per-client
+latency rng streams -- must round-trip through ``save()``/``restore()`` so
+a mid-buffer resume equals the uninterrupted event-driven run exactly
+(``TestEventResume``, mirroring ``TestAsyncResume``)."""
 import json
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -137,3 +144,99 @@ class TestServerCheckpointMomentum:
         np.testing.assert_allclose(
             np.asarray(back.state[key_b][0]),
             np.asarray(mom.state[(key_b,)][0][0]))
+
+
+class TestEventSchedulerStateRoundtrip:
+    """The scheduler's ``state_dict`` must survive a JSON round trip (it
+    rides checkpoint metadata) and restore clock / queue / rng exactly."""
+
+    def _sched(self):
+        from repro.federation.events import (CountTrigger, EventScheduler,
+                                             LognormalLatency)
+        return EventScheduler(LognormalLatency(median=1.1, sigma=0.4,
+                                               seed=3),
+                              CountTrigger(5), round_interval=1.0)
+
+    def test_state_json_roundtrip_mid_stream(self):
+        sched = self._sched()
+        sched.dispatch(0, [0, 1, 2])
+        for _ in sched.advance_window():
+            sched.take_ready()
+        sched.dispatch(1, [3, 4, 0])
+        for _ in sched.advance_window():
+            sched.take_ready()
+        state = json.loads(json.dumps(sched.state_dict()))
+
+        back = self._sched()
+        back.load_state_dict(state)
+        assert back.clock.now == sched.clock.now
+        assert sorted(back._heap) == sorted(sched._heap)
+        assert back._book == sched._book
+        assert back.fire_log == sched.fire_log
+        # the latency rng streams continue IDENTICALLY after restore
+        for c in (0, 1, 2, 3, 4):
+            assert back.latency.sample(c) == sched.latency.sample(c)
+
+    def test_load_none_resets_pristine(self):
+        sched = self._sched()
+        sched.dispatch(0, [0, 1, 2])
+        sched.load_state_dict(None)
+        assert sched.clock.now == 0.0 and not sched._heap
+        assert sched.pending_ready_count == 0
+
+
+@pytest.mark.slow
+class TestEventResume:
+    """ISSUE 5 satellite: save -> restore -> run equals the uninterrupted
+    EVENT-DRIVEN run exactly, with a mid-buffer save (in-flight arrivals in
+    the virtual queue, arrived-but-unaggregated updates, momentum state)."""
+
+    def _make(self):
+        from repro.federation.events import (CountTrigger, EventScheduler,
+                                             LognormalLatency)
+        from repro.federation.experiment import build_experiment
+        sched = EventScheduler(
+            LognormalLatency(median=1.3, sigma=0.5, seed=13),
+            CountTrigger(6), round_interval=1.0)
+        return build_experiment(
+            "raflora",
+            fl_overrides={"num_rounds": 8, "num_clients": 8,
+                          "participation": 0.5},
+            lora_overrides={"rank_levels": (4, 8, 16),
+                            "rank_probs": (0.34, 0.33, 0.33)},
+            samples_per_class=20, num_classes=4, d_model=32,
+            batches_per_round=1, round_engine="async",
+            event_scheduler=sched, server_momentum_beta=0.9)
+
+    def test_mid_buffer_event_resume(self, tmp_path):
+        full = self._make()
+        full.server.run(5)
+
+        part = self._make()
+        part.server.run(3)
+        sched = part.server.event_scheduler
+        assert part.server._pending            # mid-buffer at save time
+        assert sched._heap or sched.pending_ready_count  # in-flight events
+        path = str(tmp_path / "event_ckpt")
+        part.server.save(path)
+
+        resumed = self._make()
+        resumed.server.restore(path)
+        rs = resumed.server.event_scheduler
+        assert rs.clock.now == sched.clock.now
+        assert sorted(rs._heap) == sorted(sched._heap)
+        assert len(resumed.server._pending) == len(part.server._pending)
+        resumed.server.run(2)
+
+        for sf, sr in zip(full.server.history, resumed.server.history):
+            assert sf.clients == sr.clients and sf.ranks == sr.ranks
+            assert sf.virtual_time == sr.virtual_time
+            np.testing.assert_allclose(sf.mean_client_loss,
+                                       sr.mean_client_loss, rtol=1e-6)
+        np.testing.assert_allclose(full.server.energy.rho_r1,
+                                   resumed.server.energy.rho_r1, rtol=1e-6)
+        assert full.server.event_scheduler.fire_log == rs.fire_log
+        for a, b in zip(jax.tree.leaves(full.server.global_lora),
+                        jax.tree.leaves(resumed.server.global_lora)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)

@@ -24,6 +24,7 @@ def quick():
     return make
 
 
+@pytest.mark.slow
 class TestRoundLoop:
     def test_loss_decreases_and_accuracy_improves(self, quick):
         exp = quick("raflora")
@@ -66,6 +67,7 @@ class TestRoundLoop:
         assert abs(exp2.eval_accuracy() - acc) < 1e-6
 
 
+@pytest.mark.slow
 class TestCheckpointResumeState:
     """ISSUE 2 satellites: ``restore`` must bring back the rng stream, the
     energy trace, and the round history -- a resumed run previously drew a
@@ -148,6 +150,7 @@ class TestCheckpointResumeState:
                                        rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 class TestPaperClaims:
     """The paper's qualitative claims, reproduced in-training (not just in
     the closed-form theory model)."""
@@ -212,6 +215,7 @@ class TestPaperClaims:
         np.testing.assert_allclose(diff, tail, atol=1e-3)
 
 
+@pytest.mark.slow
 class TestRoundEngineEquivalence:
     """The batched round engine (vmapped client groups + bucketed stacked
     aggregation) must reproduce the sequential reference engine to float

@@ -133,6 +133,52 @@ class TestEnergyPreservation:
         np.testing.assert_allclose(got, np.sort(sigma)[::-1], atol=1e-4)
 
 
+@pytest.mark.slow
+class TestStragglerRankCollapse:
+    """ISSUE 5 satellite: the paper's core claim in the EVENT-DRIVEN
+    straggler scenario. When the HIGH-RANK clients are the stragglers,
+    their updates arrive late and staleness discounting (gamma < 1) pushes
+    aggregation weight toward the fresh low-rank cohort -- the worst case
+    for higher-rank energy. Rank-agnostic aggregation (FlexLoRA) collapses;
+    raFLoRA's rank-partitioned weights keep the higher-rank energy alive.
+    """
+
+    def _run(self, method):
+        from repro.federation.events import (EventScheduler,
+                                             StragglerTailLatency,
+                                             TimeoutTrigger)
+        from repro.federation.experiment import build_experiment
+        exp = build_experiment(
+            method,
+            fl_overrides={"num_rounds": 12, "num_clients": 12,
+                          "participation": 0.5},
+            samples_per_class=60, num_classes=12, d_model=96,
+            batches_per_round=1, round_engine="async",
+            staleness_gamma=0.6)
+        # stragglers = every client above the minimum rank level: the
+        # high-rank updates always arrive one-to-several windows late
+        high = np.flatnonzero(
+            exp.registry.ranks > min(exp.server.lora_cfg.rank_levels))
+        assert high.size > 0
+        sched = EventScheduler(
+            StragglerTailLatency(median=0.8, sigma=0.15, tail_scale=2.5,
+                                 straggler_clients=high, seed=5),
+            TimeoutTrigger(2.0), round_interval=1.0)
+        exp.server.set_event_scheduler(sched)
+        exp.server.run(12)
+        exp.server.drain_pending()
+        return exp.server.energy
+
+    def test_high_rank_stragglers_collapse_flexlora_not_raflora(self):
+        ratios = {m: self._run(m).higher_rank_ratio
+                  for m in ("flexlora", "raflora")}
+        # FlexLoRA: higher-rank energy decays markedly even though the
+        # high-rank updates DO arrive (late, discounted); raFLoRA holds it
+        assert ratios["flexlora"][-1] < 0.5 * ratios["flexlora"][0]
+        assert ratios["raflora"][-1] > 0.8 * ratios["raflora"][0]
+        assert ratios["raflora"][-1] > 2.0 * ratios["flexlora"][-1]
+
+
 class TestServingInvariants:
     def test_multi_step_decode_matches_forward(self, rng_key):
         """Greedy decode token-by-token == teacher-forced forward argmax at

@@ -3,11 +3,17 @@
 #
 #   tools/ci.sh              # tier-1: the full suite (ROADMAP "Tier-1 verify")
 #   tools/ci.sh smoke        # fast tier: skips the slow federated integration
-#                            # and dry-run modules (~seconds vs ~minutes)
+#                            # and dry-run modules plus everything marked
+#                            # @pytest.mark.slow (~seconds vs ~minutes)
 #   tools/ci.sh bench        # tracked round-engine perf artifact: the full
-#                            # engines x shard/pipeline-depth sweep under a
+#                            # engines x shard/pipeline-depth sweep (now incl.
+#                            # the event-driven trigger sweep) under a
 #                            # forced 8-virtual-device CPU platform, written
 #                            # to BENCH_round_latency.json at the repo root
+#   tools/ci.sh bench-check  # trend guard: snapshot the tracked artifact,
+#                            # rerun the bench sweep, fail on >25% per-round
+#                            # regression of existing engine x backend rows
+#                            # (tools/bench_trend.py; event rows append-only)
 #   tools/ci.sh bench-full   # the whole quick benchmark suite (run.py)
 #   tools/ci.sh shard-smoke  # sharded round engine equivalence under a
 #                            # forced 8-virtual-device CPU host platform
@@ -34,11 +40,22 @@ case "$tier" in
     exec python -m pytest -x -q
     ;;
   smoke)
-    exec python -m pytest -x -q -k "not federation and not dryrun and not sharded_engine and not kernel_engines"
+    exec python -m pytest -x -q -m "not slow" -k "not federation and not dryrun and not sharded_engine and not kernel_engines"
     ;;
   bench)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python -m benchmarks.bench_round_latency --engine all
+    ;;
+  bench-check)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    baseline="$(mktemp /tmp/bench_baseline.XXXXXX.json)"
+    trap 'rm -f "$baseline"' EXIT
+    cp BENCH_round_latency.json "$baseline"
+    python -m benchmarks.bench_round_latency --engine all
+    exec_status=0
+    python tools/bench_trend.py --baseline "$baseline" \
+      --fresh BENCH_round_latency.json || exec_status=$?
+    exit "$exec_status"
     ;;
   bench-full)
     exec python -m benchmarks.run --quick
@@ -52,7 +69,7 @@ case "$tier" in
     exec python -m pytest -x -q tests/test_kernel_engines.py
     ;;
   *)
-    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-full|shard-smoke|kernel-smoke]" >&2
+    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|shard-smoke|kernel-smoke]" >&2
     exit 2
     ;;
 esac
