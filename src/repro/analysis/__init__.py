@@ -1,0 +1,29 @@
+"""Program-audit subsystem (DESIGN.md §8): declarative lint rules over the
+three program representations this repo ships -- optimized HLO, jaxprs and
+Pallas kernel launch parameters -- plus a runtime dispatch/recompile
+auditor. Four passes share one rule-engine core:
+
+  hlo_lint        rules over parsed optimized HLO (``launch/hlo_walker``):
+                  (d, n)-materialization scale, collective count/byte
+                  budgets, host-transfer ops, dtype upcasts
+  jaxpr_lint      rules over traced round-path jaxprs: host callbacks,
+                  host-sync primitives, f64 promotions
+  pallas_lint     static validation of every registered Pallas kernel:
+                  BlockSpec/grid consistency, pad-to-tile coverage,
+                  per-grid-step VMEM footprint vs budget
+  dispatch_audit  counts jit cache misses / XLA compiles / eager binds
+                  across a multi-round run; steady-state rounds must
+                  compile nothing new
+
+``tools/lint_programs.py`` sweeps the engine x backend x METHODS matrix
+through all four and writes the tracked ``AUDIT_program_lint.json``;
+``tools/ci.sh lint`` gates it.
+"""
+from repro.analysis.rules import (Finding, ProgramContext, Rule, RuleSet,
+                                  SEV_ERROR, SEV_WARNING)
+from repro.analysis.report import AuditReport, ProgramAudit
+
+__all__ = [
+    "Finding", "ProgramContext", "Rule", "RuleSet", "SEV_ERROR",
+    "SEV_WARNING", "AuditReport", "ProgramAudit",
+]

@@ -1,0 +1,179 @@
+"""dispatch_audit: count jit cache misses, XLA compiles and eager
+dispatches across a multi-round run; assert steady-state rounds compile
+NOTHING new.
+
+PR 3 fixed, by hand, a class of regressions where the async round path
+retraced jitted programs every round (shape-varying arguments) or leaked
+eager ops into the host loop (each one a device sync serializing against
+in-flight work). This pass turns that discipline into a gate:
+
+  * jit cache misses  -- ``jax.monitoring`` duration events: every miss of
+    the pjit cache fires ``/jax/core/compile/jaxpr_trace_duration``; every
+    actual XLA compile fires ``.../backend_compile_duration``. With the
+    persistent compilation cache warm, a retrace still fires the trace
+    event -- exactly the signal we gate (retraces cost host time and
+    indicate shape instability even when XLA's binary is cached).
+  * eager binds -- ``core.EvalTrace.process_primitive`` is patched while
+    the monitor is active; classic eager op dispatches (the ones that
+    synchronize the host) route through it. jit-backed jnp calls do not.
+
+Usage::
+
+    mon = DispatchMonitor()
+    with mon:
+        for r in range(rounds):
+            run_round(r)
+            mon.mark(f"round{r}")
+    findings = lint_dispatch(mon, "audit/steady", meta={"warmup": 2})
+
+Rules:
+
+  dispatch-steady-state-recompile  any phase after meta['warmup'] with a
+                                   jit trace or an XLA compile
+  dispatch-eager-budget            eager binds per steady phase above
+                                   meta['max_eager_per_phase'] (opt-in)
+
+The monitoring listener is registered once per process and gated by the
+active monitor (jax.monitoring has no unregister API).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Optional
+
+from repro.analysis.rules import ProgramContext, RuleSet
+
+_TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+@dataclass
+class PhaseCounters:
+    label: str
+    traces: int = 0
+    compiles: int = 0
+    eager_binds: int = 0
+
+    def to_json(self) -> dict:
+        return {"label": self.label, "traces": self.traces,
+                "compiles": self.compiles, "eager_binds": self.eager_binds}
+
+
+_ACTIVE_MONITOR: Optional["DispatchMonitor"] = None
+_LISTENER_INSTALLED = False
+
+
+def _duration_listener(event: str, duration: float, **kwargs) -> None:
+    mon = _ACTIVE_MONITOR
+    if mon is None:
+        return
+    if event == _TRACE_EVENT:
+        mon._traces += 1
+    elif event == _COMPILE_EVENT:
+        mon._compiles += 1
+
+
+def _install_listener() -> None:
+    global _LISTENER_INSTALLED
+    if _LISTENER_INSTALLED:
+        return
+    import jax
+    jax.monitoring.register_event_duration_secs_listener(_duration_listener)
+    _LISTENER_INSTALLED = True
+
+
+class DispatchMonitor:
+    """Context manager accumulating per-phase dispatch counters."""
+
+    def __init__(self):
+        self._traces = 0
+        self._compiles = 0
+        self._eager = 0
+        self._last = (0, 0, 0)
+        self.phases: List[PhaseCounters] = []
+        self._orig_process = None
+
+    def __enter__(self):
+        global _ACTIVE_MONITOR
+        if _ACTIVE_MONITOR is not None:
+            raise RuntimeError("nested DispatchMonitor")
+        _install_listener()
+        _ACTIVE_MONITOR = self
+        from jax._src import core as jcore
+        self._orig_process = jcore.EvalTrace.process_primitive
+        mon = self
+
+        def counting_process(trace_self, primitive, tracers, params):
+            mon._eager += 1
+            return mon._orig_process(trace_self, primitive, tracers,
+                                     params)
+
+        jcore.EvalTrace.process_primitive = counting_process
+        self._last = (0, 0, 0)
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE_MONITOR
+        _ACTIVE_MONITOR = None
+        from jax._src import core as jcore
+        if self._orig_process is not None:
+            jcore.EvalTrace.process_primitive = self._orig_process
+        return False
+
+    def mark(self, label: str) -> PhaseCounters:
+        """Close the current phase: counters since the previous mark."""
+        now = (self._traces, self._compiles, self._eager)
+        ph = PhaseCounters(label, traces=now[0] - self._last[0],
+                           compiles=now[1] - self._last[1],
+                           eager_binds=now[2] - self._last[2])
+        self._last = now
+        self.phases.append(ph)
+        return ph
+
+    def stats(self) -> dict:
+        return {
+            "phases": [p.to_json() for p in self.phases],
+            "total_traces": self._traces,
+            "total_compiles": self._compiles,
+            "total_eager_binds": self._eager,
+        }
+
+
+DISPATCH_RULES = RuleSet("dispatch")
+
+
+@DISPATCH_RULES.rule(
+    "dispatch-steady-state-recompile",
+    "after the first meta['warmup'] phases (default 1), no phase may jit-"
+    "trace or XLA-compile anything: steady-state rounds reuse compiled "
+    "programs bit-for-bit (shape-stable arguments, warm jit caches)")
+def _check_steady_state(ctx: ProgramContext):
+    warmup = ctx.meta.get("warmup", 1)
+    for ph in ctx.payload.phases[warmup:]:
+        if ph.traces or ph.compiles:
+            yield (f"{ph.traces} jit trace(s) + {ph.compiles} XLA "
+                   f"compile(s) in steady-state phase", ph.label)
+
+
+@DISPATCH_RULES.rule(
+    "dispatch-eager-budget",
+    "eager primitive binds per steady-state phase within "
+    "meta['max_eager_per_phase'] (each eager op is a host->device "
+    "round-trip; opt-in threshold)")
+def _check_eager_budget(ctx: ProgramContext):
+    budget = ctx.meta.get("max_eager_per_phase")
+    if budget is None:
+        return
+    warmup = ctx.meta.get("warmup", 1)
+    for ph in ctx.payload.phases[warmup:]:
+        if ph.eager_binds > budget:
+            yield (f"{ph.eager_binds} eager binds > budget {budget}",
+                   ph.label)
+
+
+def lint_dispatch(monitor: DispatchMonitor, program: str,
+                  meta: Optional[dict] = None,
+                  only: Optional[Iterable[str]] = None):
+    ctx = ProgramContext(program=program, kind="dispatch", payload=monitor,
+                         meta=dict(meta or {}))
+    return DISPATCH_RULES.run(ctx, only=only)

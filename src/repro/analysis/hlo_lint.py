@@ -1,0 +1,195 @@
+"""hlo_lint: declarative rules over parsed optimized HLO.
+
+Generalizes the one-off (d, n)-materialization tripwire that PR 4 built on
+``launch/hlo_walker`` (and that ``tests/test_hlo_guard.py`` used to
+hand-roll) into a RuleSet every program of the engine x backend x METHODS
+matrix runs through:
+
+  hlo-materialization   NO array at forbidden scale / with forbidden
+                        trailing dims -- the "dW never materialized"
+                        guarantee of the factored and kernel backends
+  hlo-collective-budget collective op count and result-buffer bytes within
+                        the per-bucket budget (the sharded engine's
+                        "ONE psum per bucket" property)
+  hlo-host-transfer     no infeed/outfeed/send/recv and no host-callback
+                        custom-calls in a compiled round program
+  hlo-dtype-upcast      no f64 arrays ever; optionally no large f32
+                        arrays in a program meant to run bf16
+
+All thresholds arrive via ``ProgramContext.meta`` (rules without their
+threshold yield nothing -- see ``analysis/rules.py``). Byte/count numbers
+come from the trip-count-aware ``hlo_walker.analyze_hlo`` -- the single
+source of truth for collective accounting (``launch/hlo_analysis.py`` and
+``launch/fl_dryrun.py`` route through it too).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.rules import (Finding, ProgramContext, RuleSet,
+                                  SEV_ERROR)
+from repro.launch.hlo_walker import (_SHAPE, Computation, HLOStats,
+                                     analyze_hlo, parse_hlo)
+
+
+@dataclass
+class HLOProgram:
+    """Parsed payload for hlo rules: computations + walker stats."""
+    text: str
+    comps: Dict[str, Computation]
+    stats: HLOStats
+
+
+def parse_program(text: str) -> HLOProgram:
+    comps = parse_hlo(text)
+    comps.pop("__entry_name__", None)
+    comps.pop("__entry__", None)
+    return HLOProgram(text=text, comps=comps, stats=analyze_hlo(text))
+
+
+def iter_result_arrays(comps: Dict[str, Computation]):
+    """(comp_name, op_name, dtype, dims) for every array in every op's
+    result type (tuple results yield one entry per element)."""
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            for m in _SHAPE.finditer(op.result_type):
+                dims = [int(x) for x in m.group(2).split(",") if x]
+                yield cname, op.name, m.group(1), dims
+
+
+def _elems(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+HLO_RULES = RuleSet("hlo")
+
+
+@HLO_RULES.rule(
+    "hlo-materialization",
+    "no array reaches the forbidden (d, n) scale: >= meta['forbid_elems'] "
+    "elements, or trailing dims equal to meta['forbid_dims'] in either "
+    "order (the dense-dW tripwire, walked through while bodies + fusions)")
+def _check_materialization(ctx: ProgramContext):
+    forbid_elems = ctx.meta.get("forbid_elems")
+    forbid_dims = ctx.meta.get("forbid_dims")
+    if forbid_elems is None and forbid_dims is None:
+        return
+    dim_set = set(forbid_dims) if forbid_dims else None
+    for cname, oname, dt, dims in iter_result_arrays(ctx.payload.comps):
+        n = _elems(dims)
+        if forbid_elems is not None and n >= forbid_elems:
+            yield (f"{dt}{dims} holds {n} >= {forbid_elems} elements",
+                   f"{cname}/{oname}")
+        elif dim_set and len(dims) >= 2 and set(dims[-2:]) == dim_set:
+            yield (f"{dt}{dims} has forbidden trailing dims "
+                   f"{tuple(sorted(dim_set))}", f"{cname}/{oname}")
+
+
+@HLO_RULES.rule(
+    "hlo-collective-budget",
+    "trip-count-weighted collective op count <= meta['max_collective_count']"
+    " and result-buffer bytes <= meta['max_collective_bytes'] (per-device "
+    "program; the sharded bucket's 'one psum' property)")
+def _check_collective_budget(ctx: ProgramContext):
+    stats: HLOStats = ctx.payload.stats
+    max_count = ctx.meta.get("max_collective_count")
+    max_bytes = ctx.meta.get("max_collective_bytes")
+    count = float(sum(stats.collective_counts.values()))
+    byts = stats.total_collective_bytes
+    kinds = {k: int(v) for k, v in stats.collective_counts.items() if v}
+    if max_count is not None and count > max_count:
+        yield (f"{count:.0f} collective ops > budget {max_count} "
+               f"({kinds})", "")
+    if max_bytes is not None and byts > max_bytes:
+        yield (f"{byts:.0f} collective bytes > budget {max_bytes:.0f} "
+               f"({kinds})", "")
+
+
+# host-transfer opcodes + the custom-call targets XLA emits for python
+# callbacks (jax.pure_callback / io_callback / debug.callback land as
+# custom-call(...) with a target containing "callback")
+_HOST_OPS = ("infeed", "outfeed", "send", "send-done", "recv", "recv-done")
+_HOST_CALL_MARKERS = ("callback", "host")
+
+
+@HLO_RULES.rule(
+    "hlo-host-transfer",
+    "no host-transfer ops (infeed/outfeed/send/recv) and no host-callback "
+    "custom-calls: a compiled round program must never synchronize with "
+    "the Python host mid-execution")
+def _check_host_transfer(ctx: ProgramContext):
+    for cname, comp in ctx.payload.comps.items():
+        for op in comp.ops:
+            if op.opcode in _HOST_OPS:
+                yield (f"host-transfer op '{op.opcode}'",
+                       f"{cname}/{op.name}")
+            elif op.opcode == "custom-call":
+                low = op.rest.lower()
+                if "custom_call_target" in low and any(
+                        m in low for m in _HOST_CALL_MARKERS):
+                    yield (f"host-callback custom-call: "
+                           f"{op.rest[:80]}", f"{cname}/{op.name}")
+
+
+@HLO_RULES.rule(
+    "hlo-dtype-upcast",
+    "no f64 arrays anywhere (meta['allow_f64'] to waive); with "
+    "meta['bf16_min_elems'] set, no f32 array of that many elements in a "
+    "program meant to run bf16 (an upcast doubles collective + HBM bytes)")
+def _check_dtype_upcast(ctx: ProgramContext):
+    allow_f64 = ctx.meta.get("allow_f64", False)
+    bf16_min = ctx.meta.get("bf16_min_elems")
+    for cname, oname, dt, dims in iter_result_arrays(ctx.payload.comps):
+        if dt == "f64" and not allow_f64:
+            yield (f"f64{dims} in a float32 codebase", f"{cname}/{oname}")
+        elif dt == "f32" and bf16_min is not None \
+                and _elems(dims) >= bf16_min:
+            yield (f"f32{dims} upcast in a bf16 program "
+                   f"(>= {bf16_min} elements)", f"{cname}/{oname}")
+
+
+def lint_hlo(text: str, program: str,
+             meta: Optional[dict] = None,
+             only: Optional[Iterable[str]] = None
+             ) -> Tuple[List[Finding], HLOProgram]:
+    """Run the HLO RuleSet over one compiled program's optimized HLO."""
+    payload = parse_program(text)
+    ctx = ProgramContext(program=program, kind="hlo", payload=payload,
+                         meta=dict(meta or {}))
+    return HLO_RULES.run(ctx, only=only), payload
+
+
+PARITY_RULE = "hlo-collective-parity"
+
+
+def collective_parity(text_a: str, text_b: str, *, label_a: str,
+                      label_b: str, program: str = "parity",
+                      rel_tol: float = 0.0) -> List[Finding]:
+    """Assert two compiled programs move IDENTICAL collective traffic --
+    the kernel == factored invariant (the fused Pallas path changes
+    per-shard compute, never the collective). One source of truth for the
+    byte accounting ``launch/fl_dryrun.py`` used to duplicate."""
+    sa, sb = analyze_hlo(text_a), analyze_hlo(text_b)
+    findings: List[Finding] = []
+    kinds = set(sa.collective_bytes) | set(sb.collective_bytes)
+    for kind in sorted(kinds):
+        ba = float(sa.collective_bytes.get(kind, 0.0))
+        bb = float(sb.collective_bytes.get(kind, 0.0))
+        tol = rel_tol * max(abs(ba), abs(bb))
+        if abs(ba - bb) > tol:
+            findings.append(Finding(
+                PARITY_RULE, SEV_ERROR, program,
+                f"{kind}: {label_a}={ba:.0f}B != {label_b}={bb:.0f}B",
+                kind))
+        ca = float(sa.collective_counts.get(kind, 0.0))
+        cb = float(sb.collective_counts.get(kind, 0.0))
+        if ca != cb:
+            findings.append(Finding(
+                PARITY_RULE, SEV_ERROR, program,
+                f"{kind}: {label_a} issues {ca:.0f} ops, {label_b} "
+                f"{cb:.0f}", kind))
+    return findings

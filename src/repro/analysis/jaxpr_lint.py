@@ -1,0 +1,149 @@
+"""jaxpr_lint: rules over traced round-path jaxprs.
+
+Where hlo_lint inspects what XLA compiled, jaxpr_lint inspects what WE
+asked for -- before XLA optimizations can mask it. The round-path entry
+points (``client.train_group_masked``'s body, ``Aggregator``'s grouped /
+stacked / sharded cores, ``svd_realloc_gram``, the event-engine fire path)
+are traced with ``jax.make_jaxpr`` on ShapeDtypeStructs (free: no arrays,
+no compile) and walked recursively through every sub-jaxpr:
+
+  jaxpr-callback    pure_callback / io_callback / debug_callback /
+                    debug_print equations -- each one is a host round-trip
+                    that serializes against in-flight device work (the
+                    regression class PR 3 fixed by hand)
+  jaxpr-host-sync   explicit host-sync primitives (device_get-style
+                    transfers that show up as equations)
+  jaxpr-f64         any float64 input / output / intermediate aval -- the
+                    codebase is float32-only and an accidental promotion
+                    doubles every byte count downstream
+
+The walker duck-types sub-jaxprs (anything with ``.eqns``, closed jaxprs
+via ``.jaxpr``) so it works across jax versions without importing
+``jax.extend``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator, List, Optional, Tuple
+
+import jax
+
+from repro.analysis.rules import Finding, ProgramContext, RuleSet
+
+CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
+                  "debug_print")
+HOST_SYNC_PRIMS = ("infeed", "outfeed", "device_put")  # device_put with a
+# host target inside a traced program is a transfer; plain device_put of
+# constants at trace time does not appear as an equation.
+
+
+def _as_jaxpr(obj):
+    """ClosedJaxpr -> Jaxpr; Jaxpr -> itself; else None (duck-typed)."""
+    inner = getattr(obj, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        return inner
+    if hasattr(obj, "eqns"):
+        return obj
+    return None
+
+
+def iter_eqns(jaxpr_like, path: str = "") -> Iterator[Tuple[str, object]]:
+    """Depth-first (path, eqn) over a jaxpr and every sub-jaxpr found in
+    equation params (scan/while/cond bodies, pjit callees, custom vjps)."""
+    jaxpr = _as_jaxpr(jaxpr_like)
+    if jaxpr is None:
+        return
+    for eqn in jaxpr.eqns:
+        name = getattr(eqn.primitive, "name", str(eqn.primitive))
+        here = f"{path}/{name}" if path else name
+        yield here, eqn
+        for pval in eqn.params.values():
+            vals = pval if isinstance(pval, (list, tuple)) else (pval,)
+            for v in vals:
+                if _as_jaxpr(v) is not None:
+                    yield from iter_eqns(v, here)
+
+
+def _avals(jaxpr_like):
+    jaxpr = _as_jaxpr(jaxpr_like)
+    if jaxpr is None:
+        return
+    for kind, vs in (("invar", jaxpr.invars), ("outvar", jaxpr.outvars),
+                     ("constvar", jaxpr.constvars)):
+        for v in vs:
+            aval = getattr(v, "aval", None)
+            if aval is not None:
+                yield kind, aval
+
+
+JAXPR_RULES = RuleSet("jaxpr")
+
+
+@JAXPR_RULES.rule(
+    "jaxpr-callback",
+    "no pure_callback / io_callback / debug_callback / debug_print "
+    "equations anywhere in the traced round path (each is a host "
+    "round-trip serializing against in-flight device work); "
+    "meta['allow_callbacks'] to waive")
+def _check_callbacks(ctx: ProgramContext):
+    if ctx.meta.get("allow_callbacks"):
+        return
+    for path, eqn in iter_eqns(ctx.payload):
+        name = getattr(eqn.primitive, "name", "")
+        if name in CALLBACK_PRIMS:
+            cb = eqn.params.get("callback", None)
+            detail = f" ({cb})" if cb is not None else ""
+            yield f"host callback '{name}'{detail}", path
+
+
+@JAXPR_RULES.rule(
+    "jaxpr-host-sync",
+    "no explicit host-sync primitives (infeed/outfeed/device transfers "
+    "appearing as traced equations)")
+def _check_host_sync(ctx: ProgramContext):
+    for path, eqn in iter_eqns(ctx.payload):
+        name = getattr(eqn.primitive, "name", "")
+        if name in HOST_SYNC_PRIMS:
+            yield f"host-sync primitive '{name}'", path
+
+
+@JAXPR_RULES.rule(
+    "jaxpr-f64",
+    "no float64 aval on any input / output / equation result: the round "
+    "path is float32-only and a silent x64 promotion doubles every "
+    "downstream byte count; meta['allow_f64'] to waive")
+def _check_f64(ctx: ProgramContext):
+    if ctx.meta.get("allow_f64"):
+        return
+    import numpy as np
+    for kind, aval in _avals(ctx.payload):
+        if getattr(aval, "dtype", None) == np.float64:
+            yield f"float64 {kind} {aval}", kind
+    for path, eqn in iter_eqns(ctx.payload):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and getattr(aval, "dtype", None) \
+                    == np.float64:
+                yield f"float64 intermediate {aval}", path
+
+
+def trace(fn, *args, **kwargs):
+    """``jax.make_jaxpr`` over ShapeDtypeStruct (or concrete) arguments --
+    the standard way to obtain a lintable payload for an entry point."""
+    return jax.make_jaxpr(fn)(*args, **kwargs)
+
+
+def lint_jaxpr(jaxpr_like, program: str, meta: Optional[dict] = None,
+               only: Optional[Iterable[str]] = None) -> List[Finding]:
+    ctx = ProgramContext(program=program, kind="jaxpr", payload=jaxpr_like,
+                         meta=dict(meta or {}))
+    return JAXPR_RULES.run(ctx, only=only)
+
+
+def jaxpr_stats(jaxpr_like) -> dict:
+    """Cheap size stats for the audit artifact."""
+    n_eqns = 0
+    prims = set()
+    for _, eqn in iter_eqns(jaxpr_like):
+        n_eqns += 1
+        prims.add(getattr(eqn.primitive, "name", "?"))
+    return {"eqns": n_eqns, "distinct_primitives": len(prims)}

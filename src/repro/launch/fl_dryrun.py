@@ -48,10 +48,27 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.hlo_lint import collective_parity
 from repro.core.aggregation import sharded_grouped_fn
 from repro.launch.hlo_analysis import analyze_compiled
 from repro.launch.mesh import make_production_mesh
 from repro.sharding.specs import batch_axes, client_spec
+
+
+def check_kernel_parity(texts: dict, tag: str) -> int:
+    """kernel == factored collective parity via the analysis rule (one
+    source of truth: ``analysis/hlo_lint.collective_parity``). The fused
+    Pallas path changes per-shard compute, never the collective -- any
+    divergence is a lowering regression. Returns the number of findings."""
+    findings = collective_parity(
+        texts["factored"], texts["kernel"], label_a="factored",
+        label_b="kernel", program=f"fl_dryrun/{tag}")
+    for f in findings:
+        print(f"[PARITY FAIL] {f}")
+    if not findings:
+        print(f"[OK] fl-parity {tag}: kernel == factored collective "
+              "bytes/counts")
+    return len(findings)
 
 
 def lower_aggregation(*, d: int, n: int, clients: int, r_max: int,
@@ -133,12 +150,15 @@ def main(argv=None) -> int:
               + "/".join(f"p{pct}={m}" for pct, m in cohorts)
               + f" (raw {int(np.percentile(counts, 50))}/"
               f"{int(np.percentile(counts, 95))}, padded to x{data_mult})")
+        parity_findings = 0
         for pct, merged in cohorts:
             tag = f"d{args.d}xn{args.n}xM{merged}p{pct}{args.trigger}"
+            texts = {}
             for backend in ("dense", "factored", "kernel"):
                 lowered, compiled, mesh = lower_aggregation(
                     d=args.d, n=args.n, clients=merged, r_max=args.r_max,
                     multi_pod=args.multi_pod, backend=backend)
+                texts[backend] = compiled.as_text()
                 rep = analyze_compiled(
                     lowered, compiled, arch=f"fl-agg-evt-{backend}",
                     shape=tag,
@@ -149,7 +169,8 @@ def main(argv=None) -> int:
                       f"tx={rep.t_collective*1e6:9.2f}us "
                       f"coll={rep.coll_bytes/1e6:8.1f}MB "
                       f"flops={rep.hlo_flops/1e9:9.2f}GF")
-        return 0
+            parity_findings += check_kernel_parity(texts, tag)
+        return 1 if parity_findings else 0
 
     merged_clients = args.clients * args.pipeline_depth
     tag = (f"d{args.d}xn{args.n}xM{args.clients}"
@@ -162,10 +183,12 @@ def main(argv=None) -> int:
     # kernel row's tc/tm columns are emulation artifacts; the tx/coll
     # columns are the real datum -- identical to factored's, showing the
     # fused path changes per-shard compute, not the collective.
+    texts = {}
     for backend in ("dense", "factored", "kernel"):
         lowered, compiled, mesh = lower_aggregation(
             d=args.d, n=args.n, clients=merged_clients, r_max=args.r_max,
             multi_pod=args.multi_pod, backend=backend)
+        texts[backend] = compiled.as_text()
         rep = analyze_compiled(
             lowered, compiled, arch=f"fl-agg-{backend}", shape=tag,
             mesh_name="2x16x16" if args.multi_pod else "16x16", chips=chips)
@@ -173,7 +196,7 @@ def main(argv=None) -> int:
               f"tc={rep.t_compute*1e6:9.2f}us tm={rep.t_memory*1e6:9.2f}us "
               f"tx={rep.t_collective*1e6:9.2f}us "
               f"coll={rep.coll_bytes/1e6:8.1f}MB flops={rep.hlo_flops/1e9:9.2f}GF")
-    return 0
+    return 1 if check_kernel_parity(texts, tag) else 0
 
 
 if __name__ == "__main__":

@@ -5,75 +5,24 @@
   collective term = collective_bytes / (chips * link_bw)
 
 FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
-reported there, so we parse the optimized HLO text and sum the result-buffer
-sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
-collective-permute (ring algorithms move ~(n-1)/n of that on the wire; we
-report the buffer total and note the approximation).
+reported there, so ``hlo_walker.analyze_hlo`` (the single source of truth
+for HLO shape/collective accounting -- also behind ``analysis/hlo_lint``)
+parses the optimized HLO text and sums the result-buffer sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(ring algorithms move ~(n-1)/n of that on the wire; we report the buffer
+total and note the approximation).
 
 Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
 ICI (per the assignment).
 """
 from __future__ import annotations
 
-import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
-}
-
-COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                  "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(shape_str: str) -> int:
-    """Total bytes of every typed array in an HLO result type string."""
-    total = 0
-    for m in _SHAPE_RE.finditer(shape_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum result-buffer bytes per collective op kind from HLO text."""
-    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
-    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
-    for line in hlo_text.splitlines():
-        stripped = line.strip()
-        # result type is everything between '=' and the op name
-        for op in COLLECTIVE_OPS:
-            # match "op(" or "op-start(" or "op-done(" (async pairs); count
-            # only starts to avoid double counting
-            token = f" {op}("
-            token_start = f" {op}-start("
-            if token in stripped or token_start in stripped:
-                eq = stripped.find("=")
-                opn = stripped.find(op, eq)
-                if eq < 0 or opn < 0:
-                    continue
-                result_type = stripped[eq + 1:opn]
-                out[op] += _shape_bytes(result_type)
-                counts[op] += 1
-                break
-    out["_counts"] = counts
-    return out
 
 
 @dataclass

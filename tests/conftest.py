@@ -23,14 +23,9 @@ if _CACHE_DIR:
     jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
 
 
-def pytest_configure(config):
-    # the slow tier: multi-round federated integration runs and the
-    # event-driven scenario matrix. tier-1 (plain pytest) runs EVERYTHING;
-    # ``tools/ci.sh smoke`` deselects with ``-m "not slow"``.
-    config.addinivalue_line(
-        "markers",
-        "slow: multi-round integration / scenario-matrix tests "
-        "(deselected by tools/ci.sh smoke)")
+# markers (incl. the ``slow`` tier deselected by ``tools/ci.sh smoke``)
+# are registered in pytest.ini under --strict-markers; a typo'd marker is
+# a collection error, not a silently-ignored tag.
 
 
 @pytest.fixture(scope="session")

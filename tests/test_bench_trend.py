@@ -1,0 +1,106 @@
+"""Gate logic of ``tools/bench_trend.py`` (ISSUE 6 satellite): event-mode
+rows are now gated on ``virtual_time_to_target_energy`` at the same wide
+catastrophic-only bar as the absolute ``engine/batched`` reference row,
+with ``null`` meaning the target energy was never reached (= infinity).
+The tool is not a package; load it by file path."""
+import importlib.util
+import os
+
+import pytest
+
+_TOOL = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools", "bench_trend.py")
+_spec = importlib.util.spec_from_file_location("bench_trend", _TOOL)
+bench_trend = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_trend)
+
+
+def _artifact(batched_s=1.0, event_rows=None):
+    art = {"median_s": {"batched": batched_s, "sequential": batched_s * 2},
+           "per_round_s": {}}
+    if event_rows is not None:
+        art["event"] = {"rows": event_rows}
+    return art
+
+
+def _event_row(trigger="count", frac=0.25, vt=10.0, aggs=40):
+    return {"trigger": trigger, "straggler_frac": frac,
+            "virtual_time_to_target_energy": vt, "aggregations": aggs,
+            "final_higher_rank_energy": 0.9}
+
+
+def _compare(baseline, fresh, **kw):
+    kw.setdefault("threshold", 1.25)
+    kw.setdefault("absolute", False)
+    kw.setdefault("ref_threshold", 3.0)
+    return bench_trend.compare(baseline, fresh, **kw)
+
+
+class TestEventRowGate:
+    def test_unchanged_event_rows_pass(self):
+        b = _artifact(event_rows=[_event_row()])
+        f = _artifact(event_rows=[_event_row()])
+        assert _compare(b, f) == 0
+
+    def test_mild_drift_stays_under_wide_bar(self):
+        b = _artifact(event_rows=[_event_row(vt=10.0)])
+        f = _artifact(event_rows=[_event_row(vt=25.0)])   # 2.5x < 3.0x
+        assert _compare(b, f) == 0
+
+    def test_catastrophic_slowdown_fails(self):
+        b = _artifact(event_rows=[_event_row(vt=10.0)])
+        f = _artifact(event_rows=[_event_row(vt=40.0)])   # 4x > 3.0x
+        assert _compare(b, f) == 1
+
+    def test_fresh_null_against_finite_baseline_fails(self):
+        """None = never reached target energy = infinite virtual time."""
+        b = _artifact(event_rows=[_event_row(vt=10.0)])
+        f = _artifact(event_rows=[_event_row(vt=None)])
+        assert _compare(b, f) == 1
+
+    def test_both_null_passes(self):
+        b = _artifact(event_rows=[_event_row(vt=None)])
+        f = _artifact(event_rows=[_event_row(vt=None)])
+        assert _compare(b, f) == 0
+
+    def test_fresh_finite_against_null_baseline_is_improvement(self):
+        b = _artifact(event_rows=[_event_row(vt=None)])
+        f = _artifact(event_rows=[_event_row(vt=12.0)])
+        assert _compare(b, f) == 0
+
+    def test_new_key_is_not_gated(self):
+        b = _artifact(event_rows=[_event_row(trigger="count")])
+        f = _artifact(event_rows=[_event_row(trigger="count"),
+                                  _event_row(trigger="timeout", vt=99.0)])
+        assert _compare(b, f) == 0
+
+    def test_rows_are_append_only_latest_wins(self):
+        """An old bad row followed by a fresh good one must gate on the
+        LATEST entry per (trigger, straggler_frac) key."""
+        b = _artifact(event_rows=[_event_row(vt=10.0)])
+        f = _artifact(event_rows=[_event_row(vt=99.0),
+                                  _event_row(vt=10.0)])
+        assert _compare(b, f) == 0
+
+    def test_keys_are_per_trigger_and_fraction(self):
+        b = _artifact(event_rows=[_event_row(trigger="count", vt=10.0),
+                                  _event_row(trigger="timeout", vt=10.0)])
+        f = _artifact(event_rows=[_event_row(trigger="count", vt=10.0),
+                                  _event_row(trigger="timeout", vt=50.0)])
+        assert _compare(b, f) == 1
+
+
+class TestExistingGateStillWorks:
+    def test_clean_run_passes(self):
+        assert _compare(_artifact(), _artifact()) == 0
+
+    def test_reference_row_catastrophic_regression_fails(self):
+        assert _compare(_artifact(batched_s=1.0),
+                        _artifact(batched_s=4.0)) == 1
+
+    @pytest.mark.parametrize("ratio,expect", [(1.1, 0), (2.0, 1)])
+    def test_normalized_row_threshold(self, ratio, expect):
+        b = _artifact()
+        f = _artifact()
+        f["median_s"]["sequential"] = b["median_s"]["sequential"] * ratio
+        assert _compare(b, f) == expect

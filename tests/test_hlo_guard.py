@@ -1,20 +1,24 @@
 """Peak-memory regression tripwire for the fused kernel backend (ISSUE 4
-satellite): ``backend="kernel"`` must NEVER materialize a (d, n)-shaped
-intermediate -- that is the whole point of the fused factored path
-(DESIGN.md §4.3). The jitted bucket pipeline is lowered to optimized HLO
-and walked with ``launch/hlo_walker.parse_hlo``; at shapes where
-(d+n) R << d n, ANY array of d*n elements (or with trailing (d, n) /
-(n, d) dims) means the dense update crept back in. The dense backend is
-lowered too, as a positive control that the guard actually detects dW.
+satellite, now on the ISSUE 6 rule engine): ``backend="kernel"`` must
+NEVER materialize a (d, n)-shaped intermediate -- that is the whole point
+of the fused factored path (DESIGN.md §4.3). The jitted bucket pipeline is
+lowered to optimized HLO and run through ``analysis/hlo_lint``'s
+``hlo-materialization`` rule (the declarative generalization of the old
+hand-rolled walker loop); at shapes where (d+n) R << d n, ANY array of
+d*n elements (or with trailing (d, n) / (n, d) dims) means the dense
+update crept back in. The dense backend is lowered too, as a positive
+control that the rule actually detects dW.
 """
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis.hlo_lint import lint_hlo
 from repro.core import aggregation
-from repro.launch.hlo_walker import _SHAPE, parse_hlo
 
 D, N, M, R_MAX = 192, 320, 3, 16
+
+_META = {"forbid_elems": D * N, "forbid_dims": (D, N)}
 
 
 def _compiled_text(backend: str, with_fallback: bool = True) -> str:
@@ -33,40 +37,27 @@ def _compiled_text(backend: str, with_fallback: bool = True) -> str:
     return lowered.compile().as_text()
 
 
-def _offending_arrays(text: str):
-    """All (computation, op, dims) whose result holds >= d*n elements or
-    ends in (d, n)/(n, d) -- walked through the parsed call graph so every
-    computation (while bodies, fusions) is inspected, not just the entry."""
-    bad = []
-    comps = parse_hlo(text)
-    comps.pop("__entry_name__", None)
-    comps.pop("__entry__", None)
-    for comp in comps.values():
-        for op in comp.ops:
-            for m in _SHAPE.finditer(op.result_type):
-                dims = [int(x) for x in m.group(2).split(",") if x]
-                elems = 1
-                for x in dims:
-                    elems *= x
-                if elems >= D * N or (len(dims) >= 2
-                                      and set(dims[-2:]) == {D, N}):
-                    bad.append((comp.name, op.name, dims))
-    return bad
+def _offending(text: str):
+    """Materialization findings -- every computation (while bodies,
+    fusions) is inspected through the parsed call graph, not just entry."""
+    findings, _ = lint_hlo(text, "test_hlo_guard", _META,
+                           only=("hlo-materialization",))
+    return findings
 
 
 class TestKernelPathNeverMaterializesDW:
     def test_guard_detects_dense_dw(self):
         """Positive control: the dense backend DOES materialize (d, n),
         so the tripwire itself is known-live."""
-        assert _offending_arrays(_compiled_text("dense"))
+        assert _offending(_compiled_text("dense"))
 
     @pytest.mark.parametrize("with_fallback", [False, True])
     def test_kernel_path_is_dw_free(self, with_fallback):
         """(d+n)R << dn here ((192+320)*64 vs 192*320): the fused path's
         largest legal intermediates are the (d, R)/(R, n) stacks."""
-        bad = _offending_arrays(_compiled_text("kernel", with_fallback))
+        bad = _offending(_compiled_text("kernel", with_fallback))
         assert not bad, f"(d, n)-scale intermediates on the kernel path: " \
-                        f"{bad[:5]}"
+                        f"{[str(f) for f in bad[:5]]}"
 
     def test_kernel_bucket_path_is_dw_free(self):
         """The layered (whole-bucket) kernel route stays dW-free too:
@@ -80,6 +71,6 @@ class TestKernelPathNeverMaterializesDW:
         lowered = aggregation._stacked_core.lower(
             bs, as_, om, gb, ga, fb, r_max=R_MAX, backend="kernel",
             method="raflora")
-        bad = _offending_arrays(lowered.compile().as_text())
+        bad = _offending(lowered.compile().as_text())
         assert not bad, f"(d, n)-scale intermediates in the bucket path: " \
-                        f"{bad[:5]}"
+                        f"{[str(f) for f in bad[:5]]}"

@@ -1,0 +1,157 @@
+"""Parser edge cases for ``launch/hlo_walker`` (ISSUE 6 satellite) on
+hand-written HLO: tuple-shaped results, nested fusions (virtual for the
+HBM proxy), ``while`` with and without ``known_trip_count``, and the dot
+operand formats of both old XLA (bare operand names, resolved through the
+computation symbol table) and new XLA (types printed inline).
+
+``tests/test_substrates.py::TestHLOWalker`` covers the happy path on real
+compiled programs; these fixtures pin the textual corner cases so an XLA
+pretty-printer change breaks a unit test here, not an analysis downstream.
+"""
+from repro.launch.hlo_walker import _bytes_of, analyze_hlo, parse_hlo
+
+_WHILE_TRIPPED = """\
+HloModule m
+
+%body (p: (f32[4,8], f32[8,4], f32[4,4])) -> (f32[4,8], f32[8,4], f32[4,4]) {
+  %p = (f32[4,8]{1,0}, f32[8,4]{1,0}, f32[4,4]{1,0}) parameter(0)
+  %a = f32[4,8]{1,0} get-tuple-element((f32[4,8]{1,0}, f32[8,4]{1,0}, f32[4,4]{1,0}) %p), index=0
+  %b = f32[8,4]{1,0} get-tuple-element((f32[4,8]{1,0}, f32[8,4]{1,0}, f32[4,4]{1,0}) %p), index=1
+  %d = f32[4,4]{1,0} dot(f32[4,8]{1,0} %a, f32[8,4]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (f32[4,8]{1,0}, f32[8,4]{1,0}, f32[4,4]{1,0}) tuple(%a, %b, %d)
+}
+
+%cond (p: (f32[4,8], f32[8,4], f32[4,4])) -> pred[] {
+  %p = (f32[4,8]{1,0}, f32[8,4]{1,0}, f32[4,4]{1,0}) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main (x: f32[4,8], y: f32[8,4]) -> (f32[4,8], f32[8,4], f32[4,4]) {
+  %x = f32[4,8]{1,0} parameter(0)
+  %y = f32[8,4]{1,0} parameter(1)
+  %z = f32[4,4]{1,0} constant(0)
+  %init = (f32[4,8]{1,0}, f32[8,4]{1,0}, f32[4,4]{1,0}) tuple(%x, %y, %z)
+  ROOT %w = (f32[4,8]{1,0}, f32[8,4]{1,0}, f32[4,4]{1,0}) while((f32[4,8]{1,0}, f32[8,4]{1,0}, f32[4,4]{1,0}) %init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+
+_DOT_FLOPS = 2.0 * (4 * 4) * 8   # 2 * result_elems * contracted k
+
+
+class TestWhileTripCounts:
+    def test_known_trip_count_multiplies_body(self):
+        stats = analyze_hlo(_WHILE_TRIPPED)
+        assert stats.while_trips == {"w": 10}
+        assert stats.dot_flops == 10 * _DOT_FLOPS
+
+    def test_missing_trip_count_defaults_to_one(self):
+        text = _WHILE_TRIPPED.replace(
+            ', backend_config={"known_trip_count":{"n":"10"}}', "")
+        stats = analyze_hlo(text)
+        assert stats.while_trips == {}
+        assert stats.dot_flops == _DOT_FLOPS
+
+    def test_parse_records_body_and_condition_calls(self):
+        comps = parse_hlo(_WHILE_TRIPPED)
+        assert comps["__entry_name__"] == "main"
+        kinds = {(callee, trip) for callee, kind, trip
+                 in comps["main"].calls if kind == "while"}
+        assert kinds == {("cond", 10), ("body", 10)}
+
+
+_TUPLE_COLLECTIVE = """\
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (x: f32[4], y: bf16[8]) -> (f32[4], bf16[8]) {
+  %x = f32[4]{0} parameter(0)
+  %y = bf16[8]{0} parameter(1)
+  ROOT %ar = (f32[4]{0}, bf16[8]{0}) all-reduce(f32[4]{0} %x, bf16[8]{0} %y), replica_groups={}, to_apply=%add
+}
+"""
+
+
+class TestTupleResults:
+    def test_bytes_of_tuple_type(self):
+        assert _bytes_of("(f32[4]{0}, bf16[8]{0})") == 16 + 16
+
+    def test_tuple_all_reduce_counts_once_sums_all_arrays(self):
+        stats = analyze_hlo(_TUPLE_COLLECTIVE)
+        assert stats.collective_counts == {"all-reduce": 1}
+        assert stats.collective_bytes == {"all-reduce": 32.0}
+        # the f32 share feeds the TPU-corrected estimate (bf16 emulation)
+        assert stats.collective_bytes_f32 == 16.0
+        assert stats.collective_bytes_tpu == 32.0 - 8.0
+
+
+_NESTED_FUSION = """\
+HloModule m
+
+%fused_inner (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  %c = f32[16,16]{1,0} copy(f32[16,16]{1,0} %p)
+  ROOT %d = f32[16,16]{1,0} dot(f32[16,16]{1,0} %c, f32[16,16]{1,0} %p), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%fused_outer (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  ROOT %inner = f32[16,16]{1,0} fusion(f32[16,16]{1,0} %p), kind=kLoop, calls=%fused_inner
+}
+
+ENTRY %main (x: f32[16,16]) -> f32[16,16] {
+  %x = f32[16,16]{1,0} parameter(0)
+  ROOT %f = f32[16,16]{1,0} fusion(f32[16,16]{1,0} %x), kind=kLoop, calls=%fused_outer
+}
+"""
+
+
+class TestNestedFusions:
+    def test_fusion_internals_are_virtual_for_hbm(self):
+        """Ops inside (nested) fused computations move no HBM of their
+        own -- only the dot contributes, through the fusion chain."""
+        stats = analyze_hlo(_NESTED_FUSION)
+        assert stats.dot_flops == 2.0 * (16 * 16) * 16
+        # the copy inside %fused_inner must NOT be charged 2x result bytes;
+        # dot HBM = lhs + rhs + out = 3 * 16*16*4
+        assert stats.hbm_bytes == 3 * 16 * 16 * 4
+
+    def test_nested_reachability(self):
+        comps = parse_hlo(_NESTED_FUSION)
+        assert ("fused_outer", "fusion", 1) in comps["main"].calls
+        assert ("fused_inner", "fusion", 1) in comps["fused_outer"].calls
+
+
+_DOT_OLD_FORMAT = """\
+HloModule m
+
+ENTRY %main (a: f32[6,32], b: f32[32,10]) -> f32[6,10] {
+  %a = f32[6,32]{1,0} parameter(0)
+  %b = f32[32,10]{1,0} parameter(1)
+  ROOT %d = f32[6,10]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+_DOT_NEW_FORMAT = """\
+HloModule m
+
+ENTRY %main (a: f32[6,32], b: f32[32,10]) -> f32[6,10] {
+  %a = f32[6,32]{1,0} parameter(0)
+  %b = f32[32,10]{1,0} parameter(1)
+  ROOT %d = f32[6,10]{1,0} dot(f32[6,32]{1,0} %a, f32[32,10]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+class TestDotOperandFormats:
+    def test_old_format_resolves_lhs_via_symbol_table(self):
+        stats = analyze_hlo(_DOT_OLD_FORMAT)
+        assert stats.dot_flops == 2.0 * (6 * 10) * 32
+
+    def test_new_format_reads_inline_operand_type(self):
+        stats = analyze_hlo(_DOT_NEW_FORMAT)
+        assert stats.dot_flops == 2.0 * (6 * 10) * 32

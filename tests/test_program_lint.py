@@ -1,0 +1,278 @@
+"""Unit tests for the program-audit subsystem (ISSUE 6 tentpole):
+rule-engine core, the four passes (hlo / jaxpr / pallas / dispatch), and
+one slow end-to-end federated dispatch audit. Every rule is exercised in
+both directions -- a clean program stays clean AND a deliberately broken
+positive control trips -- because a tripwire that cannot fire is
+indistinguishable from a passing audit.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import dispatch_audit, hlo_lint, jaxpr_lint, pallas_lint
+from repro.analysis.report import AuditReport, ProgramAudit
+from repro.analysis.rules import (Finding, ProgramContext, RuleSet,
+                                  SEV_ERROR, SEV_WARNING)
+
+
+class TestRuleEngine:
+    def _ruleset(self):
+        rs = RuleSet("demo")
+
+        @rs.rule("demo-threshold", "payload above meta['limit']")
+        def _check(ctx):
+            limit = ctx.meta.get("limit")
+            if limit is None:
+                return
+            if ctx.payload > limit:
+                yield f"{ctx.payload} > {limit}", "payload"
+
+        @rs.rule("demo-warn", "always warns", severity=SEV_WARNING)
+        def _warn(ctx):
+            yield "heads up"
+
+        return rs
+
+    def test_rules_yield_findings_with_severity(self):
+        rs = self._ruleset()
+        ctx = ProgramContext("p", "demo", payload=5, meta={"limit": 3})
+        fs = rs.run(ctx)
+        by_rule = {f.rule: f for f in fs}
+        assert by_rule["demo-threshold"].severity == SEV_ERROR
+        assert by_rule["demo-threshold"].location == "payload"
+        assert by_rule["demo-warn"].severity == SEV_WARNING
+
+    def test_unconfigured_rule_yields_nothing(self):
+        """Thresholds are opt-in by meta: no meta['limit'] -> no finding,
+        never a crash (rules are sweep-wide, programs configure them)."""
+        rs = self._ruleset()
+        fs = rs.run(ProgramContext("p", "demo", payload=10 ** 9, meta={}))
+        assert [f.rule for f in fs] == ["demo-warn"]
+
+    def test_only_filter(self):
+        rs = self._ruleset()
+        ctx = ProgramContext("p", "demo", payload=5, meta={"limit": 3})
+        fs = rs.run(ctx, only=("demo-threshold",))
+        assert [f.rule for f in fs] == ["demo-threshold"]
+
+    def test_report_roundtrip_and_control_semantics(self):
+        rep = AuditReport(matrix={"demo": True})
+        err = Finding("demo-threshold", SEV_ERROR, "p1", "boom")
+        rep.add(ProgramAudit("p1", "demo", [err], {}))
+        rep.add(ProgramAudit("p0", "demo", [], {"n": 1}))
+        rep.add_control("live", "demo-threshold", [err])
+        rep.add_control("dead", "demo-threshold", [])
+        js = rep.to_json()
+        assert [p["program"] for p in js["programs"]] == ["p0", "p1"]
+        assert js["controls"]["live"]["tripped"] is True
+        assert js["controls"]["dead"]["tripped"] is False
+        assert rep.failed_controls == ["dead"]
+        assert not rep.ok                       # p1 errored + dead control
+        json.dumps(js)                           # artifact-serializable
+
+
+_HOSTY_HLO = """\
+HloModule m
+
+ENTRY %main (x: f32[8]) -> f32[8] {
+  %x = f32[8]{0} parameter(0)
+  %tok = token[] after-all()
+  %o = token[] outfeed(f32[8]{0} %x, token[] %tok)
+  %cc = f32[8]{0} custom-call(f32[8]{0} %x), custom_call_target="xla_ffi_python_cpu_callback"
+  ROOT %y = f32[8]{0} add(f32[8]{0} %x, f32[8]{0} %cc)
+}
+"""
+
+_F64_HLO = """\
+HloModule m
+
+ENTRY %main (x: f64[4]) -> f64[4] {
+  %x = f64[4]{0} parameter(0)
+  ROOT %y = f64[4]{0} add(f64[4]{0} %x, f64[4]{0} %x)
+}
+"""
+
+
+class TestHLORules:
+    def test_host_transfer_rule(self):
+        findings, _ = hlo_lint.lint_hlo(_HOSTY_HLO, "hosty")
+        rules = sorted({f.rule for f in findings})
+        assert rules == ["hlo-host-transfer"]
+        assert len(findings) == 2               # outfeed + callback call
+
+    def test_f64_rule_and_waiver(self):
+        findings, _ = hlo_lint.lint_hlo(_F64_HLO, "f64")
+        assert {f.rule for f in findings} == {"hlo-dtype-upcast"}
+        waived, _ = hlo_lint.lint_hlo(_F64_HLO, "f64",
+                                      {"allow_f64": True})
+        assert waived == []
+
+    def test_materialization_via_compiled_program(self):
+        """The real dense-vs-kernel check lives in test_hlo_guard.py; here
+        just the rule mechanics on a tiny compiled matmul."""
+        text = jax.jit(lambda a, b: a @ b).lower(
+            jax.ShapeDtypeStruct((32, 16), jnp.float32),
+            jax.ShapeDtypeStruct((16, 24), jnp.float32)).compile().as_text()
+        meta = {"forbid_elems": 32 * 24, "forbid_dims": (32, 24)}
+        findings, payload = hlo_lint.lint_hlo(text, "mm", meta)
+        assert any(f.rule == "hlo-materialization" for f in findings)
+        clean, _ = hlo_lint.lint_hlo(text, "mm",
+                                     {"forbid_elems": 10 ** 9})
+        assert clean == []
+        assert payload.stats.total_collective_bytes == 0
+
+    def test_collective_budget_and_parity(self):
+        text = _TUPLE = """\
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (x: f32[16]) -> f32[16] {
+  %x = f32[16]{0} parameter(0)
+  ROOT %ar = f32[16]{0} all-reduce(f32[16]{0} %x), replica_groups={}, to_apply=%add
+}
+"""
+        findings, _ = hlo_lint.lint_hlo(
+            text, "coll", {"max_collective_count": 0,
+                           "max_collective_bytes": 0})
+        assert sorted(f.rule for f in findings) == [
+            "hlo-collective-budget", "hlo-collective-budget"]
+        ok, _ = hlo_lint.lint_hlo(text, "coll",
+                                  {"max_collective_count": 1,
+                                   "max_collective_bytes": 64})
+        assert ok == []
+        assert hlo_lint.collective_parity(text, text, label_a="a",
+                                          label_b="b") == []
+        doubled = text.replace("f32[16]", "f32[32]")
+        diff = hlo_lint.collective_parity(text, doubled, label_a="a",
+                                          label_b="b")
+        assert {f.rule for f in diff} == {hlo_lint.PARITY_RULE}
+
+
+class TestJaxprRules:
+    def test_clean_program(self):
+        jx = jaxpr_lint.trace(lambda x: jnp.tanh(x) @ x,
+                              jax.ShapeDtypeStruct((4, 4), jnp.float32))
+        assert jaxpr_lint.lint_jaxpr(jx, "clean") == []
+        stats = jaxpr_lint.jaxpr_stats(jx)
+        assert stats["eqns"] >= 2
+
+    def test_callback_trips_even_inside_scan(self):
+        def poisoned(x):
+            def body(c, _):
+                jax.debug.callback(lambda v: None, c)
+                return c * 2.0, None
+            out, _ = jax.lax.scan(body, x, None, length=3)
+            return out
+
+        jx = jaxpr_lint.trace(poisoned, jnp.float32(1.0))
+        fs = jaxpr_lint.lint_jaxpr(jx, "poisoned")
+        assert any(f.rule == "jaxpr-callback" for f in fs)
+        assert jaxpr_lint.lint_jaxpr(jx, "waived",
+                                     {"allow_callbacks": True}) == []
+
+    def test_f64_promotion_trips(self):
+        jax.config.update("jax_enable_x64", True)
+        try:
+            jx = jaxpr_lint.trace(
+                lambda x: x.astype(jnp.float64).sum(),
+                jax.ShapeDtypeStruct((4,), jnp.float32))
+        finally:
+            jax.config.update("jax_enable_x64", False)
+        fs = jaxpr_lint.lint_jaxpr(jx, "f64")
+        assert any(f.rule == "jaxpr-f64" for f in fs)
+
+
+class TestPallasRules:
+    def test_registry_is_clean(self):
+        progs = pallas_lint.collect_registry()
+        assert progs.records, "registry captured no pallas_call launches"
+        assert all(p.ok for p in progs.probes), [
+            p.detail for p in progs.probes if not p.ok]
+        assert pallas_lint.lint_kernels(progs, "registry") == []
+
+    def test_vmem_estimates_under_budget(self):
+        progs = pallas_lint.collect_registry()
+        for rec in progs.records:
+            assert 0 < pallas_lint.estimate_vmem(rec) \
+                <= pallas_lint.VMEM_BUDGET_BYTES
+
+    def test_oversized_control_trips_grid_and_vmem(self):
+        fs = pallas_lint.lint_kernels(pallas_lint.oversized_control(),
+                                      "oversized")
+        rules = {f.rule for f in fs}
+        assert "pallas-grid-blockspec" in rules
+        assert "pallas-vmem-budget" in rules
+
+
+class TestDispatchRules:
+    def test_steady_state_clean(self):
+        f = jax.jit(lambda x: (x * 2.0).sum())
+        mon = dispatch_audit.DispatchMonitor()
+        with mon:
+            for r in range(4):
+                np.asarray(f(jnp.ones((8,))))
+                mon.mark(f"round{r}")
+        assert dispatch_audit.lint_dispatch(mon, "steady",
+                                            {"warmup": 1}) == []
+
+    def test_shape_varying_rounds_trip(self):
+        f = jax.jit(lambda x: (x * 2.0).sum())
+        mon = dispatch_audit.DispatchMonitor()
+        with mon:
+            for r in range(4):
+                np.asarray(f(jnp.ones((8 + r,))))
+                mon.mark(f"round{r}")
+        fs = dispatch_audit.lint_dispatch(mon, "vary", {"warmup": 1})
+        assert {f.rule for f in fs} == {"dispatch-steady-state-recompile"}
+        assert len(fs) == 3                      # rounds 1-3 all retrace
+
+    def test_eager_budget_rule(self):
+        mon = dispatch_audit.DispatchMonitor()
+        with mon:
+            for r in range(3):
+                np.asarray(jnp.ones((4,)) * 2.0)   # eager bind on purpose
+                mon.mark(f"round{r}")
+        fs = dispatch_audit.lint_dispatch(
+            mon, "eager", {"warmup": 1, "max_eager_per_phase": 0})
+        assert any(f.rule == "dispatch-eager-budget" for f in fs)
+
+    def test_nesting_raises(self):
+        mon = dispatch_audit.DispatchMonitor()
+        with mon:
+            with pytest.raises(RuntimeError):
+                with dispatch_audit.DispatchMonitor():
+                    pass
+
+
+@pytest.mark.slow
+class TestFederatedDispatchAudit:
+    def test_batched_round_engine_is_steady_state(self):
+        """End to end: a real multi-round federated run compiles nothing
+        after warmup (the gate ``tools/ci.sh lint`` applies per engine)."""
+        from repro.federation.experiment import build_experiment
+        exp = build_experiment(
+            "raflora",
+            fl_overrides={"num_rounds": 6, "num_clients": 4,
+                          "participation": 1.0},
+            lora_overrides={"rank_levels": (4, 8),
+                            "rank_probs": (0.5, 0.5)},
+            num_classes=4, d_model=32, samples_per_class=20,
+            batches_per_round=1, backend="kernel",
+            round_engine="batched")
+        mon = dispatch_audit.DispatchMonitor()
+        with mon:
+            for r in range(4):
+                exp.server.run_round()
+                mon.mark(f"round{r}")
+        assert dispatch_audit.lint_dispatch(
+            mon, "federated/batched",
+            {"warmup": 2, "max_eager_per_phase": 8}) == []
+        assert mon.phases[0].traces > 0          # warmup really compiled

@@ -40,8 +40,14 @@ and is one-sided -- contention only ADDS time):
 
 Rows present only in the fresh run are reported as new; rows only in the
 baseline (a study that was not rerun) are skipped. ``event`` rows are
-virtual-time simulation outcomes -- exactly reproducible, appended across
-runs, never gated -- and are listed informationally.
+virtual-time simulation outcomes -- exactly reproducible and appended
+across runs -- gated per (trigger, straggler_frac) on the LATEST
+``virtual_time_to_target_energy`` of each side at the same wide
+catastrophic-only bar as the batched reference row (``--ref-threshold``):
+virtual time is deterministic, so only a structural scheduler regression
+moves it, but small drifts are expected when trigger constants are
+intentionally retuned. A fresh ``null`` (target energy never reached)
+against a finite baseline is always a regression.
 
 Exit status: 0 clean, 1 regression, 2 usage/IO error.
 """
@@ -68,6 +74,50 @@ def _rows(artifact: dict) -> dict:
                         ("kernel_backend", "kernel")):
         _section_rows(out, artifact.get(key) or {}, prefix)
     return out
+
+
+def _event_latest(artifact: dict) -> dict:
+    """{(trigger, straggler_frac): latest row} -- rows are append-only, so
+    the last row per key is the current scheduler's outcome."""
+    out = {}
+    for row in (artifact.get("event") or {}).get("rows") or []:
+        out[(row.get("trigger"), row.get("straggler_frac"))] = row
+    return out
+
+
+def _gate_events(baseline: dict, fresh: dict, ref_threshold: float,
+                 regressions: list) -> None:
+    """Gate event-mode rows on virtual_time_to_target_energy at the wide
+    catastrophic-only bar (None = never reached target = infinity)."""
+    base_ev, fresh_ev = _event_latest(baseline), _event_latest(fresh)
+    if not fresh_ev:
+        return
+    print(f"[bench-trend] {len(fresh_ev)} event-mode rows (virtual time, "
+          f"bar {ref_threshold:.1f}x)")
+    for key in sorted(fresh_ev, key=str):
+        trigger, frac = key
+        row = fresh_ev[key]
+        f_vt = row.get("virtual_time_to_target_energy")
+        name = f"event/{trigger}/straggler={frac}"
+        if key not in base_ev:
+            print(f"  NEW    {name}: vt_to_target="
+                  f"{'n/a' if f_vt is None else f_vt}")
+            continue
+        b_vt = base_ev[key].get("virtual_time_to_target_energy")
+        b = float("inf") if b_vt is None else float(b_vt)
+        f = float("inf") if f_vt is None else float(f_vt)
+        if f <= b or b == float("inf"):   # faster, equal, or both n/a
+            ratio, regressed = (1.0 if f == b else f / b), False
+        else:
+            ratio = f / b                 # inf when fresh stopped reaching
+            regressed = ratio > ref_threshold
+        flag = "REGRESS" if regressed else "ok"
+        print(f"  {flag:7s}{name}: vt {ratio:.2f}x "
+              f"(base {'n/a' if b_vt is None else b_vt}, "
+              f"fresh {'n/a' if f_vt is None else f_vt}, "
+              f"aggs={row.get('aggregations')})")
+        if regressed:
+            regressions.append((name, ratio))
 
 
 def compare(baseline: dict, fresh: dict, *, threshold: float,
@@ -114,17 +164,7 @@ def compare(baseline: dict, fresh: dict, *, threshold: float,
     for key in sorted(set(base_rows) - set(fresh_rows)):
         print(f"  SKIP   {key}: not in fresh run")
 
-    ev = (fresh.get("event") or {}).get("rows") or []
-    if ev:
-        print(f"[bench-trend] {len(ev)} event-mode rows (informational, "
-              "not gated):")
-        for row in ev[-6:]:
-            vt = row.get("virtual_time_to_target_energy")
-            print(f"  event  {row.get('trigger')} "
-                  f"straggler={row.get('straggler_frac')}: "
-                  f"vt_to_target={'n/a' if vt is None else vt} "
-                  f"aggs={row.get('aggregations')} "
-                  f"final_E={row.get('final_higher_rank_energy'):.3f}")
+    _gate_events(baseline, fresh, ref_threshold, regressions)
 
     if regressions:
         worst = max(regressions, key=lambda kv: kv[1])

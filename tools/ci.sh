@@ -20,6 +20,11 @@
 #   tools/ci.sh kernel-smoke # backend="kernel" engine matrix (sequential/
 #                            # batched/sharded/async x every METHODS) under
 #                            # a forced 8-virtual-device CPU host platform
+#   tools/ci.sh lint         # program-audit sweep (DESIGN.md §8): hlo /
+#                            # jaxpr / pallas / dispatch lint rules over
+#                            # every engine x backend x method program plus
+#                            # positive controls, written to the tracked
+#                            # AUDIT_program_lint.json at the repo root
 #
 # JAX_PLATFORMS=cpu keeps runs identical on machines that also have
 # accelerators; PYTHONHASHSEED pins dict/hash iteration for determinism.
@@ -68,8 +73,12 @@ case "$tier" in
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python -m pytest -x -q tests/test_kernel_engines.py
     ;;
+  lint)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    exec python tools/lint_programs.py
+    ;;
   *)
-    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|shard-smoke|kernel-smoke]" >&2
+    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|shard-smoke|kernel-smoke|lint]" >&2
     exit 2
     ;;
 esac

@@ -1,0 +1,482 @@
+#!/usr/bin/env python
+"""Program-audit sweep (DESIGN.md §8): run the four analysis passes over
+the engine x backend x METHODS matrix and write the tracked
+``AUDIT_program_lint.json``.
+
+    PYTHONPATH=src python tools/lint_programs.py [--out PATH]
+        [--skip-dispatch] [--verbose]
+
+Matrix (small shapes -- the rules are scale-free, chosen so every legal
+low-rank stack stays strictly below the (d, n) materialization bar):
+
+  engines   sequential (_stacked_core), batched (_grouped_core), async
+            (the same grouped program at pipeline_depth x M clients),
+            event (the same grouped program the fire path dispatches, a
+            present-mask is omega DATA), sharded (sharded_grouped_fn on
+            the FL mesh)
+  methods   avg family (fedavg / hetlora / ffa / flora) once per engine
+            (backend-independent); SVD family (flexlora / raflora) x
+            {dense, factored, kernel}
+  passes    hlo_lint on every compiled program; jaxpr_lint on the round-
+            path entry points; pallas_lint over the kernel registry;
+            dispatch_audit over a multi-round federated run per engine
+
+Positive controls (deliberately broken programs; the sweep FAILS if any
+control does NOT trip -- dead tripwires are treated as regressions):
+dense-backend materialization, an injected ``jax.debug.callback``, a
+compiled host-callback custom-call, a bf16 program with f32 upcasts, an
+oversized fabricated BlockSpec, and a shape-varying round sequence.
+
+Exit status: 0 sweep green + all controls tripped, 1 otherwise, 2 on
+usage errors. ``tools/ci.sh lint`` runs this under a forced 8-device CPU
+platform so the sharded rows exercise real collectives.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# sweep shapes: chosen so M_max * P * r_max < min(d, n) -- every legal
+# stack is then strictly below the d*n materialization bar (see hlo_lint)
+D, N, R_MAX = 160, 192, 8
+RANK_LEVELS = (4, 8)
+M_PER_GROUP = 2                 # clients per rank group (non-sharded rows)
+P_BUCKET = 2                    # adapters per bucket (grouped rows)
+ASYNC_DEPTH = 2
+DISPATCH_ROUNDS, DISPATCH_WARMUP = 6, 2
+MAX_EAGER_PER_ROUND = 8         # measured ~1; generous headroom
+
+AVG_METHODS = ("fedavg", "hetlora", "ffa", "flora")
+SVD_METHODS = ("flexlora", "raflora")
+BACKENDS = ("dense", "factored", "kernel")
+
+_SDS = jax.ShapeDtypeStruct
+
+
+def _f32(*shape):
+    return _SDS(shape, jnp.float32)
+
+
+def _pad_lane(x: int) -> int:
+    """Lane-padded extent: the kernel backend pads d / n up to the 128-lane
+    tile (kernels/ops.py ``_tile_block``), so its arrays are compared at
+    padded scale; the exact (D, N) trailing-dims check still catches a
+    dense dW."""
+    return -(-x // 128) * 128
+
+
+def _res_leaves(res):
+    """AggregationResult -> tuple of array leaves (make_jaxpr cannot
+    return the dataclass itself)."""
+    return tuple(x for x in (res.b_g, res.a_g, res.sigma, res.merge_delta)
+                 if x is not None)
+
+
+def _warg_for(method: str, m: int):
+    """Weight-argument aval: (M,) for the avg family, omega (M, r_max)
+    for the SVD family."""
+    return _f32(m) if method in AVG_METHODS else _f32(m, R_MAX)
+
+
+def _hlo_meta(method: str, backend: str) -> dict:
+    """Per-row rule thresholds. Materialization is armed for the SVD
+    family (flora's merge_delta is dense BY DESIGN; avg methods never
+    form products); non-sharded programs get a zero collective budget."""
+    meta = {"max_collective_count": 0, "max_collective_bytes": 0}
+    if method in SVD_METHODS:
+        # kernel rows are measured at 128-lane padded scale (the Pallas
+        # wrappers pad d/n to tile multiples); dense dW still trips via
+        # the exact trailing-dims check
+        elems = (_pad_lane(D) * _pad_lane(N) if backend == "kernel"
+                 else D * N)
+        meta.update(forbid_elems=elems, forbid_dims=(D, N))
+    return meta
+
+
+def _sharded_meta(method: str, backend: str, n_dev: int) -> dict:
+    """Collective budgets for the sharded rows: exact expected result-
+    buffer bytes of the per-bucket psums x1.5 slack (DESIGN.md §5)."""
+    if method in ("fedavg", "hetlora"):
+        exact = 4 * (D * R_MAX + R_MAX * N)
+    elif method == "ffa":
+        exact = 4 * R_MAX * N
+    elif method in ("flora",) or backend == "dense":
+        exact = 4 * D * N
+    else:                       # factored/kernel: zero-scattered stacks
+        width = 2 * 8 * n_dev   # 2 groups x r8-padded width x shards
+        exact = 4 * (D * width + width * N)
+    meta = {"max_collective_count": 2,
+            "max_collective_bytes": int(1.5 * exact)}
+    if method in SVD_METHODS and backend != "dense":
+        # the kernel backend pads d/n to the 128-lane tile and carries
+        # zero-scattered stacks of width S*W -- compare at padded scale
+        elems = (_pad_lane(D) * _pad_lane(N) if backend == "kernel"
+                 else D * N)
+        meta.update(forbid_elems=elems, forbid_dims=(D, N))
+    return meta
+
+
+def _stacked_avals(method: str, with_fallback: bool):
+    m = M_PER_GROUP * len(RANK_LEVELS)
+    bs, as_ = _f32(m, D, R_MAX), _f32(m, R_MAX, N)
+    gb, ga = _f32(D, R_MAX), _f32(R_MAX, N)
+    fb = _f32(R_MAX) if with_fallback else None
+    return bs, as_, _warg_for(method, m), gb, ga, fb
+
+
+def _grouped_avals(method: str, with_fallback: bool, depth: int = 1):
+    group_bs, group_as = [], []
+    m = 0
+    for r in RANK_LEVELS:
+        g = M_PER_GROUP * depth
+        m += g
+        group_bs.append(tuple(_f32(g, D, r) for _ in range(P_BUCKET)))
+        group_as.append(tuple(_f32(g, r, N) for _ in range(P_BUCKET)))
+    gbs = tuple(_f32(D, R_MAX) for _ in range(P_BUCKET))
+    gas = tuple(_f32(R_MAX, N) for _ in range(P_BUCKET))
+    fb = _f32(R_MAX) if with_fallback else None
+    return (tuple(group_bs), tuple(group_as), _warg_for(method, m),
+            gbs, gas, fb)
+
+
+def _lower_engine(engine: str, method: str, backend: str):
+    """Optimized HLO of the engine's per-bucket aggregation program."""
+    from repro.core import aggregation
+    fallback = method == "raflora"
+    if engine == "sequential":
+        bs, as_, warg, gb, ga, fb = _stacked_avals(method, fallback)
+        low = aggregation._stacked_core.lower(
+            bs, as_, warg, gb, ga, fb, r_max=R_MAX, backend=backend,
+            method=method)
+    elif engine in ("batched", "async", "event"):
+        # async consumes depth x M buffered clients; the event fire path
+        # dispatches the SAME grouped program (present mask = omega data)
+        depth = ASYNC_DEPTH if engine == "async" else 1
+        gbs_, gas_, warg, gbs, gas, fb = _grouped_avals(method, fallback,
+                                                        depth)
+        low = aggregation._grouped_core.lower(
+            gbs_, gas_, warg, gbs, gas, fb, r_max=R_MAX, backend=backend,
+            method=method)
+    elif engine == "sharded":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_fl_mesh
+        mesh = make_fl_mesh()
+        n_dev = mesh.shape["data"]
+        cl = NamedSharding(mesh, P("data"))
+        group_bs, group_as, group_w = [], [], []
+        for r in RANK_LEVELS:
+            group_bs.append((_SDS((n_dev, D, r), jnp.float32,
+                                  sharding=cl),))
+            group_as.append((_SDS((n_dev, r, N), jnp.float32,
+                                  sharding=cl),))
+            group_w.append(_SDS(
+                (n_dev,) + (() if method in AVG_METHODS else (R_MAX,)),
+                jnp.float32, sharding=cl))
+        fb = _f32(R_MAX) if fallback else None
+        gbs = tuple(_f32(D, R_MAX) for _ in range(1))
+        gas = tuple(_f32(R_MAX, N) for _ in range(1))
+        fn = aggregation.sharded_grouped_fn(mesh, R_MAX, backend, method)
+        low = fn.lower(tuple(group_bs), tuple(group_as), tuple(group_w),
+                       gbs, gas, fb)
+    else:
+        raise ValueError(engine)
+    return low.compile().as_text()
+
+
+def _hlo_sweep(report, verbose):
+    from repro.analysis import hlo_lint
+    from repro.analysis.report import ProgramAudit
+    n_dev = jax.device_count()
+    rows = []
+    for engine in ("sequential", "batched", "async", "event", "sharded"):
+        for method in AVG_METHODS:
+            rows.append((engine, method, "-"))
+        for method in SVD_METHODS:
+            for backend in BACKENDS:
+                rows.append((engine, method, backend))
+    dense_controls = []
+    parity_texts = {}
+    for engine, method, backend in rows:
+        name = f"{engine}/{method}/{backend}"
+        be = backend if backend != "-" else "factored"
+        text = _lower_engine(engine, method, be)
+        meta = (_sharded_meta(method, be, n_dev) if engine == "sharded"
+                else _hlo_meta(method, be))
+        findings, payload = hlo_lint.lint_hlo(text, name, meta)
+        stats = {"collective_counts": {k: int(v) for k, v in
+                                       payload.stats.collective_counts
+                                       .items()},
+                 "collective_bytes": int(
+                     payload.stats.total_collective_bytes)}
+        if method in SVD_METHODS and backend in ("factored", "kernel"):
+            parity_texts[(engine, method, backend)] = text
+        if method in SVD_METHODS and backend == "dense":
+            # the dense backend MUST trip the materialization rule: it is
+            # the standing positive control that the tripwire is live
+            mat = [f for f in findings if f.rule == "hlo-materialization"]
+            dense_controls.extend(mat)
+            findings = [f for f in findings
+                        if f.rule != "hlo-materialization"]
+            stats["expected_materialization_hits"] = len(mat)
+        audit = ProgramAudit(name, "hlo", findings, stats)
+        report.add(audit)
+        if verbose or not audit.ok:
+            for f in findings:
+                print(f"  {f}")
+        print(f"[hlo ] {name:28s} "
+              f"{'ok' if audit.ok else 'FAIL'} "
+              f"(coll={stats['collective_bytes']}B)")
+    report.add_control(
+        "dense-materialization", "hlo-materialization", dense_controls,
+        f"{len(dense_controls)} (d, n)-scale arrays across dense rows")
+    # kernel == factored collective parity per engine (one source of truth
+    # for the byte accounting fl_dryrun used to duplicate)
+    parity = []
+    for engine in ("sequential", "batched", "async", "event", "sharded"):
+        for method in SVD_METHODS:
+            fa = parity_texts[(engine, method, "factored")]
+            ke = parity_texts[(engine, method, "kernel")]
+            parity.extend(hlo_lint.collective_parity(
+                fa, ke, label_a="factored", label_b="kernel",
+                program=f"{engine}/{method}/parity"))
+    report.add(ProgramAudit("parity/kernel-vs-factored", "hlo", parity,
+                            {"pairs": 10}))
+    print(f"[hlo ] parity kernel==factored: "
+          f"{'ok' if not parity else 'FAIL'}")
+
+
+def _jaxpr_entry_points(exp):
+    """(name, jaxpr) for the round-path entry points of ISSUE 6."""
+    from repro.analysis import jaxpr_lint
+    from repro.core import aggregation
+    from repro.core.svd import svd_realloc_gram
+    server = exp.server
+    out = []
+
+    # client.train_group_masked: the un-jitted masked group body
+    b = server.batch_fn(0, np.random.default_rng(0))[0]
+    stacks = jax.tree.map(lambda x: np.stack([x, x])[None], b)
+    r_max = server.model.lora.r_max
+    mask = np.ones((2, r_max), np.float32)
+    scales = np.ones((2,), np.float32)
+    run = server.trainer._masked_run_fn(1)
+    out.append(("jaxpr/train_group_masked", jaxpr_lint.trace(
+        run, server.global_lora, server.base, stacks, np.float32(1e-3),
+        mask, scales)))
+
+    # Aggregator.aggregate_stack / aggregate_grouped (+ the event-engine
+    # fire path: aggregate_grouped with a present mask)
+    agg = server.aggregator
+    m = M_PER_GROUP * len(RANK_LEVELS)
+    ranks = [r for r in RANK_LEVELS for _ in range(M_PER_GROUP)]
+    n_k = [10.0] * m
+    bs, as_ = _f32(m, D, R_MAX), _f32(m, R_MAX, N)
+    out.append(("jaxpr/aggregate_stack", jaxpr_lint.trace(
+        lambda b_, a_: _res_leaves(
+            agg.aggregate_stack(b_, a_, ranks, n_k)),
+        bs, as_)))
+    gbs_, gas_, _, gbs, gas, _ = _grouped_avals("raflora", False)
+    out.append(("jaxpr/aggregate_grouped", jaxpr_lint.trace(
+        lambda b_, a_: _res_leaves(
+            agg.aggregate_grouped(b_, a_, ranks, n_k, global_bs=gbs,
+                                  global_as=gas)),
+        gbs_, gas_)))
+    present = [True] * (m - 1) + [False]
+    out.append(("jaxpr/event_fire", jaxpr_lint.trace(
+        lambda b_, a_: _res_leaves(
+            agg.aggregate_grouped(b_, a_, ranks, n_k, present=present)),
+        gbs_, gas_)))
+
+    # svd_realloc_gram: the kernel backend's realloc core
+    width = 4 * 8
+    out.append(("jaxpr/svd_realloc_gram", jaxpr_lint.trace(
+        functools.partial(svd_realloc_gram, r_max=R_MAX),
+        _f32(D, width), _f32(width, N), _f32(width, width),
+        _f32(width, width))))
+    return out
+
+
+def _jaxpr_sweep(report, exp, verbose):
+    from repro.analysis import jaxpr_lint
+    from repro.analysis.report import ProgramAudit
+    for name, jx in _jaxpr_entry_points(exp):
+        findings = jaxpr_lint.lint_jaxpr(jx, name)
+        audit = ProgramAudit(name, "jaxpr", findings,
+                             jaxpr_lint.jaxpr_stats(jx))
+        report.add(audit)
+        if verbose or not audit.ok:
+            for f in findings:
+                print(f"  {f}")
+        print(f"[jxpr] {name:28s} {'ok' if audit.ok else 'FAIL'}")
+
+    # control: an injected debug callback on the round path must trip
+    def poisoned(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2.0
+
+    ctl = jaxpr_lint.lint_jaxpr(jaxpr_lint.trace(poisoned, _f32(4)),
+                                "control/jaxpr-callback")
+    report.add_control("injected-debug-callback", "jaxpr-callback", ctl)
+
+
+def _pallas_sweep(report, verbose):
+    from repro.analysis import pallas_lint
+    from repro.analysis.report import ProgramAudit
+    progs = pallas_lint.collect_registry()
+    findings = pallas_lint.lint_kernels(progs, "pallas/registry")
+    stats = {
+        "kernels": sorted({r.name for r in progs.records}),
+        "launches": len(progs.records),
+        "probes": [{"name": p.name, "ok": p.ok, "detail": p.detail}
+                   for p in progs.probes],
+        "max_vmem_bytes": max(
+            (pallas_lint.estimate_vmem(r) for r in progs.records),
+            default=0),
+    }
+    audit = ProgramAudit("pallas/registry", "pallas", findings, stats)
+    report.add(audit)
+    if verbose or not audit.ok:
+        for f in findings:
+            print(f"  {f}")
+    print(f"[plas] registry: {len(progs.records)} launches from "
+          f"{len(stats['kernels'])} kernels, max VMEM "
+          f"{stats['max_vmem_bytes'] / 2 ** 20:.2f} MiB "
+          f"{'ok' if audit.ok else 'FAIL'}")
+    ctl = pallas_lint.lint_kernels(pallas_lint.oversized_control(),
+                                   "control/pallas-oversized")
+    report.add_control("oversized-blockspec", "pallas-vmem-budget", ctl)
+    report.add_control("blockspec-out-of-bounds", "pallas-grid-blockspec",
+                       ctl)
+
+
+def _build_tiny_experiment(engine: str, depth: int = 1):
+    from repro.federation.experiment import build_experiment
+    return build_experiment(
+        "raflora",
+        fl_overrides={"num_rounds": DISPATCH_ROUNDS + 2, "num_clients": 6,
+                      "participation": 1.0},
+        lora_overrides={"rank_levels": RANK_LEVELS,
+                        "rank_probs": (0.5, 0.5)},
+        num_classes=4, d_model=32, samples_per_class=20,
+        batches_per_round=1, backend="kernel", round_engine=engine,
+        pipeline_depth=depth)
+
+
+def _dispatch_sweep(report, exp_batched, verbose):
+    from repro.analysis import dispatch_audit
+    from repro.analysis.report import ProgramAudit
+    meta = {"warmup": DISPATCH_WARMUP,
+            "max_eager_per_phase": MAX_EAGER_PER_ROUND}
+    engines = [("batched", exp_batched),
+               ("async", _build_tiny_experiment("async", ASYNC_DEPTH))]
+    for engine, exp in engines:
+        mon = dispatch_audit.DispatchMonitor()
+        with mon:
+            for r in range(DISPATCH_ROUNDS):
+                exp.server.run_round()
+                mon.mark(f"round{r}")
+        name = f"dispatch/{engine}"
+        findings = dispatch_audit.lint_dispatch(mon, name, meta)
+        audit = ProgramAudit(name, "dispatch", findings, mon.stats())
+        report.add(audit)
+        if verbose or not audit.ok:
+            for f in findings:
+                print(f"  {f}")
+        steady = mon.phases[DISPATCH_WARMUP:]
+        print(f"[disp] {name}: {DISPATCH_ROUNDS} rounds, steady "
+              f"traces={sum(p.traces for p in steady)} "
+              f"compiles={sum(p.compiles for p in steady)} "
+              f"eager<={max((p.eager_binds for p in steady), default=0)} "
+              f"{'ok' if audit.ok else 'FAIL'}")
+
+    # control: shape-varying steady-state rounds MUST trip the recompiler
+    f = jax.jit(lambda x: (x * 2.0).sum())
+    mon = dispatch_audit.DispatchMonitor()
+    with mon:
+        for r in range(4):
+            np.asarray(f(jnp.ones((8 + r,))))
+            mon.mark(f"round{r}")
+    ctl = dispatch_audit.lint_dispatch(mon, "control/shape-varying",
+                                       {"warmup": 1})
+    report.add_control("shape-varying-round",
+                       "dispatch-steady-state-recompile", ctl)
+
+
+def _hlo_controls(report):
+    """Compiled-program controls for the remaining HLO rules: a program
+    with a host callback and a bf16 program with f32 upcasts."""
+    from repro.analysis import hlo_lint
+
+    def with_callback(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v), jax.ShapeDtypeStruct(x.shape, x.dtype),
+            x) + 1.0
+
+    text = jax.jit(with_callback).lower(_f32(8)).compile().as_text()
+    findings, _ = hlo_lint.lint_hlo(text, "control/host-callback")
+    report.add_control("compiled-host-callback", "hlo-host-transfer",
+                       findings)
+
+    def bf16_matmul(x, w):
+        return x @ w
+
+    b = jax.ShapeDtypeStruct((256, 256), jnp.bfloat16)
+    text = jax.jit(bf16_matmul).lower(b, b).compile().as_text()
+    findings, _ = hlo_lint.lint_hlo(
+        text, "control/bf16-upcast", {"bf16_min_elems": 256 * 256})
+    report.add_control("bf16-upcast", "hlo-dtype-upcast", findings)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="AUDIT_program_lint.json")
+    ap.add_argument("--skip-dispatch", action="store_true",
+                    help="skip the multi-round dispatch audit (the only "
+                         "pass that runs real rounds)")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.report import AuditReport
+    report = AuditReport(matrix={
+        "d": D, "n": N, "r_max": R_MAX, "rank_levels": list(RANK_LEVELS),
+        "clients_per_group": M_PER_GROUP, "bucket_adapters": P_BUCKET,
+        "async_depth": ASYNC_DEPTH, "devices": jax.device_count(),
+        "engines": ["sequential", "batched", "async", "event", "sharded"],
+        "avg_methods": list(AVG_METHODS), "svd_methods": list(SVD_METHODS),
+        "backends": list(BACKENDS),
+        "dispatch": {"rounds": DISPATCH_ROUNDS, "warmup": DISPATCH_WARMUP,
+                     "max_eager_per_phase": MAX_EAGER_PER_ROUND},
+    })
+
+    _hlo_sweep(report, args.verbose)
+    _hlo_controls(report)
+    exp = _build_tiny_experiment("batched")
+    _jaxpr_sweep(report, exp, args.verbose)
+    _pallas_sweep(report, args.verbose)
+    if not args.skip_dispatch:
+        _dispatch_sweep(report, exp, args.verbose)
+
+    report.write(args.out)
+    s = report.summary()
+    print(f"[lint] {s['programs']} programs, {s['errors']} errors, "
+          f"{s['controls']} controls "
+          f"({len(s['controls_failed'])} dead) -> {args.out}")
+    if not report.ok:
+        for p in report.failed_programs:
+            print(f"[lint] FAIL {p.program}: "
+                  + "; ".join(str(f) for f in p.errors[:3]))
+        for name in report.failed_controls:
+            print(f"[lint] DEAD CONTROL {name}: rule "
+                  f"{report.controls[name].rule} did not trip")
+        return 1
+    print("[lint] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
