@@ -154,10 +154,16 @@ def _check_dtype_upcast(ctx: ProgramContext):
 
 def lint_hlo(text: str, program: str,
              meta: Optional[dict] = None,
-             only: Optional[Iterable[str]] = None
+             only: Optional[Iterable[str]] = None,
+             payload: Optional[HLOProgram] = None
              ) -> Tuple[List[Finding], HLOProgram]:
-    """Run the HLO RuleSet over one compiled program's optimized HLO."""
-    payload = parse_program(text)
+    """Run the HLO RuleSet over one compiled program's optimized HLO.
+
+    ``payload`` short-circuits the parse for callers holding a cached
+    ``HLOProgram`` (the shared ``analysis/lowering`` cache): each program
+    of a sweep is then parsed/walked once, not once per pass."""
+    if payload is None:
+        payload = parse_program(text)
     ctx = ProgramContext(program=program, kind="hlo", payload=payload,
                          meta=dict(meta or {}))
     return HLO_RULES.run(ctx, only=only), payload
@@ -173,7 +179,16 @@ def collective_parity(text_a: str, text_b: str, *, label_a: str,
     the kernel == factored invariant (the fused Pallas path changes
     per-shard compute, never the collective). One source of truth for the
     byte accounting ``launch/fl_dryrun.py`` used to duplicate."""
-    sa, sb = analyze_hlo(text_a), analyze_hlo(text_b)
+    return collective_parity_stats(
+        analyze_hlo(text_a), analyze_hlo(text_b), label_a=label_a,
+        label_b=label_b, program=program, rel_tol=rel_tol)
+
+
+def collective_parity_stats(sa: HLOStats, sb: HLOStats, *, label_a: str,
+                            label_b: str, program: str = "parity",
+                            rel_tol: float = 0.0) -> List[Finding]:
+    """Stats-level parity core: callers with cached walker stats (the
+    shared lowering cache) skip the re-parse ``collective_parity`` pays."""
     findings: List[Finding] = []
     kinds = set(sa.collective_bytes) | set(sb.collective_bytes)
     for kind in sorted(kinds):

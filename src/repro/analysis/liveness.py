@@ -1,0 +1,158 @@
+"""Peak-live-bytes estimate from a liveness pass over the parsed HLO op
+schedule.
+
+``hlo_walker.analyze_hlo`` accumulates *traffic* (flops / collective /
+HBM bytes); it says nothing about the largest *resident* working set. A
+program can keep its dot flops at O((d+n)R) while still materializing a
+(d, n) temporary -- the exact failure mode the dense backend exhibits by
+design and the factored / kernel backends must never regress into. This
+pass walks each computation's op list in printed schedule order (XLA's
+textual order IS a valid schedule: operands are defined before use) and
+tracks the sum of live buffer bytes:
+
+  * an op's result buffer goes live at its definition and dies after its
+    last textual use inside the computation (the root result stays live
+    to the end);
+  * parameters are live from the top (they are the caller's buffers, but
+    counting them keeps the estimate comparable across call boundaries);
+  * a call site (``while`` / ``call`` / ``conditional`` / ``reduce``...)
+    transiently adds the callee's own peak on top of the caller's live
+    set -- a consistent over-estimate (real buffer assignment may alias
+    loop carries) that preserves scaling exponents;
+  * ``fusion`` bodies are virtual: only the fusion's result buffer
+    counts, matching the walker's HBM model.
+
+The absolute number over-counts versus XLA's buffer assignment (no
+aliasing, tuples double-count their elements); what the complexity
+certifier consumes is the *slope* of this estimate along a size ladder,
+for which a consistent over-estimate is exactly as good as the truth.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.hlo_walker import (_bytes_of, callee_names, Computation,
+                                     OpInfo, parse_hlo)
+
+_OPERAND_NAME = re.compile(r"%?([\w\.\-]+)\s*$")
+
+
+@dataclass
+class LivenessStats:
+    """Result of :func:`analyze_liveness`."""
+
+    peak_live_bytes: float = 0.0
+    peak_location: str = ""           # "computation/op" at the peak
+    comp_peaks: Dict[str, float] = field(default_factory=dict)
+
+
+def _operand_names(op: OpInfo, comp: Computation) -> List[str]:
+    """Operand symbols of ``op`` that name values of this computation.
+
+    Parses the first parenthesized group of the op tail; each comma-
+    separated piece ends in the operand symbol (possibly preceded by an
+    inline type like ``f32[128,8]{1,0} %stack.3``). Attribute references
+    (``body=%region_0``) live outside the parens and computation names
+    are filtered out via the symbol table.
+    """
+    lp = op.rest.find("(")
+    if lp < 0:
+        return []
+    depth, rp = 0, -1
+    for i in range(lp, len(op.rest)):
+        c = op.rest[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                rp = i
+                break
+    if rp < 0:
+        return []
+    inner = op.rest[lp + 1:rp]
+    names = []
+    for piece in inner.split(","):
+        m = _OPERAND_NAME.search(piece.strip())
+        if m and m.group(1) in comp.symbol_types:
+            names.append(m.group(1))
+    return names
+
+
+def _schedule_liveness(comp: Computation, peak_of) -> Tuple[float, str]:
+    """Peak live bytes of one computation, callee peaks via ``peak_of``."""
+    last_use: Dict[str, int] = {}
+    operands_per_op: List[List[str]] = []
+    for i, op in enumerate(comp.ops):
+        names = _operand_names(op, comp)
+        operands_per_op.append(names)
+        for nm in names:
+            last_use[nm] = i
+    if not comp.ops:
+        return 0.0, ""
+    root = comp.ops[-1].name
+
+    alive: Dict[str, float] = {}
+    live = 0.0
+    peak, loc = 0.0, ""
+    for i, op in enumerate(comp.ops):
+        b = float(_bytes_of(op.result_type))
+        alive[op.name] = b
+        live += b
+        # transient callee peak at this op (fusion bodies are virtual)
+        transient = 0.0
+        if op.opcode != "fusion":
+            for callee in callee_names(op.rest):
+                transient = max(transient, peak_of(callee))
+        if live + transient > peak:
+            peak, loc = live + transient, f"{comp.name}/{op.name}"
+        # free operands whose last use is this op
+        for nm in set(operands_per_op[i]):
+            if last_use.get(nm) == i and nm in alive and nm != root:
+                live -= alive.pop(nm)
+        # a result that is never read dies immediately (except the root)
+        if op.name not in last_use and op.name != root:
+            live -= alive.pop(op.name)
+    return peak, loc
+
+
+def analyze_liveness(text: str) -> LivenessStats:
+    """Peak-live-bytes estimate of an optimized HLO module (see module
+    docstring for the model)."""
+    comps = parse_hlo(text)
+    entry: Optional[str] = comps.pop("__entry_name__", None)  # type: ignore
+    comps.pop("__entry__", None)
+
+    memo: Dict[str, float] = {}
+    locs: Dict[str, str] = {}
+
+    def peak_of(name: str) -> float:
+        if name in memo:
+            return memo[name]
+        memo[name] = 0.0            # cycle guard (HLO call graphs are DAGs)
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0
+        p, loc = _schedule_liveness(comp, peak_of)
+        memo[name], locs[name] = p, loc
+        return p
+
+    stats = LivenessStats()
+    if entry is not None and entry in comps:
+        stats.peak_live_bytes = peak_of(entry)
+        stats.peak_location = locs.get(entry, "")
+    else:                           # headerless fragment: largest comp wins
+        for name in comps:
+            p = peak_of(name)
+            if p > stats.peak_live_bytes:
+                stats.peak_live_bytes = p
+                stats.peak_location = locs.get(name, "")
+    stats.comp_peaks = dict(memo)
+    return stats
+
+
+def peak_live_bytes(text: str) -> float:
+    """Convenience: just the entry peak."""
+    return analyze_liveness(text).peak_live_bytes

@@ -1,0 +1,182 @@
+"""Shared lowering cache for the static-analysis sweeps.
+
+``tools/lint_programs.py`` (PR 6) lowered each engine x method x backend
+program privately per pass, and the complexity certifier would lower the
+same programs again at every ladder point. This module gives both one
+cache keyed by :class:`ProgramPoint` -- the full parameterization of an
+aggregation program (engine, method, backend, d, n, rank levels, clients
+per group, bucket width, pipeline depth, shard count). Each distinct
+point is lowered + compiled ONCE per process; the parsed
+``hlo_lint.HLOProgram`` payload and the ``liveness`` stats are computed
+lazily and memoized on the entry, so the lint passes, the collective-
+parity pass and the certifier all analyze one artifact.
+
+The aval builders are the PR-6 ones generalized from module constants to
+the point's fields; ``tools/lint_programs.py`` now imports them from
+here (single source of truth for the matrix shapes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Tuple
+
+AVG_METHODS = ("fedavg", "hetlora", "ffa", "flora")
+SVD_METHODS = ("flexlora", "raflora")
+BACKENDS = ("dense", "factored", "kernel")
+ENGINES = ("sequential", "batched", "async", "event", "sharded")
+
+
+@dataclass(frozen=True)
+class ProgramPoint:
+    """One fully-parameterized aggregation program in the sweep matrix."""
+
+    engine: str
+    method: str
+    backend: str
+    d: int = 160
+    n: int = 192
+    rank_levels: Tuple[int, ...] = (4, 8)
+    m_per_group: int = 2            # clients per rank group
+    p_bucket: int = 2               # adapters per bucket (grouped rows)
+    depth: int = 1                  # pipeline depth (async rows use 2)
+    shards: int = 0                 # sharded rows: 0 = all visible devices
+
+    @property
+    def r_max(self) -> int:
+        return max(self.rank_levels)
+
+    @property
+    def cohort(self) -> int:
+        return self.m_per_group * len(self.rank_levels) * self.depth
+
+    def scaled(self, **kw) -> "ProgramPoint":
+        return replace(self, **kw)
+
+
+@dataclass
+class LoweredProgram:
+    """Cache entry: compiled HLO text + lazily parsed/analyzed views."""
+
+    point: ProgramPoint
+    text: str
+    _payload: Optional[object] = None
+    _liveness: Optional[object] = None
+
+    @property
+    def payload(self):
+        """``hlo_lint.HLOProgram`` (parsed comps + walker stats)."""
+        if self._payload is None:
+            from repro.analysis import hlo_lint
+            self._payload = hlo_lint.parse_program(self.text)
+        return self._payload
+
+    @property
+    def liveness(self):
+        """``liveness.LivenessStats`` of the compiled program."""
+        if self._liveness is None:
+            from repro.analysis.liveness import analyze_liveness
+            self._liveness = analyze_liveness(self.text)
+        return self._liveness
+
+
+_CACHE: Dict[ProgramPoint, LoweredProgram] = {}
+
+
+def cache_info() -> dict:
+    return {"entries": len(_CACHE)}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def _f32(*shape):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _warg_for(pt: ProgramPoint, m: int):
+    """Weight-argument aval: (M,) for the avg family, omega (M, r_max)
+    for the SVD family."""
+    return _f32(m) if pt.method in AVG_METHODS else _f32(m, pt.r_max)
+
+
+def _stacked_avals(pt: ProgramPoint, with_fallback: bool):
+    m = pt.m_per_group * len(pt.rank_levels)
+    bs, as_ = _f32(m, pt.d, pt.r_max), _f32(m, pt.r_max, pt.n)
+    gb, ga = _f32(pt.d, pt.r_max), _f32(pt.r_max, pt.n)
+    fb = _f32(pt.r_max) if with_fallback else None
+    return bs, as_, _warg_for(pt, m), gb, ga, fb
+
+
+def _grouped_avals(pt: ProgramPoint, with_fallback: bool):
+    group_bs, group_as = [], []
+    m = 0
+    for r in pt.rank_levels:
+        g = pt.m_per_group * pt.depth
+        m += g
+        group_bs.append(tuple(_f32(g, pt.d, r) for _ in range(pt.p_bucket)))
+        group_as.append(tuple(_f32(g, r, pt.n) for _ in range(pt.p_bucket)))
+    gbs = tuple(_f32(pt.d, pt.r_max) for _ in range(pt.p_bucket))
+    gas = tuple(_f32(pt.r_max, pt.n) for _ in range(pt.p_bucket))
+    fb = _f32(pt.r_max) if with_fallback else None
+    return (tuple(group_bs), tuple(group_as), _warg_for(pt, m), gbs, gas,
+            fb)
+
+
+def _lower_text(pt: ProgramPoint) -> str:
+    """Optimized HLO of the engine's per-bucket aggregation program."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import aggregation
+
+    fallback = pt.method == "raflora"
+    if pt.engine == "sequential":
+        bs, as_, warg, gb, ga, fb = _stacked_avals(pt, fallback)
+        low = aggregation._stacked_core.lower(
+            bs, as_, warg, gb, ga, fb, r_max=pt.r_max, backend=pt.backend,
+            method=pt.method)
+    elif pt.engine in ("batched", "async", "event"):
+        # async consumes depth x M buffered clients; the event fire path
+        # dispatches the SAME grouped program (present mask = omega data)
+        gbs_, gas_, warg, gbs, gas, fb = _grouped_avals(pt, fallback)
+        low = aggregation._grouped_core.lower(
+            gbs_, gas_, warg, gbs, gas, fb, r_max=pt.r_max,
+            backend=pt.backend, method=pt.method)
+    elif pt.engine == "sharded":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_fl_mesh
+        mesh = make_fl_mesh(pt.shards)
+        n_dev = mesh.shape["data"]
+        cl = NamedSharding(mesh, P("data"))
+        sds = jax.ShapeDtypeStruct
+        group_bs, group_as, group_w = [], [], []
+        for r in pt.rank_levels:
+            group_bs.append((sds((n_dev, pt.d, r), jnp.float32,
+                                 sharding=cl),))
+            group_as.append((sds((n_dev, r, pt.n), jnp.float32,
+                                 sharding=cl),))
+            group_w.append(sds(
+                (n_dev,) + (() if pt.method in AVG_METHODS
+                            else (pt.r_max,)),
+                jnp.float32, sharding=cl))
+        fb = _f32(pt.r_max) if fallback else None
+        gbs = (_f32(pt.d, pt.r_max),)
+        gas = (_f32(pt.r_max, pt.n),)
+        fn = aggregation.sharded_grouped_fn(mesh, pt.r_max, pt.backend,
+                                            pt.method)
+        low = fn.lower(tuple(group_bs), tuple(group_as), tuple(group_w),
+                       gbs, gas, fb)
+    else:
+        raise ValueError(pt.engine)
+    return low.compile().as_text()
+
+
+def lower_program(pt: ProgramPoint) -> LoweredProgram:
+    """Cached lower+compile of ``pt`` (one compile per distinct point per
+    process, shared by every analysis pass)."""
+    hit = _CACHE.get(pt)
+    if hit is None:
+        hit = _CACHE[pt] = LoweredProgram(pt, _lower_text(pt))
+    return hit

@@ -14,8 +14,11 @@ probed, not assumed. Rules:
                          positive ints, and every index_map corner maps
                          its block inside the (padded) operand bounds
   pallas-vmem-budget     per-grid-step footprint -- double-buffered in/out
-                         blocks + scratch -- within meta['vmem_budget_bytes']
-                         (default 16 MiB, the v5e per-core VMEM)
+                         blocks + scratch -- within the per-target VMEM
+                         budget table (``VMEM_BUDGETS``: v4/v5e/v5p/v6e),
+                         selected via meta['vmem_target'] (default v5e =
+                         16 MiB); meta['vmem_budget_bytes'] overrides
+                         the table for one-off runs
   pallas-pad-coverage    each registry probe at non-divisible extents
                          produced the contract output shapes/dtypes
 
@@ -37,7 +40,37 @@ from jax.experimental import pallas as pl
 
 from repro.analysis.rules import ProgramContext, RuleSet
 
-VMEM_BUDGET_BYTES = 16 * 1024 * 1024      # TPU v5e VMEM per core
+# Per-target VMEM lint budgets (bytes per core). Conservative figures:
+# v5e carries ~16 MiB of VMEM per core; the larger parts ship roughly
+# double, but the lint budget deliberately stays below the marketing
+# number so double-buffered blocks + scratch leave headroom for Mosaic's
+# own spills. Select with meta['vmem_target'] or the sweep's
+# ``--vmem-target`` flag; v5e stays the default (the strictest common
+# denominator), and an explicit meta['vmem_budget_bytes'] still wins.
+VMEM_BUDGETS = {
+    "v4": 32 * 1024 * 1024,
+    "v5e": 16 * 1024 * 1024,
+    "v5p": 32 * 1024 * 1024,
+    "v6e": 32 * 1024 * 1024,
+}
+DEFAULT_VMEM_TARGET = "v5e"
+VMEM_BUDGET_BYTES = VMEM_BUDGETS[DEFAULT_VMEM_TARGET]   # back-compat alias
+
+
+def vmem_budget(meta: Optional[dict] = None) -> int:
+    """Budget bytes for a lint run: explicit meta['vmem_budget_bytes'],
+    else the meta['vmem_target'] table entry, else the v5e default."""
+    meta = meta or {}
+    explicit = meta.get("vmem_budget_bytes")
+    if explicit is not None:
+        return int(explicit)
+    target = meta.get("vmem_target", DEFAULT_VMEM_TARGET)
+    try:
+        return VMEM_BUDGETS[target]
+    except KeyError:
+        raise KeyError(
+            f"unknown vmem_target {target!r}; known: "
+            f"{sorted(VMEM_BUDGETS)}") from None
 
 
 @dataclass
@@ -371,15 +404,17 @@ def _check_grid_blockspec(ctx: ProgramContext):
 
 @PALLAS_RULES.rule(
     "pallas-vmem-budget",
-    "double-buffered in/out blocks + scratch per grid step fit "
-    "meta['vmem_budget_bytes'] (default 16 MiB, TPU v5e per-core VMEM)")
+    "double-buffered in/out blocks + scratch per grid step fit the "
+    "meta['vmem_target'] VMEM budget (v4/v5e/v5p/v6e table; default "
+    "v5e = 16 MiB; meta['vmem_budget_bytes'] overrides)")
 def _check_vmem_budget(ctx: ProgramContext):
-    budget = ctx.meta.get("vmem_budget_bytes", VMEM_BUDGET_BYTES)
+    budget = vmem_budget(ctx.meta)
+    target = ctx.meta.get("vmem_target", DEFAULT_VMEM_TARGET)
     for rec in ctx.payload.records:
         est = estimate_vmem(rec)
         if est > budget:
-            yield (f"~{est / 2 ** 20:.1f} MiB per grid step > budget "
-                   f"{budget / 2 ** 20:.1f} MiB (grid {rec.grid})",
+            yield (f"~{est / 2 ** 20:.1f} MiB per grid step > {target} "
+                   f"budget {budget / 2 ** 20:.1f} MiB (grid {rec.grid})",
                    rec.name)
 
 

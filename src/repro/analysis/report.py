@@ -65,15 +65,22 @@ class ProgramAudit:
 @dataclass
 class Control:
     """A positive control: ``rule`` must have tripped on the broken
-    program for the report to pass."""
+    program for the report to pass. A control whose pass RAISED is
+    recorded with ``error`` set and counts as failed the same as one
+    that silently did not trip (a tripwire that crashes is just as dead
+    as one that never fires)."""
     name: str
     rule: str
     tripped: bool
     detail: str = ""
+    error: str = ""
 
     def to_json(self) -> dict:
-        return {"tripped": self.tripped, "rule": self.rule,
-                "detail": self.detail}
+        out = {"tripped": self.tripped, "rule": self.rule,
+               "detail": self.detail}
+        if self.error:
+            out["error"] = self.error
+        return out
 
 
 class AuditReport:
@@ -95,6 +102,27 @@ class AuditReport:
                       detail or "; ".join(f.message for f in findings[:2]))
         self.controls[name] = ctl
         return ctl
+
+    def add_control_error(self, name: str, rule: str,
+                          exc: BaseException) -> Control:
+        """Record a control whose pass raised: never tripped, and the
+        exception is preserved in the artifact for diagnosis."""
+        ctl = Control(name, rule, tripped=False,
+                      detail=f"control pass raised {type(exc).__name__}",
+                      error=repr(exc))
+        self.controls[name] = ctl
+        return ctl
+
+    def run_control(self, name: str, rule: str, fn,
+                    detail: str = "") -> Control:
+        """Run the control pass ``fn() -> findings`` and record it;
+        an exception inside the pass fails the control (and thus the
+        report) instead of aborting the whole sweep."""
+        try:
+            findings = fn()
+        except Exception as exc:     # noqa: BLE001 -- any crash = dead
+            return self.add_control_error(name, rule, exc)
+        return self.add_control(name, rule, findings, detail)
 
     @property
     def failed_programs(self) -> List[ProgramAudit]:

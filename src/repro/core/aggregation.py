@@ -92,6 +92,8 @@ def staleness_discount(n_k: Sequence[float],
     exact no-ops (the input counts are returned unscaled), which is what
     makes ``pipeline_depth=1`` reduce bit-level to the batched engine.
     """
+    from repro.analysis import host_cost
+    host_cost.tick("agg/weight_counts", len(n_k))
     n = np.asarray(n_k, dtype=np.float64)
     if staleness is None or gamma == 1.0:
         return n

@@ -82,6 +82,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import host_cost
 from repro.configs.base import FLConfig, LoRAConfig
 from repro.core.aggregation import Aggregator, weighted_avg
 from repro.core.energy import EnergyTrace
@@ -415,12 +416,14 @@ class FederatedLoRA:
         groups: Dict[int, List[int]] = {}
         for i, batches in enumerate(client_batches):
             groups.setdefault(len(batches), []).append(i)
+        host_cost.tick("server/train_groups", len(groups))
         group_factors = []
         loss_parts = []
         r_max = self.lora_cfg.r_max
         r_min = min(self.lora_cfg.rank_levels)
         for steps, idxs in sorted(groups.items()):
             members = idxs
+            host_cost.tick("server/train_stack_steps", steps * len(idxs))
             if sharded:
                 n_shards = self.mesh.shape["data"]
                 members = idxs + [-1] * ((-len(idxs)) % n_shards)
@@ -541,6 +544,7 @@ class FederatedLoRA:
         # group-order permutation of the client axis (ghosts: rank r_min,
         # zero samples, zero staleness, never present)
         members = [i for mem, _, _ in group_factors for i in mem]
+        host_cost.tick("server/agg_members", len(members))
         ranks_o = [ranks[i] if i >= 0 else r_min for i in members]
         n_k_o = [n_k[i] if i >= 0 else 0 for i in members]
         stal_o = (None if staleness is None else
@@ -562,6 +566,7 @@ class FederatedLoRA:
                 continue
             gb0, ga0 = global_factors[parent]
             buckets.setdefault((gb0.shape, ga0.shape), []).append(parent)
+        host_cost.tick("server/agg_buckets", len(buckets))
         for group in buckets.values():
             args = (
                 [[fg[p][0] for p in group] for _, _, fg in group_factors],
@@ -649,6 +654,7 @@ class FederatedLoRA:
         clients = self.registry.sample_round(fl.clients_per_round,
                                              self.rng,
                                              active=active).tolist()
+        host_cost.tick("server/plan_clients", len(clients))
         plan = RoundPlan(
             round=self._plan_idx, version=self.round_idx, clients=clients,
             ranks=[int(self.registry.ranks[c]) for c in clients],

@@ -6,6 +6,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.analysis import host_cost
 from repro.configs.base import FLConfig, LoRAConfig
 
 
@@ -41,9 +42,30 @@ class ClientRegistry:
         event) and return its id. Ids are append-only so plans and shards
         recorded before the join stay valid."""
         cid = self.num_clients
+        # np.append copies the whole (K,) rank vector -- an O(K) cost per
+        # JOIN event (not per round); the host-cost shim records it
+        host_cost.tick("registry/add_client")
         self.ranks = np.append(self.ranks, int(rank)).astype(int)
         self.shards.append(np.asarray(shard, dtype=np.int64))
         return cid
+
+    def inflate(self, total_clients: int,
+                rng: Optional[np.random.Generator] = None) -> None:
+        """Grow the registry to ``total_clients`` with synthetic clients
+        for scale testing: ranks drawn from the configured levels, data
+        shards ALIASED round-robin onto the existing shard arrays (no
+        data copies -- a million-client registry stays a rank vector plus
+        a list of references). Ids are append-only, so existing plans and
+        the rng sampling stream stay valid."""
+        k = self.num_clients
+        extra = int(total_clients) - k
+        if extra <= 0:
+            return
+        rng = rng or np.random.default_rng(0)
+        new_ranks = rng.choice(list(self.rank_levels), size=extra)
+        self.ranks = np.concatenate(
+            [self.ranks, new_ranks.astype(int)])
+        self.shards.extend(self.shards[i % k] for i in range(extra))
 
     def sample_round(self, m: int, rng: np.random.Generator,
                      active: Optional[np.ndarray] = None) -> np.ndarray:
@@ -55,8 +77,10 @@ class ClientRegistry:
         keeps the exact historical rng consumption, so scenarios without
         lifecycle events reproduce cadence-engine sampling bit-for-bit."""
         if active is None:
+            host_cost.tick("registry/sample", m)
             return rng.choice(self.num_clients, size=m, replace=False)
         active = np.asarray(active)
+        host_cost.tick("registry/active_pool", active.size)
         m = min(int(m), active.size)
         return active[rng.choice(active.size, size=m, replace=False)]
 

@@ -35,7 +35,23 @@ _COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*\S.*\{$")
 _OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
 _SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
 _TRIP = re.compile(r'known_trip_count[^\d]*(\d+)')
-_CALLSITE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_CALLSITE = re.compile(
+    r"(?:body|condition|to_apply|calls|true_computation|"
+    r"false_computation)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_BRANCH_NAME = re.compile(r"%?([\w\.\-]+)")
+
+
+def callee_names(rest: str) -> List[str]:
+    """Every computation referenced by an op line's attributes: scalar
+    callsites (``body=`` / ``to_apply=`` / ...) plus ``conditional``
+    branch lists (``branch_computations={%a, %b}``, which single-name
+    regexes miss -- the bug that hid Pallas grid-loop dots from the flop
+    count at large shapes)."""
+    names = [m.group(1) for m in _CALLSITE.finditer(rest)]
+    for bl in _BRANCHES.finditer(rest):
+        names.extend(m.group(1) for m in _BRANCH_NAME.finditer(bl.group(1)))
+    return names
 
 
 def _shape_list(type_str: str) -> List[Tuple[str, int]]:
@@ -117,14 +133,13 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
             tm = _TRIP.search(rhs)
             if tm:
                 trip = int(tm.group(1))
-            for cs in _CALLSITE.finditer(rhs):
-                comps  # noqa
-                current.calls.append((cs.group(1), "while", trip))
+            for callee in callee_names(rhs):
+                current.calls.append((callee, "while", trip))
         elif opcode in ("fusion", "call", "conditional", "custom-call",
                         "reduce", "sort", "map", "scatter", "select-and-scatter",
                         "reduce-window"):
-            for cs in _CALLSITE.finditer(rhs):
-                current.calls.append((cs.group(1), opcode, 1))
+            for callee in callee_names(rhs):
+                current.calls.append((callee, opcode, 1))
     comps["__entry__"] = comps.get(entry_name, Computation("none"))
     comps["__entry_name__"] = entry_name  # type: ignore
     return comps

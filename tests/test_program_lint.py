@@ -211,6 +211,39 @@ class TestPallasRules:
         assert "pallas-grid-blockspec" in rules
         assert "pallas-vmem-budget" in rules
 
+    def test_vmem_budget_table(self):
+        """Per-target VMEM budgets (satellite: the hard-coded v5e 16 MiB
+        became a table): default is v5e, meta selects a target, explicit
+        bytes win, unknown targets fail loudly with the known set."""
+        assert pallas_lint.vmem_budget() == \
+            pallas_lint.VMEM_BUDGETS["v5e"] == 16 * 2 ** 20
+        assert pallas_lint.VMEM_BUDGET_BYTES == \
+            pallas_lint.VMEM_BUDGETS["v5e"]     # back-compat alias
+        for target, budget in pallas_lint.VMEM_BUDGETS.items():
+            assert pallas_lint.vmem_budget(
+                {"vmem_target": target}) == budget
+        assert pallas_lint.VMEM_BUDGETS["v5p"] > \
+            pallas_lint.VMEM_BUDGETS["v5e"]
+        assert pallas_lint.vmem_budget(
+            {"vmem_target": "v4", "vmem_budget_bytes": 123}) == 123
+        with pytest.raises(KeyError, match="v5e"):
+            pallas_lint.vmem_budget({"vmem_target": "v9"})
+
+    def test_vmem_rule_respects_selected_target(self):
+        """The budget rule gates against the SELECTED budget, both
+        directions: one byte under the control's footprint trips, one
+        byte over clears (every table target is below it, so the control
+        keeps tripping v4 through v6e)."""
+        ctl = pallas_lint.oversized_control()
+        peak = max(pallas_lint.estimate_vmem(r) for r in ctl.records)
+        assert peak > max(pallas_lint.VMEM_BUDGETS.values())
+        trips = pallas_lint.lint_kernels(
+            ctl, "ctl", {"vmem_budget_bytes": peak - 1})
+        clear = pallas_lint.lint_kernels(
+            ctl, "ctl", {"vmem_budget_bytes": peak + 1})
+        assert any(f.rule == "pallas-vmem-budget" for f in trips)
+        assert not any(f.rule == "pallas-vmem-budget" for f in clear)
+
 
 class TestDispatchRules:
     def test_steady_state_clean(self):

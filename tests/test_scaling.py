@@ -1,0 +1,185 @@
+"""Unit tests for ``analysis/complexity`` (the complexity certifier's
+contract layer) in both directions: well-behaved cost series pass their
+contracts AND injected regressions flip them red -- a scaling gate whose
+contracts cannot fire would wave every quadratic blow-up through. Also
+covers the report's control-error semantics (a control pass that RAISES
+fails the report like one that silently fails to trip) and the shared
+lowering cache.
+"""
+import pytest
+
+from repro.analysis import complexity
+from repro.analysis.complexity import (Contract, Measurement, ScalingRow,
+                                       dense_control_contracts,
+                                       evaluate_row, fit_slope)
+from repro.analysis.report import AuditReport
+
+
+def _row(backend, growth, engine="batched", method="raflora",
+         metric="dot_flops", axis="dn", ladder=(128, 256, 512)):
+    """Synthetic row whose ``metric`` grows as x**growth along ``axis``."""
+    meas = [Measurement(axis, float(x), {metric: float(x) ** growth})
+            for x in ladder]
+    return ScalingRow(program=f"{engine}/{method}/{backend}",
+                      engine=engine, method=method, backend=backend,
+                      measurements=meas)
+
+
+class TestFitSlope:
+    def test_exact_powers(self):
+        xs = (128, 256, 512)
+        assert fit_slope(xs, [x ** 2 for x in xs]) == pytest.approx(2.0)
+        assert fit_slope(xs, [7 * x for x in xs]) == pytest.approx(1.0)
+        assert fit_slope(xs, [3.0, 3.0, 3.0]) == pytest.approx(0.0)
+
+    def test_all_zero_series_is_constant(self):
+        assert fit_slope((2, 4, 8), (0.0, 0.0, 0.0)) == 0.0
+
+    def test_appearing_cost_blows_up_not_under(self):
+        """A metric that goes 0 -> positive along the ladder must fit a
+        huge positive slope (trips any max contract), never a small one."""
+        s = fit_slope((128, 256), (0.0, 1e6))
+        assert s > 10.0
+
+    def test_degenerate_inputs_raise(self):
+        with pytest.raises(ValueError):
+            fit_slope((128,), (1.0,))
+        with pytest.raises(ValueError):
+            fit_slope((128, 128), (1.0, 2.0))
+
+
+class TestContracts:
+    def test_applies_selectors(self):
+        c = Contract("c", "dot_flops", "dn", max_slope=1.0,
+                     engines=("batched",), backends=("kernel",))
+        assert c.applies("batched", "anything", "kernel")
+        assert not c.applies("sharded", "anything", "kernel")
+        assert not c.applies("batched", "anything", "dense")
+        wide = Contract("w", "dot_flops", "dn", max_slope=1.0)
+        assert wide.applies("x", "y", "z")
+
+    def test_linear_low_rank_row_passes(self):
+        assert evaluate_row(_row("factored", growth=1.0)) == []
+        assert evaluate_row(_row("kernel", growth=1.0)) == []
+
+    def test_injected_regression_flips_kernel_contract_red(self):
+        """THE acceptance tripwire: a kernel-path program whose flops go
+        quadratic along dn must produce a scaling-contract finding."""
+        findings = evaluate_row(_row("kernel", growth=2.0))
+        assert findings, "quadratic kernel row slid under the contracts"
+        assert all(f.rule == "scaling-contract" for f in findings)
+        assert any("agg-flops-linear-dn" in f.message for f in findings)
+
+    def test_min_slope_contract_catches_dead_measurement(self):
+        """dense-cert: a dense row that stops looking quadratic means the
+        measurement pipeline broke, and must be flagged."""
+        flat = _row("dense", growth=0.0)
+        findings = evaluate_row(flat)
+        assert any("dense-cert-flops" in f.message for f in findings)
+        quad = _row("dense", growth=2.0)
+        assert not any("dense-cert" in f.message
+                       for f in evaluate_row(quad))
+
+    def test_unmeasured_axis_is_not_a_violation(self):
+        row = _row("kernel", growth=1.0, axis="dn")
+        # no "r"/"m" measurements: their contracts must stay silent
+        assert evaluate_row(row) == []
+
+    def test_host_registry_contract_both_directions(self):
+        flat = _row("-", growth=0.0, engine="host", method="round",
+                    metric="host_loop_iters", axis="registry",
+                    ladder=(1000, 10000, 100000))
+        assert not any("host-registry-iters" in f.message
+                       for f in evaluate_row(flat))
+        linear = _row("-", growth=1.0, engine="host", method="round",
+                      metric="host_loop_iters", axis="registry",
+                      ladder=(1000, 10000, 100000))
+        assert any("host-registry-iters" in f.message
+                   for f in evaluate_row(linear))
+
+
+class TestDenseControlContracts:
+    def test_retargeted_at_dense_and_trip_on_quadratic(self):
+        ctl = dense_control_contracts()
+        assert ctl, "no control contracts derived"
+        assert all(c.backends == ("dense",) for c in ctl)
+        assert all(c.name.endswith("@dense-control") for c in ctl)
+        findings = evaluate_row(_row("dense", growth=2.0), ctl)
+        assert findings                  # dense quadratic trips them
+        # a linear dense row slides under: that is what "dead control"
+        # means, and the report layer must then fail the sweep
+        assert evaluate_row(_row("dense", growth=1.0), ctl) == []
+
+    def test_report_control_semantics_both_directions(self):
+        rep = AuditReport()
+        rep.run_control("live", "scaling-contract",
+                        lambda: evaluate_row(_row("dense", 2.0),
+                                             dense_control_contracts()))
+        assert rep.controls["live"].tripped and rep.ok
+        rep2 = AuditReport()
+        rep2.run_control("dead", "scaling-contract",
+                         lambda: evaluate_row(_row("dense", 1.0),
+                                              dense_control_contracts()))
+        assert not rep2.controls["dead"].tripped and not rep2.ok
+
+    def test_raising_control_fails_report(self):
+        """Satellite 3: a control whose pass crashes is recorded with the
+        exception and fails the report -- both directions, including the
+        artifact field."""
+        rep = AuditReport()
+
+        def boom():
+            raise RuntimeError("tripwire exploded")
+
+        ctl = rep.run_control("crashy", "scaling-contract", boom)
+        assert not ctl.tripped and not rep.ok
+        assert "RuntimeError" in ctl.error
+        assert rep.to_json()["controls"]["crashy"]["error"]
+        ok = rep.to_json()["controls"]  # non-error control omits the key
+        rep.run_control("fine", "scaling-contract",
+                        lambda: evaluate_row(_row("kernel", 2.0)))
+        assert "error" not in rep.to_json()["controls"]["fine"]
+
+
+@pytest.mark.slow
+class TestRealPrograms:
+    """Compiled-program direction of the acceptance tripwire."""
+
+    def _real_row(self, backend, label):
+        from repro.analysis.lowering import ProgramPoint, lower_program
+        meas = []
+        for s in (128, 256):
+            pt = ProgramPoint(engine="batched", method="raflora",
+                              backend=backend, d=s, n=s, rank_levels=(8,),
+                              m_per_group=2, p_bucket=1)
+            meas.append(Measurement(
+                "dn", float(s),
+                complexity.device_costs(lower_program(pt))))
+        return ScalingRow(program=f"batched/raflora/{label}",
+                          engine="batched", method="raflora",
+                          backend=label, measurements=meas)
+
+    def test_genuine_kernel_program_passes(self):
+        assert evaluate_row(self._real_row("kernel", "kernel")) == []
+
+    def test_dense_program_mislabeled_kernel_flips_red(self):
+        """Injected regression on REAL HLO: swap the dense backend into
+        the kernel-labeled row (exactly what a bad backend dispatch would
+        produce) -- the dn contracts must catch the quadratic programs."""
+        findings = evaluate_row(self._real_row("dense", "kernel"))
+        assert any("agg-flops-linear-dn" in f.message for f in findings)
+        assert any("agg-live-linear-dn" in f.message for f in findings)
+
+    def test_lowering_cache_shares_entries(self):
+        from repro.analysis import lowering
+        pt = lowering.ProgramPoint(engine="batched", method="raflora",
+                                   backend="kernel", d=128, n=128,
+                                   rank_levels=(8,), m_per_group=2,
+                                   p_bucket=1)
+        before = lowering.cache_info()["entries"]
+        a = lowering.lower_program(pt)
+        after_first = lowering.cache_info()["entries"]
+        b = lowering.lower_program(pt.scaled())    # identical point
+        assert a is b
+        assert lowering.cache_info()["entries"] == after_first
+        assert a.payload is b.payload              # parsed once, reused

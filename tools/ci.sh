@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI entry point: deterministic, offline, CPU-pinned test tiers.
 #
-#   tools/ci.sh              # tier-1: the full suite (ROADMAP "Tier-1 verify")
+#   tools/ci.sh              # tier-1: the full suite (ROADMAP "Tier-1
+#                            # verify") followed by the full certify sweep
 #   tools/ci.sh smoke        # fast tier: skips the slow federated integration
 #                            # and dry-run modules plus everything marked
 #                            # @pytest.mark.slow (~seconds vs ~minutes)
@@ -25,6 +26,17 @@
 #                            # every engine x backend x method program plus
 #                            # positive controls, written to the tracked
 #                            # AUDIT_program_lint.json at the repo root
+#   tools/ci.sh certify      # complexity-certifier sweep (DESIGN.md §9):
+#                            # scaling exponents fitted over the geometric
+#                            # size ladders and gated against the contract
+#                            # catalog, written to the tracked
+#                            # AUDIT_scaling.json at the repo root
+#   tools/ci.sh lint-fast    # smoke-tier static analysis: the lint sweep
+#                            # (dispatch audit skipped) + the certifier on
+#                            # reduced ladders, sharing one in-process
+#                            # lowering cache; writes to TEMP paths so the
+#                            # tracked artifacts never churn. Also run as
+#                            # part of `smoke`.
 #
 # JAX_PLATFORMS=cpu keeps runs identical on machines that also have
 # accelerators; PYTHONHASHSEED pins dict/hash iteration for determinism.
@@ -42,10 +54,12 @@ tier="${1:-tier1}"
 
 case "$tier" in
   tier1)
-    exec python -m pytest -x -q
+    python -m pytest -x -q
+    exec "$0" certify
     ;;
   smoke)
-    exec python -m pytest -x -q -m "not slow" -k "not federation and not dryrun and not sharded_engine and not kernel_engines"
+    python -m pytest -x -q -m "not slow" -k "not federation and not dryrun and not sharded_engine and not kernel_engines"
+    exec "$0" lint-fast
     ;;
   bench)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
@@ -77,8 +91,20 @@ case "$tier" in
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python tools/lint_programs.py
     ;;
+  certify)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    exec python tools/certify_scaling.py
+    ;;
+  lint-fast)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    scratch="$(mktemp -d /tmp/lint_fast.XXXXXX)"
+    trap 'rm -rf "$scratch"' EXIT
+    python tools/certify_scaling.py --fast --with-lint --lint-skip-dispatch \
+      --out "$scratch/AUDIT_scaling.json" \
+      --lint-out "$scratch/AUDIT_program_lint.json"
+    ;;
   *)
-    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|shard-smoke|kernel-smoke|lint]" >&2
+    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|shard-smoke|kernel-smoke|lint|certify|lint-fast]" >&2
     exit 2
     ;;
 esac

@@ -4,7 +4,7 @@ the engine x backend x METHODS matrix and write the tracked
 ``AUDIT_program_lint.json``.
 
     PYTHONPATH=src python tools/lint_programs.py [--out PATH]
-        [--skip-dispatch] [--verbose]
+        [--skip-dispatch] [--vmem-target v5e] [--verbose]
 
 Matrix (small shapes -- the rules are scale-free, chosen so every legal
 low-rank stack stays strictly below the (d, n) materialization bar):
@@ -21,8 +21,15 @@ low-rank stack stays strictly below the (d, n) materialization bar):
             path entry points; pallas_lint over the kernel registry;
             dispatch_audit over a multi-round federated run per engine
 
+All lowering goes through the shared ``repro.analysis.lowering`` cache:
+each of the matrix programs is compiled ONCE per process and its parsed
+payload is reused by the lint pass, the collective-parity pass and (when
+run in the same process, ``tools/certify_scaling.py --with-lint``) the
+complexity certifier.
+
 Positive controls (deliberately broken programs; the sweep FAILS if any
-control does NOT trip -- dead tripwires are treated as regressions):
+control does NOT trip -- dead tripwires are treated as regressions, and
+a control pass that RAISES is recorded as failed the same way):
 dense-backend materialization, an injected ``jax.debug.callback``, a
 compiled host-callback custom-call, a bf16 program with f32 upcasts, an
 oversized fabricated BlockSpec, and a shape-varying round sequence.
@@ -51,9 +58,10 @@ ASYNC_DEPTH = 2
 DISPATCH_ROUNDS, DISPATCH_WARMUP = 6, 2
 MAX_EAGER_PER_ROUND = 8         # measured ~1; generous headroom
 
-AVG_METHODS = ("fedavg", "hetlora", "ffa", "flora")
-SVD_METHODS = ("flexlora", "raflora")
-BACKENDS = ("dense", "factored", "kernel")
+from repro.analysis.lowering import (AVG_METHODS, BACKENDS, ENGINES,
+                                     ProgramPoint, SVD_METHODS,
+                                     _grouped_avals, cache_info,
+                                     lower_program)
 
 _SDS = jax.ShapeDtypeStruct
 
@@ -77,10 +85,13 @@ def _res_leaves(res):
                  if x is not None)
 
 
-def _warg_for(method: str, m: int):
-    """Weight-argument aval: (M,) for the avg family, omega (M, r_max)
-    for the SVD family."""
-    return _f32(m) if method in AVG_METHODS else _f32(m, R_MAX)
+def _lint_point(engine: str, method: str, backend: str) -> ProgramPoint:
+    """The PR-6 lint matrix shapes as a cacheable ProgramPoint."""
+    return ProgramPoint(
+        engine=engine, method=method, backend=backend, d=D, n=N,
+        rank_levels=RANK_LEVELS, m_per_group=M_PER_GROUP,
+        p_bucket=P_BUCKET, depth=ASYNC_DEPTH if engine == "async" else 1,
+        shards=0)
 
 
 def _hlo_meta(method: str, backend: str) -> dict:
@@ -121,100 +132,34 @@ def _sharded_meta(method: str, backend: str, n_dev: int) -> dict:
     return meta
 
 
-def _stacked_avals(method: str, with_fallback: bool):
-    m = M_PER_GROUP * len(RANK_LEVELS)
-    bs, as_ = _f32(m, D, R_MAX), _f32(m, R_MAX, N)
-    gb, ga = _f32(D, R_MAX), _f32(R_MAX, N)
-    fb = _f32(R_MAX) if with_fallback else None
-    return bs, as_, _warg_for(method, m), gb, ga, fb
-
-
-def _grouped_avals(method: str, with_fallback: bool, depth: int = 1):
-    group_bs, group_as = [], []
-    m = 0
-    for r in RANK_LEVELS:
-        g = M_PER_GROUP * depth
-        m += g
-        group_bs.append(tuple(_f32(g, D, r) for _ in range(P_BUCKET)))
-        group_as.append(tuple(_f32(g, r, N) for _ in range(P_BUCKET)))
-    gbs = tuple(_f32(D, R_MAX) for _ in range(P_BUCKET))
-    gas = tuple(_f32(R_MAX, N) for _ in range(P_BUCKET))
-    fb = _f32(R_MAX) if with_fallback else None
-    return (tuple(group_bs), tuple(group_as), _warg_for(method, m),
-            gbs, gas, fb)
-
-
-def _lower_engine(engine: str, method: str, backend: str):
-    """Optimized HLO of the engine's per-bucket aggregation program."""
-    from repro.core import aggregation
-    fallback = method == "raflora"
-    if engine == "sequential":
-        bs, as_, warg, gb, ga, fb = _stacked_avals(method, fallback)
-        low = aggregation._stacked_core.lower(
-            bs, as_, warg, gb, ga, fb, r_max=R_MAX, backend=backend,
-            method=method)
-    elif engine in ("batched", "async", "event"):
-        # async consumes depth x M buffered clients; the event fire path
-        # dispatches the SAME grouped program (present mask = omega data)
-        depth = ASYNC_DEPTH if engine == "async" else 1
-        gbs_, gas_, warg, gbs, gas, fb = _grouped_avals(method, fallback,
-                                                        depth)
-        low = aggregation._grouped_core.lower(
-            gbs_, gas_, warg, gbs, gas, fb, r_max=R_MAX, backend=backend,
-            method=method)
-    elif engine == "sharded":
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.launch.mesh import make_fl_mesh
-        mesh = make_fl_mesh()
-        n_dev = mesh.shape["data"]
-        cl = NamedSharding(mesh, P("data"))
-        group_bs, group_as, group_w = [], [], []
-        for r in RANK_LEVELS:
-            group_bs.append((_SDS((n_dev, D, r), jnp.float32,
-                                  sharding=cl),))
-            group_as.append((_SDS((n_dev, r, N), jnp.float32,
-                                  sharding=cl),))
-            group_w.append(_SDS(
-                (n_dev,) + (() if method in AVG_METHODS else (R_MAX,)),
-                jnp.float32, sharding=cl))
-        fb = _f32(R_MAX) if fallback else None
-        gbs = tuple(_f32(D, R_MAX) for _ in range(1))
-        gas = tuple(_f32(R_MAX, N) for _ in range(1))
-        fn = aggregation.sharded_grouped_fn(mesh, R_MAX, backend, method)
-        low = fn.lower(tuple(group_bs), tuple(group_as), tuple(group_w),
-                       gbs, gas, fb)
-    else:
-        raise ValueError(engine)
-    return low.compile().as_text()
-
-
 def _hlo_sweep(report, verbose):
     from repro.analysis import hlo_lint
     from repro.analysis.report import ProgramAudit
     n_dev = jax.device_count()
     rows = []
-    for engine in ("sequential", "batched", "async", "event", "sharded"):
+    for engine in ENGINES:
         for method in AVG_METHODS:
             rows.append((engine, method, "-"))
         for method in SVD_METHODS:
             for backend in BACKENDS:
                 rows.append((engine, method, backend))
     dense_controls = []
-    parity_texts = {}
+    parity_stats = {}
     for engine, method, backend in rows:
         name = f"{engine}/{method}/{backend}"
         be = backend if backend != "-" else "factored"
-        text = _lower_engine(engine, method, be)
+        lowered = lower_program(_lint_point(engine, method, be))
         meta = (_sharded_meta(method, be, n_dev) if engine == "sharded"
                 else _hlo_meta(method, be))
-        findings, payload = hlo_lint.lint_hlo(text, name, meta)
+        findings, payload = hlo_lint.lint_hlo(lowered.text, name, meta,
+                                              payload=lowered.payload)
         stats = {"collective_counts": {k: int(v) for k, v in
                                        payload.stats.collective_counts
                                        .items()},
                  "collective_bytes": int(
                      payload.stats.total_collective_bytes)}
         if method in SVD_METHODS and backend in ("factored", "kernel"):
-            parity_texts[(engine, method, backend)] = text
+            parity_stats[(engine, method, backend)] = payload.stats
         if method in SVD_METHODS and backend == "dense":
             # the dense backend MUST trip the materialization rule: it is
             # the standing positive control that the tripwire is live
@@ -235,14 +180,15 @@ def _hlo_sweep(report, verbose):
         "dense-materialization", "hlo-materialization", dense_controls,
         f"{len(dense_controls)} (d, n)-scale arrays across dense rows")
     # kernel == factored collective parity per engine (one source of truth
-    # for the byte accounting fl_dryrun used to duplicate)
+    # for the byte accounting fl_dryrun used to duplicate) -- runs on the
+    # CACHED walker stats, no re-parse
     parity = []
-    for engine in ("sequential", "batched", "async", "event", "sharded"):
+    for engine in ENGINES:
         for method in SVD_METHODS:
-            fa = parity_texts[(engine, method, "factored")]
-            ke = parity_texts[(engine, method, "kernel")]
-            parity.extend(hlo_lint.collective_parity(
-                fa, ke, label_a="factored", label_b="kernel",
+            parity.extend(hlo_lint.collective_parity_stats(
+                parity_stats[(engine, method, "factored")],
+                parity_stats[(engine, method, "kernel")],
+                label_a="factored", label_b="kernel",
                 program=f"{engine}/{method}/parity"))
     report.add(ProgramAudit("parity/kernel-vs-factored", "hlo", parity,
                             {"pairs": 10}))
@@ -253,7 +199,6 @@ def _hlo_sweep(report, verbose):
 def _jaxpr_entry_points(exp):
     """(name, jaxpr) for the round-path entry points of ISSUE 6."""
     from repro.analysis import jaxpr_lint
-    from repro.core import aggregation
     from repro.core.svd import svd_realloc_gram
     server = exp.server
     out = []
@@ -280,7 +225,8 @@ def _jaxpr_entry_points(exp):
         lambda b_, a_: _res_leaves(
             agg.aggregate_stack(b_, a_, ranks, n_k)),
         bs, as_)))
-    gbs_, gas_, _, gbs, gas, _ = _grouped_avals("raflora", False)
+    gbs_, gas_, _, gbs, gas, _ = _grouped_avals(
+        _lint_point("batched", "raflora", "factored"), False)
     out.append(("jaxpr/aggregate_grouped", jaxpr_lint.trace(
         lambda b_, a_: _res_leaves(
             agg.aggregate_grouped(b_, a_, ranks, n_k, global_bs=gbs,
@@ -315,20 +261,23 @@ def _jaxpr_sweep(report, exp, verbose):
         print(f"[jxpr] {name:28s} {'ok' if audit.ok else 'FAIL'}")
 
     # control: an injected debug callback on the round path must trip
-    def poisoned(x):
-        jax.debug.callback(lambda v: None, x)
-        return x * 2.0
+    def poisoned_pass():
+        def poisoned(x):
+            jax.debug.callback(lambda v: None, x)
+            return x * 2.0
+        return jaxpr_lint.lint_jaxpr(jaxpr_lint.trace(poisoned, _f32(4)),
+                                     "control/jaxpr-callback")
 
-    ctl = jaxpr_lint.lint_jaxpr(jaxpr_lint.trace(poisoned, _f32(4)),
-                                "control/jaxpr-callback")
-    report.add_control("injected-debug-callback", "jaxpr-callback", ctl)
+    report.run_control("injected-debug-callback", "jaxpr-callback",
+                       poisoned_pass)
 
 
-def _pallas_sweep(report, verbose):
+def _pallas_sweep(report, verbose, vmem_meta):
     from repro.analysis import pallas_lint
     from repro.analysis.report import ProgramAudit
     progs = pallas_lint.collect_registry()
-    findings = pallas_lint.lint_kernels(progs, "pallas/registry")
+    findings = pallas_lint.lint_kernels(progs, "pallas/registry",
+                                        vmem_meta)
     stats = {
         "kernels": sorted({r.name for r in progs.records}),
         "launches": len(progs.records),
@@ -337,6 +286,7 @@ def _pallas_sweep(report, verbose):
         "max_vmem_bytes": max(
             (pallas_lint.estimate_vmem(r) for r in progs.records),
             default=0),
+        "vmem_budget_bytes": pallas_lint.vmem_budget(vmem_meta),
     }
     audit = ProgramAudit("pallas/registry", "pallas", findings, stats)
     report.add(audit)
@@ -347,11 +297,16 @@ def _pallas_sweep(report, verbose):
           f"{len(stats['kernels'])} kernels, max VMEM "
           f"{stats['max_vmem_bytes'] / 2 ** 20:.2f} MiB "
           f"{'ok' if audit.ok else 'FAIL'}")
-    ctl = pallas_lint.lint_kernels(pallas_lint.oversized_control(),
-                                   "control/pallas-oversized")
-    report.add_control("oversized-blockspec", "pallas-vmem-budget", ctl)
-    report.add_control("blockspec-out-of-bounds", "pallas-grid-blockspec",
-                       ctl)
+
+    def oversized_pass():
+        return pallas_lint.lint_kernels(pallas_lint.oversized_control(),
+                                        "control/pallas-oversized",
+                                        vmem_meta)
+
+    report.run_control("oversized-blockspec", "pallas-vmem-budget",
+                       oversized_pass)
+    report.run_control("blockspec-out-of-bounds", "pallas-grid-blockspec",
+                       oversized_pass)
 
 
 def _build_tiny_experiment(engine: str, depth: int = 1):
@@ -395,16 +350,19 @@ def _dispatch_sweep(report, exp_batched, verbose):
               f"{'ok' if audit.ok else 'FAIL'}")
 
     # control: shape-varying steady-state rounds MUST trip the recompiler
-    f = jax.jit(lambda x: (x * 2.0).sum())
-    mon = dispatch_audit.DispatchMonitor()
-    with mon:
-        for r in range(4):
-            np.asarray(f(jnp.ones((8 + r,))))
-            mon.mark(f"round{r}")
-    ctl = dispatch_audit.lint_dispatch(mon, "control/shape-varying",
-                                       {"warmup": 1})
-    report.add_control("shape-varying-round",
-                       "dispatch-steady-state-recompile", ctl)
+    def shape_varying_pass():
+        f = jax.jit(lambda x: (x * 2.0).sum())
+        mon = dispatch_audit.DispatchMonitor()
+        with mon:
+            for r in range(4):
+                np.asarray(f(jnp.ones((8 + r,))))
+                mon.mark(f"round{r}")
+        return dispatch_audit.lint_dispatch(mon, "control/shape-varying",
+                                            {"warmup": 1})
+
+    report.run_control("shape-varying-round",
+                       "dispatch-steady-state-recompile",
+                       shape_varying_pass)
 
 
 def _hlo_controls(report):
@@ -412,32 +370,45 @@ def _hlo_controls(report):
     with a host callback and a bf16 program with f32 upcasts."""
     from repro.analysis import hlo_lint
 
-    def with_callback(x):
-        return jax.pure_callback(
-            lambda v: np.asarray(v), jax.ShapeDtypeStruct(x.shape, x.dtype),
-            x) + 1.0
+    def callback_pass():
+        def with_callback(x):
+            return jax.pure_callback(
+                lambda v: np.asarray(v),
+                jax.ShapeDtypeStruct(x.shape, x.dtype), x) + 1.0
 
-    text = jax.jit(with_callback).lower(_f32(8)).compile().as_text()
-    findings, _ = hlo_lint.lint_hlo(text, "control/host-callback")
-    report.add_control("compiled-host-callback", "hlo-host-transfer",
-                       findings)
+        text = jax.jit(with_callback).lower(_f32(8)).compile().as_text()
+        findings, _ = hlo_lint.lint_hlo(text, "control/host-callback")
+        return findings
 
-    def bf16_matmul(x, w):
-        return x @ w
+    report.run_control("compiled-host-callback", "hlo-host-transfer",
+                       callback_pass)
 
-    b = jax.ShapeDtypeStruct((256, 256), jnp.bfloat16)
-    text = jax.jit(bf16_matmul).lower(b, b).compile().as_text()
-    findings, _ = hlo_lint.lint_hlo(
-        text, "control/bf16-upcast", {"bf16_min_elems": 256 * 256})
-    report.add_control("bf16-upcast", "hlo-dtype-upcast", findings)
+    def bf16_pass():
+        def bf16_matmul(x, w):
+            return x @ w
+
+        b = jax.ShapeDtypeStruct((256, 256), jnp.bfloat16)
+        text = jax.jit(bf16_matmul).lower(b, b).compile().as_text()
+        findings, _ = hlo_lint.lint_hlo(
+            text, "control/bf16-upcast", {"bf16_min_elems": 256 * 256})
+        return findings
+
+    report.run_control("bf16-upcast", "hlo-dtype-upcast", bf16_pass)
 
 
 def main(argv=None) -> int:
+    from repro.analysis.pallas_lint import DEFAULT_VMEM_TARGET, \
+        VMEM_BUDGETS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="AUDIT_program_lint.json")
     ap.add_argument("--skip-dispatch", action="store_true",
                     help="skip the multi-round dispatch audit (the only "
                          "pass that runs real rounds)")
+    ap.add_argument("--vmem-target", default=DEFAULT_VMEM_TARGET,
+                    choices=sorted(VMEM_BUDGETS),
+                    help="TPU generation whose VMEM budget gates the "
+                         "pallas pass (default %(default)s)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -446,9 +417,10 @@ def main(argv=None) -> int:
         "d": D, "n": N, "r_max": R_MAX, "rank_levels": list(RANK_LEVELS),
         "clients_per_group": M_PER_GROUP, "bucket_adapters": P_BUCKET,
         "async_depth": ASYNC_DEPTH, "devices": jax.device_count(),
-        "engines": ["sequential", "batched", "async", "event", "sharded"],
+        "engines": list(ENGINES),
         "avg_methods": list(AVG_METHODS), "svd_methods": list(SVD_METHODS),
         "backends": list(BACKENDS),
+        "vmem_target": args.vmem_target,
         "dispatch": {"rounds": DISPATCH_ROUNDS, "warmup": DISPATCH_WARMUP,
                      "max_eager_per_phase": MAX_EAGER_PER_ROUND},
     })
@@ -457,7 +429,7 @@ def main(argv=None) -> int:
     _hlo_controls(report)
     exp = _build_tiny_experiment("batched")
     _jaxpr_sweep(report, exp, args.verbose)
-    _pallas_sweep(report, args.verbose)
+    _pallas_sweep(report, args.verbose, {"vmem_target": args.vmem_target})
     if not args.skip_dispatch:
         _dispatch_sweep(report, exp, args.verbose)
 
@@ -465,14 +437,16 @@ def main(argv=None) -> int:
     s = report.summary()
     print(f"[lint] {s['programs']} programs, {s['errors']} errors, "
           f"{s['controls']} controls "
-          f"({len(s['controls_failed'])} dead) -> {args.out}")
+          f"({len(s['controls_failed'])} dead), "
+          f"{cache_info()['entries']} unique lowerings -> {args.out}")
     if not report.ok:
         for p in report.failed_programs:
             print(f"[lint] FAIL {p.program}: "
                   + "; ".join(str(f) for f in p.errors[:3]))
         for name in report.failed_controls:
-            print(f"[lint] DEAD CONTROL {name}: rule "
-                  f"{report.controls[name].rule} did not trip")
+            ctl = report.controls[name]
+            why = ctl.error or "did not trip"
+            print(f"[lint] DEAD CONTROL {name}: rule {ctl.rule} {why}")
         return 1
     print("[lint] OK")
     return 0
