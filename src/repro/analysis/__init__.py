@@ -18,6 +18,21 @@ auditor. Four passes share one rule-engine core:
 ``tools/lint_programs.py`` sweeps the engine x backend x METHODS matrix
 through all four and writes the tracked ``AUDIT_program_lint.json``;
 ``tools/ci.sh lint`` gates it.
+
+Two further passes verify the federated protocol itself (DESIGN.md §10):
+
+  protocol        exhaustive bounded-interleaving model checking of the
+                  event round path against the REAL scheduler/aggregation
+                  objects: exactly-once consumption, the ghost/present-
+                  mask weight rule, bounded staleness, cancellation, and
+                  checkpoint-cut replay at every reachable boundary
+  rng_lint        PRNG key-provenance dataflow over round-path jaxprs
+                  (key reuse, sample-then-derive) + host-determinism AST
+                  rules (unseeded default_rng, host-clock reads, seed
+                  collisions, set-order iteration)
+
+``tools/verify_protocol.py`` sweeps both and writes the tracked
+``AUDIT_protocol.json``; ``tools/ci.sh verify`` gates it in tier-1.
 """
 from repro.analysis.rules import (Finding, ProgramContext, Rule, RuleSet,
                                   SEV_ERROR, SEV_WARNING)

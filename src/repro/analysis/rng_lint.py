@@ -1,0 +1,363 @@
+"""RNG/determinism dataflow lint for the federated round path (DESIGN.md §10).
+
+Two passes over two layers of randomness:
+
+* **Key-provenance dataflow (kind "rng-flow")** -- traces a round-path
+  function to its jaxpr and tracks every PRNG key through the program:
+  ``random_wrap``/``random_unwrap`` alias (an old-style uint32 key and
+  its typed wrapping are ONE key), ``random_split``/``random_fold_in``
+  derive fresh keys, ``random_bits`` extracts entropy. The lint follows
+  keys across ``pjit``/call sub-jaxprs (inner invars unify with outer
+  operands), so `jax.random.normal(key)` consuming a key inside three
+  nested pjits still counts against the OUTER key. Rules: a key whose
+  entropy is extracted twice (the classic key-reuse correlation bug),
+  and a key both sampled-from and split/folded (the sample-then-derive
+  hazard: the derived stream overlaps the sample).
+
+* **Host determinism (kind "rng-host")** -- AST rules over round-path
+  source files: unseeded ``np.random.default_rng()`` (irreproducible
+  stream), host-clock reads (``time.time()`` & friends) on the
+  virtual-clock round path, two call sites constructing
+  ``np.random.SeedSequence`` entropy with the same shape (per-client
+  stream collision: both sites derive the SAME stream for a client),
+  and aggregation inputs iterated from a set (hash-order-sensitive
+  client iteration). Intentional uses carry a same-line waiver comment:
+  ``# host-clock: ok (<why>)`` / ``# rng: ok (<why>)``.
+
+Both passes feed the PR-6 rules/report engine; ``tools/verify_protocol.py``
+sweeps them (with positive controls) into ``AUDIT_protocol.json``.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.rules import Finding, ProgramContext, RuleSet
+
+# ---------------------------------------------------------------------------
+# key-provenance dataflow over jaxprs
+# ---------------------------------------------------------------------------
+
+_ALIAS_PRIMS = {"random_wrap", "random_unwrap"}
+_DERIVE_PRIMS = {"random_split", "random_fold_in"}
+_CONSUME_PRIMS = {"random_bits"}
+
+
+@dataclass
+class KeyRecord:
+    """One key identity (an alias class of jaxpr vars)."""
+    name: str
+    consumers: List[str] = field(default_factory=list)   # eqn paths
+    derivations: List[str] = field(default_factory=list)
+
+
+@dataclass
+class KeyFlowReport:
+    """Payload of the rng-flow pass: every key identity of one traced
+    round-path function, with where it was consumed and derived-from."""
+    keys: List[KeyRecord] = field(default_factory=list)
+    eqns: int = 0
+
+    def stats(self) -> dict:
+        return {"keys": len(self.keys), "eqns": self.eqns,
+                "consumptions": sum(len(k.consumers) for k in self.keys),
+                "derivations": sum(len(k.derivations) for k in self.keys)}
+
+
+def _is_var(v) -> bool:
+    """jaxpr Var (not a Literal -- Literals also carry ``aval`` and are
+    unhashable, so they can never be env keys)."""
+    return hasattr(v, "aval") and v.__class__.__name__ != "Literal"
+
+
+class _KeyFlow:
+    """Union-of-aliases key tracker walked over a (closed) jaxpr,
+    recursing into call-like sub-jaxprs with inner invars unified to the
+    outer operands."""
+
+    def __init__(self):
+        self.records: Dict[int, KeyRecord] = {}
+        self._next = 0
+        self.eqns = 0
+
+    def fresh(self, name: str) -> int:
+        kid = self._next
+        self._next += 1
+        self.records[kid] = KeyRecord(name=name)
+        return kid
+
+    def walk(self, jaxpr, env: Dict, path: str) -> None:
+        for i, eqn in enumerate(jaxpr.eqns):
+            self.eqns += 1
+            prim = eqn.primitive.name
+            here = f"{path}/{i}:{prim}"
+            op0 = eqn.invars[0] if eqn.invars else None
+
+            def rid(var, label):
+                """Key id of an operand var (fresh root if unseen)."""
+                if var is None or not _is_var(var):
+                    return None
+                if var not in env:
+                    env[var] = self.fresh(label)
+                return env[var]
+
+            if prim in _ALIAS_PRIMS:
+                env[eqn.outvars[0]] = rid(op0, f"{here}<-arg")
+            elif prim in _DERIVE_PRIMS:
+                kid = rid(op0, f"{here}<-arg")
+                if kid is not None:
+                    self.records[kid].derivations.append(here)
+                env[eqn.outvars[0]] = self.fresh(here)
+            elif prim in _CONSUME_PRIMS:
+                kid = rid(op0, f"{here}<-arg")
+                if kid is not None:
+                    self.records[kid].consumers.append(here)
+            else:
+                subs = _sub_jaxprs(eqn)
+                if subs:
+                    for sub in subs:
+                        inner = getattr(sub, "jaxpr", sub)
+                        sub_env = dict(env)
+                        # unify inner invars with outer operands (exact
+                        # for pjit/core_call; positional best-effort for
+                        # scan/while whose invars carry extra consts)
+                        for iv, ov in zip(inner.invars, eqn.invars):
+                            if _is_var(ov) and ov in env:
+                                sub_env[iv] = env[ov]
+                        self.walk(inner, sub_env, here)
+
+
+def _sub_jaxprs(eqn) -> List:
+    subs = []
+    for v in eqn.params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vals:
+            if hasattr(x, "eqns") or hasattr(x, "jaxpr"):
+                subs.append(x)
+    return subs
+
+
+def key_flow(fn, *args) -> KeyFlowReport:
+    """Trace ``fn(*args)`` and return its key-provenance report."""
+    closed = jax.make_jaxpr(fn)(*args)
+    flow = _KeyFlow()
+    env: Dict = {}
+    for i, var in enumerate(closed.jaxpr.invars):
+        env[var] = flow.fresh(f"arg{i}")
+    flow.walk(closed.jaxpr, env, "")
+    rep = KeyFlowReport(eqns=flow.eqns)
+    # only identities that ever touched the key machinery are keys
+    rep.keys = [r for r in flow.records.values()
+                if r.consumers or r.derivations]
+    return rep
+
+
+RNG_FLOW_RULES = RuleSet("rng-flow")
+
+
+@RNG_FLOW_RULES.rule(
+    "rng-key-reuse",
+    "a PRNG key's entropy is extracted by two or more samplers -- the "
+    "draws are correlated, not independent")
+def _check_key_reuse(ctx: ProgramContext):
+    rep: KeyFlowReport = ctx.payload
+    for k in rep.keys:
+        if len(k.consumers) >= 2:
+            yield (f"key {k.name} consumed {len(k.consumers)} times: "
+                   + ", ".join(k.consumers[:3]), k.consumers[1])
+
+
+@RNG_FLOW_RULES.rule(
+    "rng-sample-then-derive",
+    "a key is both sampled-from AND split/folded: the derived streams "
+    "overlap the sample's entropy; derive first, sample from children")
+def _check_sample_derive(ctx: ProgramContext):
+    rep: KeyFlowReport = ctx.payload
+    for k in rep.keys:
+        if k.consumers and k.derivations:
+            yield (f"key {k.name} sampled at {k.consumers[0]} and "
+                   f"derived at {k.derivations[0]}", k.derivations[0])
+
+
+def lint_key_flow(program: str, fn, *args,
+                  meta: Optional[dict] = None) -> Tuple[List[Finding], dict]:
+    rep = key_flow(fn, *args)
+    ctx = ProgramContext(program=program, kind="rng-flow", payload=rep,
+                         meta=meta or {})
+    return RNG_FLOW_RULES.run(ctx), rep.stats()
+
+
+# ---------------------------------------------------------------------------
+# host determinism rules (AST over round-path source)
+# ---------------------------------------------------------------------------
+
+_CLOCK_CALLS = {("time", "time"), ("time", "monotonic"),
+                ("time", "perf_counter"), ("datetime", "now"),
+                ("datetime", "utcnow")}
+
+
+@dataclass
+class HostSource:
+    """Payload of the rng-host pass: one parsed round-path source file."""
+    name: str
+    tree: ast.AST
+    lines: List[str]
+
+    def waived(self, lineno: int, tag: str) -> bool:
+        line = self.lines[lineno - 1] if lineno - 1 < len(self.lines) else ""
+        return f"# {tag}: ok" in line
+
+
+def parse_host_source(name: str, source: str) -> HostSource:
+    return HostSource(name=name, tree=ast.parse(source),
+                      lines=source.splitlines())
+
+
+def _dotted(node: ast.AST) -> Tuple[str, ...]:
+    """('np', 'random', 'default_rng')-style path of a call target."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return tuple(reversed(parts))
+
+
+RNG_HOST_RULES = RuleSet("rng-host")
+
+
+@RNG_HOST_RULES.rule(
+    "rng-unseeded-default-rng",
+    "np.random.default_rng() with no seed: the stream is irreproducible "
+    "-- derive it from a seeded SeedSequence (waiver: '# rng: ok')")
+def _check_unseeded(ctx: ProgramContext):
+    src: HostSource = ctx.payload
+    for node in ast.walk(src.tree):
+        if (isinstance(node, ast.Call) and not node.args and not node.keywords
+                and _dotted(node.func)[-2:] == ("random", "default_rng")
+                and not src.waived(node.lineno, "rng")):
+            yield ("unseeded np.random.default_rng()",
+                   f"{src.name}:{node.lineno}")
+
+
+@RNG_HOST_RULES.rule(
+    "rng-host-clock",
+    "host-clock read on the virtual-clock round path: times must come "
+    "from the event scheduler's clock (waiver: '# host-clock: ok')")
+def _check_host_clock(ctx: ProgramContext):
+    src: HostSource = ctx.payload
+    for node in ast.walk(src.tree):
+        if (isinstance(node, ast.Call)
+                and _dotted(node.func)[-2:] in _CLOCK_CALLS
+                and not src.waived(node.lineno, "host-clock")):
+            yield (f"host clock read {'.'.join(_dotted(node.func))}()",
+                   f"{src.name}:{node.lineno}")
+
+
+@RNG_HOST_RULES.rule(
+    "rng-seed-collision",
+    "two call sites build np.random.SeedSequence entropy of the same "
+    "shape: per-client streams from the two sites collide draw-for-draw "
+    "-- disambiguate with a distinct literal tag (waiver: '# rng: ok')")
+def _check_seed_collision(ctx: ProgramContext):
+    src: HostSource = ctx.payload
+    sites: Dict[Tuple, List[int]] = {}
+    for node in ast.walk(src.tree):
+        if not (isinstance(node, ast.Call)
+                and _dotted(node.func)[-1:] == ("SeedSequence",)
+                and node.args):
+            continue
+        ent = node.args[0]
+        if not isinstance(ent, (ast.List, ast.Tuple)):
+            continue
+        sig = tuple(("const", e.value) if isinstance(e, ast.Constant)
+                    else ("expr",) for e in ent.elts)
+        if not src.waived(node.lineno, "rng"):
+            sites.setdefault(sig, []).append(node.lineno)
+    for sig, linenos in sorted(sites.items()):
+        if len(linenos) > 1:
+            yield (f"SeedSequence entropy shape {sig} built at lines "
+                   f"{linenos}: same-client streams collide",
+                   f"{src.name}:{linenos[1]}")
+
+
+@RNG_HOST_RULES.rule(
+    "rng-order-sensitive-iteration",
+    "iteration directly over a set feeds hash-membership-history order "
+    "into round-path state -- iterate sorted(...) (waiver: '# rng: ok')")
+def _check_set_iteration(ctx: ProgramContext):
+    src: HostSource = ctx.payload
+
+    def is_set_expr(e):
+        return (isinstance(e, (ast.Set, ast.SetComp))
+                or (isinstance(e, ast.Call)
+                    and _dotted(e.func)[-1:] == ("set",))
+                or (isinstance(e, ast.BinOp)
+                    and isinstance(e.op, (ast.BitAnd, ast.BitOr, ast.Sub))
+                    and (is_set_expr(e.left) or is_set_expr(e.right))))
+
+    def hit(iter_expr, lineno):
+        if is_set_expr(iter_expr) and not src.waived(lineno, "rng"):
+            yield (f"iterating a set directly", f"{src.name}:{lineno}")
+
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.For):
+            yield from hit(node.iter, node.lineno)
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp,
+                               ast.DictComp, ast.SetComp)):
+            for gen in node.generators:
+                yield from hit(gen.iter, node.lineno)
+
+
+def lint_host_source(program: str, source: str,
+                     meta: Optional[dict] = None
+                     ) -> Tuple[List[Finding], dict]:
+    src = parse_host_source(program, source)
+    ctx = ProgramContext(program=program, kind="rng-host", payload=src,
+                         meta=meta or {})
+    n_nodes = sum(1 for _ in ast.walk(src.tree))
+    return RNG_HOST_RULES.run(ctx), {"ast_nodes": n_nodes,
+                                     "lines": len(src.lines)}
+
+
+# ---------------------------------------------------------------------------
+# deliberately-broken programs (positive controls for the sweep)
+# ---------------------------------------------------------------------------
+
+def broken_key_reuse(key):
+    """One key, two samplers: rng-key-reuse must trip."""
+    a = jax.random.normal(key, (2,))
+    b = jax.random.uniform(key, (2,))
+    return a + b
+
+
+BROKEN_HOST_CLOCK = (
+    "import time\n"
+    "def round_stats():\n"
+    "    t0 = time.time()\n"
+    "    return {'wall': time.time() - t0}\n"
+)
+
+BROKEN_UNSEEDED = (
+    "import numpy as np\n"
+    "def jitter():\n"
+    "    return np.random.default_rng().random()\n"
+)
+
+BROKEN_SEED_COLLISION = (
+    "import numpy as np\n"
+    "def latency_rng(seed, client):\n"
+    "    return np.random.default_rng(np.random.SeedSequence([seed, client]))\n"
+    "def batch_rng(seed, client):\n"
+    "    return np.random.default_rng(np.random.SeedSequence([seed, client]))\n"
+)
+
+BROKEN_SET_ITERATION = (
+    "import numpy as np\n"
+    "def aggregate(updates, clients):\n"
+    "    return np.mean([updates[c] for c in set(clients)], axis=0)\n"
+)

@@ -104,6 +104,28 @@ def staleness_discount(n_k: Sequence[float],
     return n * np.power(float(gamma), s)
 
 
+def cohort_weights(n_k: Sequence[float],
+                   staleness: Optional[Sequence[int]],
+                   present: Optional[Sequence[bool]],
+                   gamma: float = 1.0) -> np.ndarray:
+    """Normalized per-client aggregation weights of one buffered cohort.
+
+    The SINGLE host-side weight rule of every grouped engine: staleness-
+    discounted effective counts (``staleness_discount``), absent clients
+    (event-driven ``present`` mask) and ghost clients (n_k = 0) forced to
+    exactly zero, normalized to sum to 1 over the cohort. The protocol
+    checker (``analysis/protocol.py``) calls this same function at every
+    model-checked trigger firing, so a weight-conservation violation there
+    is a finding against the implementation, not against a re-derivation.
+    """
+    w = staleness_discount(n_k, staleness, gamma)
+    if present is not None:
+        w = np.where(np.asarray(present, dtype=bool), w, 0.0)
+    total = w.sum()
+    assert total > 0.0, "a cohort aggregated with zero total weight"
+    return w / total
+
+
 # ---------------------------------------------------------------------------
 # aggregation rules
 # ---------------------------------------------------------------------------

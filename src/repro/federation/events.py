@@ -100,8 +100,11 @@ class LatencyModel:
     # -- checkpointing -------------------------------------------------------
 
     def state_dict(self) -> dict:
-        return {"rng": {str(c): r.bit_generator.state
-                        for c, r in self._rngs.items()}}
+        # sorted client order: the serialized form must be byte-stable
+        # regardless of which client sampled first (dict insertion order
+        # is first-draw order, which scenario edits perturb)
+        return {"rng": {str(c): self._rngs[c].bit_generator.state
+                        for c in sorted(self._rngs)}}
 
     def load_state_dict(self, state: Optional[dict]) -> None:
         self._rngs = {}
@@ -509,8 +512,13 @@ class EventScheduler:
         marking them consumed. Called by the aggregation at a fire."""
         out: Dict[int, Dict[int, float]] = {}
         host_cost.tick("events/book_scan", len(self._book))
-        for pr, b in self._book.items():
-            ready = {m: t for m, t in b["arrived"].items()
+        # explicit client-iteration order: ascending plan round, ascending
+        # member within a plan -- the aggregation's client axis (and thus
+        # the fire log and the consumed bookkeeping) must not depend on
+        # dict insertion history
+        for pr in sorted(self._book):
+            b = self._book[pr]
+            ready = {m: b["arrived"][m] for m in sorted(b["arrived"])
                      if m not in b["consumed"]}
             if ready:
                 out[pr] = ready
@@ -526,9 +534,12 @@ class EventScheduler:
         return out
 
     def completed_plans(self) -> List[int]:
-        """Plan rounds whose every member has been consumed or dropped."""
-        return [pr for pr, b in self._book.items()
-                if len(b["consumed"]) + len(b["dropped"]) >= b["size"]]
+        """Plan rounds whose every member has been consumed or dropped
+        (ascending plan order -- explicit, not insertion-dependent)."""
+        return [pr for pr in sorted(self._book)
+                if (len(self._book[pr]["consumed"])
+                    + len(self._book[pr]["dropped"]))
+                >= self._book[pr]["size"]]
 
     def forget_plan(self, plan_round: int) -> None:
         self._book.pop(plan_round, None)
@@ -629,12 +640,17 @@ class EventScheduler:
             "lc_idx": self._lc_idx,
             "inactive": sorted(self._inactive),
             "heap": [list(item) for item in sorted(self._heap)],
-            "book": {str(pr): {"size": b["size"],
-                               "arrived": {str(m): t
-                                           for m, t in b["arrived"].items()},
-                               "consumed": sorted(b["consumed"]),
-                               "dropped": sorted(b["dropped"])}
-                     for pr, b in self._book.items()},
+            # sorted plan/member order (not insertion order): the
+            # serialized state -- and therefore checkpoint metadata -- is
+            # byte-stable across runs that built the book differently
+            "book": {str(pr): {"size": self._book[pr]["size"],
+                               "arrived": {str(m):
+                                           self._book[pr]["arrived"][m]
+                                           for m in sorted(
+                                               self._book[pr]["arrived"])},
+                               "consumed": sorted(self._book[pr]["consumed"]),
+                               "dropped": sorted(self._book[pr]["dropped"])}
+                     for pr in sorted(self._book)},
             "fires": [[f.time, f.consumed, f.max_staleness, f.trigger]
                       for f in self.fire_log],
             "latency": self.latency.state_dict(),

@@ -84,7 +84,7 @@ import numpy as np
 
 from repro.analysis import host_cost
 from repro.configs.base import FLConfig, LoRAConfig
-from repro.core.aggregation import Aggregator, weighted_avg
+from repro.core.aggregation import Aggregator, cohort_weights, weighted_avg
 from repro.core.energy import EnergyTrace
 from repro.core.lora import merge_lora, split_lora
 from repro.federation.client import LocalTrainer, _stack_steps
@@ -143,6 +143,26 @@ def _write_bucketed(lora_tree, bucket_stacks, mags, *, bucket_parents):
 
     return jax.tree_util.tree_map_with_path(rebuild, lora_tree,
                                             is_leaf=lambda x: x is None)
+
+
+def flatten_cohort(members, ranks, n_k, staleness=None, present=None,
+                   r_min: int = 1):
+    """Permute per-sampled-client vectors into stacked group-member order.
+
+    ``members[j]`` is the sampled-client index at stacked position j, or -1
+    for a GHOST (shard padding): ghosts take rank ``r_min``, zero samples,
+    zero staleness and are never present, so every weight they receive is
+    identically zero. This is the single member-rebase rule shared by the
+    grouped engines (``_aggregate_grouped``) and the protocol checker's
+    ghost-rule invariant (``analysis/protocol.py``) -- the checker verifies
+    the very arrays the aggregation consumes."""
+    ranks_o = [ranks[i] if i >= 0 else r_min for i in members]
+    n_k_o = [n_k[i] if i >= 0 else 0 for i in members]
+    stal_o = (None if staleness is None else
+              [staleness[i] if i >= 0 else 0 for i in members])
+    pres_o = (None if present is None else
+              [bool(present[i]) if i >= 0 else False for i in members])
+    return ranks_o, n_k_o, stal_o, pres_o
 
 
 @dataclass
@@ -532,7 +552,6 @@ class FederatedLoRA:
         unjitted per-adapter host loop. Returns a ``BucketedUpdate`` (plus
         flora deltas and the lazy sigma probe) -- per-adapter unstacking is
         deferred into the jitted write-back."""
-        from repro.core.aggregation import staleness_discount
         update = BucketedUpdate()
         deltas = {}
         sigma_probe = None
@@ -545,16 +564,9 @@ class FederatedLoRA:
         # zero samples, zero staleness, never present)
         members = [i for mem, _, _ in group_factors for i in mem]
         host_cost.tick("server/agg_members", len(members))
-        ranks_o = [ranks[i] if i >= 0 else r_min for i in members]
-        n_k_o = [n_k[i] if i >= 0 else 0 for i in members]
-        stal_o = (None if staleness is None else
-                  [staleness[i] if i >= 0 else 0 for i in members])
-        pres_o = (None if present is None else
-                  [bool(present[i]) if i >= 0 else False for i in members])
-        w_np = staleness_discount(n_k_o, stal_o, gamma)
-        if pres_o is not None:
-            w_np = np.where(np.asarray(pres_o, dtype=bool), w_np, 0.0)
-        w_clients = jnp.asarray(w_np / w_np.sum())
+        ranks_o, n_k_o, stal_o, pres_o = flatten_cohort(
+            members, ranks, n_k, staleness, present, r_min)
+        w_clients = jnp.asarray(cohort_weights(n_k_o, stal_o, pres_o, gamma))
         parents = list(group_factors[0][2])
         for parent in [p for p in parents if self._is_magnitude(p)]:
             # DoRA magnitudes: weighted FedAvg (not rank-structured)
@@ -627,6 +639,17 @@ class FederatedLoRA:
         return None
 
     # -- the round: plan -> train -> aggregate stages ------------------------
+
+    def _now(self) -> float:
+        """The round-stat clock. With an event scheduler this is the
+        VIRTUAL clock -- the event-driven round path must not read the
+        host clock (runs would stop being a pure function of the seed;
+        the rng/determinism lint bans ``time.time()`` there), so its
+        ``wall_time_s`` is virtual seconds. The wall-clock engines keep
+        real wall time."""
+        if self.event_scheduler is not None:
+            return self.event_scheduler.clock.now
+        return time.time()  # host-clock: ok (wall-clock engines only)
 
     @property
     def _sharded_dispatch(self) -> bool:
@@ -711,7 +734,7 @@ class FederatedLoRA:
         stats = RoundStats(
             round=plan.round, clients=plan.clients, ranks=plan.ranks,
             lr=plan.lr, mean_client_loss=float("nan"),
-            sigma_probe=None, wall_time_s=time.time() - t0)
+            sigma_probe=None, wall_time_s=self._now() - t0)
         self.history.append(stats)
         self.round_idx += 1
         self._stat_queue.append((stats, plan, sigma_probe))
@@ -761,7 +784,7 @@ class FederatedLoRA:
     def run_round(self) -> RoundStats:
         if self.round_engine == "async":
             return self._run_round_async()
-        t0 = time.time()
+        t0 = self._now()
         plan = self._plan_round()
         self._train_stage(plan)
         results, deltas, sigma_probe = self._aggregate_stage(plan)
@@ -795,7 +818,7 @@ class FederatedLoRA:
         """
         if self.event_scheduler is not None:
             return self._run_round_event()
-        t0 = time.time()
+        t0 = self._now()
         plan = self._plan_round()
         self._train_stage(plan)
         self._pending.append(plan)
@@ -814,7 +837,7 @@ class FederatedLoRA:
         exactly the arrived-but-unaggregated updates (partial cohorts ride
         the ghost zero-weight rule) and applies it immediately, so later
         fires in the same window see the updated global adapters."""
-        t0 = time.time()
+        t0 = self._now()
         sched = self.event_scheduler
         plan = self._plan_round()
         self._train_stage(plan)
@@ -1118,9 +1141,11 @@ class FederatedLoRA:
         if meta:
             self.round_idx = meta.get("round", self.round_idx)
             if meta.get("rng_state") is not None:
-                rng = np.random.default_rng()
-                rng.bit_generator.state = meta["rng_state"]
-                self.rng = rng
+                # restore IN PLACE on the server's seeded stream: no fresh
+                # unseeded generator is ever constructed on the round path
+                # (the checkpointed state overwrites whatever the stream
+                # has drawn, which is the whole point of restore)
+                self.rng.bit_generator.state = meta["rng_state"]
             if meta.get("energy") is not None:
                 self.energy = EnergyTrace.from_state(meta["energy"])
             if meta.get("history") is not None:

@@ -16,8 +16,13 @@ Scenario test matrix:
   kernel backends (the event engine inherits the whole correctness
   lattice: sequential == batched == async@cadence == async@events);
 * straggler / dropout / rejoin / mid-run-join scenarios end-to-end;
-* seeded determinism + JSONL trace record/replay of full federated runs.
+* seeded determinism + JSONL trace record/replay of full federated runs;
+* RNG stream hygiene (disjoint per-client latency streams under
+  adversarial seed pairs; client-isolation of draws) and byte-stable
+  serialization of the fire log + scheduler state across same-seed runs
+  (protocol-verifier satellites, DESIGN.md §10).
 """
+import json
 import os
 
 import numpy as np
@@ -244,6 +249,81 @@ class TestSchedulerProperties:
                 for a in rd.values():
                     want = (int(t) - 1) - pr
                     assert sched.staleness_of(t, a) == want
+
+
+# ---------------------------------------------------------------------------
+# RNG stream hygiene + byte-stable replay (protocol-verifier satellites)
+# ---------------------------------------------------------------------------
+
+class TestLatencyStreamHygiene:
+    """Per-client latency streams come from ``SeedSequence([seed, client])``
+    -- distinct (seed, client) pairs must yield disjoint draw sequences,
+    even for adversarial seed pairs (swapped entries, off-by-one) that a
+    naive ``seed + client`` or ``seed ^ client`` scheme would collide."""
+
+    @staticmethod
+    def _draws(seed, client, k=8):
+        lat = LognormalLatency(median=1.0, sigma=0.5, seed=seed)
+        return tuple(lat.sample(client) for _ in range(k))
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_streams_pairwise_disjoint_for_adversarial_seed_pairs(self, seed):
+        clients = range(4)
+        # adversarial pairings: identical sum, xor, and swapped roles
+        pairs = {(seed, c) for c in clients}
+        pairs |= {(seed + 1, c) for c in clients}
+        pairs |= {(c, seed % 17) for c in clients}      # role swap
+        streams = {p: self._draws(*p) for p in pairs}
+        items = sorted(streams.items())
+        for i, (p1, s1) in enumerate(items):
+            for p2, s2 in items[i + 1:]:
+                assert not set(s1) & set(s2), (p1, p2)
+
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 6))
+    @settings(max_examples=15, deadline=None)
+    def test_stream_depends_only_on_seed_and_client(self, seed, k):
+        """Sampling OTHER clients in between (in any order) never perturbs
+        a client's own stream -- the isolation scenario edits rely on."""
+        solo = self._draws(seed, 2, k)
+        lat = LognormalLatency(median=1.0, sigma=0.5, seed=seed)
+        interleaved = []
+        for i in range(k):
+            lat.sample(3 + (i % 2))        # noise draws on clients 3, 4
+            interleaved.append(lat.sample(2))
+            lat.sample(0)
+        assert tuple(interleaved) == solo
+
+
+class TestFireLogByteStability:
+    """Two same-seed runs serialize to IDENTICAL bytes -- fire log, fire
+    times, consumed members and the final scheduler state_dict. Equality
+    of parsed objects is weaker: byte identity is what the checkpoint and
+    audit artifacts diff on."""
+
+    @staticmethod
+    def _run_bytes(seed):
+        sched = EventScheduler(
+            BimodalLatency(fast=0.7, slow=3.1, slow_prob=0.3, seed=seed),
+            TimeoutTrigger(1.5),
+            lifecycle=ClientLifecycle([LifecycleEvent(1.2, "dropout", 1),
+                                       LifecycleEvent(3.4, "rejoin", 1)]))
+        fires = _drive(sched, _random_plans(seed, 5, 8, 3))
+        blob = {
+            "fires": [[t, sorted([pr, m, a] for pr, rd in ready.items()
+                                 for m, a in rd.items())]
+                      for t, ready in fires],
+            "log": [repr(f) for f in sched.fire_log],
+            "state": sched.state_dict(),
+        }
+        return json.dumps(blob, sort_keys=True, default=repr).encode()
+
+    def test_same_seed_runs_byte_identical(self):
+        for seed in (0, 7, 123):
+            assert self._run_bytes(seed) == self._run_bytes(seed)
+
+    def test_different_seed_runs_differ(self):
+        assert self._run_bytes(11) != self._run_bytes(12)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,243 @@
+"""Protocol verifier (ISSUE 8 tentpole): the bounded-interleaving model
+checker holds on the real scheduler, every injected protocol bug trips
+its invariant rule (both directions -- a gate whose tripwires are dead
+proves nothing), the partial-order/symmetry reduction is sound-shaped,
+and the ``tools/verify_protocol.py`` sweep writes a well-formed, green,
+control-gated ``AUDIT_protocol.json``."""
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.analysis.protocol import (CancelledDeliveryScheduler,
+                                     DoubleConsumeScheduler, Driver,
+                                     FixedLatency, Scenario, canonical_combo,
+                                     check_scenario, discover_slots,
+                                     replay_from, signature_of, table_of)
+from repro.federation.events import (ClientLifecycle, CountTrigger,
+                                     EventScheduler, LifecycleEvent,
+                                     StalenessBoundTrigger, TimeoutTrigger)
+
+_TOOL = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools", "verify_protocol.py")
+_spec = importlib.util.spec_from_file_location("verify_protocol", _TOOL)
+verify_protocol = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(verify_protocol)
+
+
+def _lc_none():
+    return ClientLifecycle()
+
+
+def _lc_drop():
+    return ClientLifecycle([
+        LifecycleEvent(time=0.4, kind="dropout", client=2),
+        LifecycleEvent(time=1.6, kind="rejoin", client=2)])
+
+
+def _scenario(trigger_fn, lifecycle_fn=_lc_none, *, name="t", grid=(0.5, 1.5),
+              n_k=(3, 1, 2), symmetric=(), staleness_bound=None):
+    return Scenario(name=name, num_clients=3, num_plans=2,
+                    trigger_fn=trigger_fn, lifecycle_fn=lifecycle_fn,
+                    grid=grid, n_k=n_k, ranks=(8, 4, 8),
+                    staleness_bound=staleness_bound, symmetric=symmetric)
+
+
+# ---------------------------------------------------------------------------
+# the implementation satisfies the invariants on every interleaving
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("trig,bound", [
+    (lambda: CountTrigger(3), None),
+    (lambda: TimeoutTrigger(1.5), None),
+    (lambda: StalenessBoundTrigger(1), 1)],
+    ids=["count", "timeout", "staleness"])
+@pytest.mark.parametrize("lc", [_lc_none, _lc_drop], ids=["none", "drop"])
+def test_invariants_hold_exhaustively(trig, bound, lc):
+    sc = _scenario(trig, lc, staleness_bound=bound)
+    findings, stats, _ = check_scenario(sc)
+    assert findings == []
+    assert stats.unique_schedules > 0
+    assert stats.fires > 0
+    # every unique schedule was checkpoint-cut at every boundary
+    assert stats.replays == stats.boundaries > 0
+
+
+def test_every_arrival_consumed_or_dropped():
+    sc = _scenario(lambda: CountTrigger(3), _lc_drop)
+    _, _, records = check_scenario(sc, replay=False, keep_records=True)
+    for rec in records:
+        slots = {(pr, m) for pr, size in rec.plan_sizes.items()
+                 for m in range(size)}
+        consumed = set(rec.consume_counts)
+        assert consumed | rec.dropped == slots
+        assert consumed & rec.dropped == set()
+        assert all(c == 1 for c in rec.consume_counts.values())
+
+
+def test_weights_conserve_with_ghost_at_zero():
+    sc = _scenario(lambda: TimeoutTrigger(1.5), _lc_drop)
+    _, _, records = check_scenario(sc, replay=False, keep_records=True)
+    fires = [f for rec in records for f in rec.fires if f.weights]
+    assert fires
+    for f in fires:
+        assert abs(sum(f.weights) - 1.0) < 1e-9
+        assert any(f.ghost), "every cohort carries the padding ghost"
+        for w, p, g in zip(f.weights, f.present, f.ghost):
+            if g or not p:
+                assert w == 0.0
+
+
+# ---------------------------------------------------------------------------
+# injected bugs: every tripwire is live
+# ---------------------------------------------------------------------------
+
+def test_double_consume_trips_exactly_once():
+    f, _, _ = check_scenario(_scenario(lambda: CountTrigger(3)),
+                             replay=False, sched_cls=DoubleConsumeScheduler)
+    assert f and {x.rule for x in f} == {"proto-exactly-once"}
+
+
+def test_cancelled_delivery_trips():
+    f, _, _ = check_scenario(_scenario(lambda: CountTrigger(2), _lc_drop),
+                             replay=False,
+                             sched_cls=CancelledDeliveryScheduler)
+    assert "proto-cancelled-consumed" in {x.rule for x in f}
+
+
+def test_present_mask_leak_trips_ghost_rule():
+    f, _, _ = check_scenario(_scenario(lambda: CountTrigger(2), _lc_drop),
+                             replay=False, break_present=True)
+    assert f and {x.rule for x in f} == {"proto-ghost-weight"}
+
+
+def test_torn_snapshot_trips_replay_divergence():
+    f, _, _ = check_scenario(_scenario(lambda: CountTrigger(3)),
+                             corrupt_replay=True)
+    assert f and {x.rule for x in f} == {"proto-replay-divergence"}
+
+
+def test_understated_staleness_bound_trips():
+    sc = _scenario(lambda: StalenessBoundTrigger(2), staleness_bound=0)
+    f, _, _ = check_scenario(sc, replay=False)
+    assert "proto-staleness-bound" in {x.rule for x in f}
+
+
+# ---------------------------------------------------------------------------
+# enumeration machinery
+# ---------------------------------------------------------------------------
+
+def test_discover_slots_is_latency_independent():
+    sc = _scenario(lambda: CountTrigger(3), _lc_drop)
+    slots = discover_slots(sc)
+    # plan 0 dispatches all three; client 2 is inactive at plan 1
+    assert slots == [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1)]
+
+
+def test_signature_collapses_to_schedule_multiset():
+    sc = _scenario(lambda: CountTrigger(3))
+    slots = discover_slots(sc)
+    sig = signature_of(sc, slots, (0.5, 1.5, 0.5, 1.5, 0.5, 1.5))
+    # plan p dispatches at p * round_interval; arrival = dispatch + draw
+    assert sig == tuple(sorted(
+        [(0.5, 0, 0), (1.5, 0, 1), (0.5, 0, 2),
+         (2.5, 1, 0), (1.5, 1, 1), (2.5, 1, 2)]))
+
+
+def test_symmetry_reduction_canonicalizes_and_validates():
+    sym = _scenario(lambda: CountTrigger(3), n_k=(3, 1, 3),
+                    symmetric=((0, 2),))
+    slots = discover_slots(sym)
+    a = canonical_combo(sym, slots, (2.5, 0.5, 0.5, 1.5, 0.5, 0.5))
+    b = canonical_combo(sym, slots, (0.5, 0.5, 2.5, 0.5, 0.5, 1.5))
+    assert a == b                       # swapped draws of clients 0/2
+    _, stats, _ = check_scenario(sym)
+    assert 0 < stats.unique_schedules < stats.assignments
+
+    with pytest.raises(AssertionError, match="mixes"):
+        check_scenario(_scenario(lambda: CountTrigger(3),
+                                 n_k=(3, 1, 2), symmetric=((0, 2),)))
+    with pytest.raises(AssertionError, match="lifecycle"):
+        check_scenario(_scenario(lambda: CountTrigger(3), _lc_drop,
+                                 n_k=(3, 1, 3), symmetric=((0, 2),)))
+
+
+def test_table_of_orders_draws_per_client():
+    table = table_of([(0, 0), (0, 1), (1, 0)], (0.5, 1.5, 2.5))
+    assert table == {0: [0.5, 2.5], 1: [1.5]}
+
+
+def test_fixed_latency_checkpoint_roundtrip():
+    lat = FixedLatency({0: (0.5, 1.5), 1: (2.5,)})
+    assert lat.sample(0) == 0.5
+    snap = lat.state_dict()
+    assert lat.sample(0) == 1.5
+    lat.load_state_dict(snap)
+    assert lat.sample(0) == 1.5
+    assert lat.sample(1) == 2.5
+    with pytest.raises(AssertionError, match="exhausted"):
+        lat.sample(1)
+
+
+def test_replay_from_every_boundary_kind():
+    sc = _scenario(lambda: TimeoutTrigger(1.5))
+    slots = discover_slots(sc)
+    table = table_of(slots, (0.5,) * len(slots))
+    d = Driver(sc, table)
+    bounds = d.run_full(cuts=True)
+    kinds = {b.kind for b in bounds}
+    assert {"dispatch", "fire", "window"} <= kinds
+    for b in bounds:
+        assert replay_from(sc, table, b, d.record) == []
+
+
+def test_mid_run_join_expands_dispatch():
+    sc = Scenario(name="join", num_clients=3, num_plans=2,
+                  trigger_fn=lambda: CountTrigger(3),
+                  lifecycle_fn=lambda: ClientLifecycle([
+                      LifecycleEvent(time=0.6, kind="join", client=3,
+                                     rank=8, shard=np.arange(2))]),
+                  grid=(0.5, 1.5), n_k=(3, 1, 2), ranks=(8, 4, 8))
+    slots = discover_slots(sc)
+    assert slots == [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (1, 3)]
+    findings, _, _ = check_scenario(sc)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# the sweep tool
+# ---------------------------------------------------------------------------
+
+def test_verify_sweep_fast_green(tmp_path, capsys):
+    out = tmp_path / "AUDIT_protocol.json"
+    assert verify_protocol.main(["--fast", "--out", str(out)]) == 0
+    art = json.loads(out.read_text())
+    assert art["schema"] == 1
+    assert art["summary"]["ok"] is True
+    assert art["summary"]["errors"] == 0
+    # >= 3 positive controls incl. the ISSUE-named three, all tripped
+    assert {"double-fire", "injected-key-reuse",
+            "injected-host-clock"} <= set(art["controls"])
+    assert all(c["tripped"] for c in art["controls"].values())
+    kinds = {p["kind"] for p in art["programs"]}
+    assert kinds == {"protocol", "rng-flow", "rng-host"}
+    prot = [p for p in art["programs"] if p["kind"] == "protocol"]
+    assert all(p["stats"]["replays"] > 0 for p in prot)
+
+
+def test_tracked_artifact_matches_full_scope():
+    """The tracked artifact at the repo root is the FULL sweep: green, all
+    three trigger families x lifecycles, every control live."""
+    path = os.path.join(os.path.dirname(_TOOL), os.pardir,
+                        "AUDIT_protocol.json")
+    art = json.loads(open(path).read())
+    assert art["summary"]["ok"] is True
+    assert art["matrix"]["scope"] == "full"
+    names = {p["program"] for p in art["programs"]}
+    for trig in ("count", "timeout", "staleness"):
+        for lc in ("none", "droprejoin", "join"):
+            assert f"protocol/{trig}/{lc}" in names
+    assert len(art["controls"]) >= 3
+    assert all(c["tripped"] for c in art["controls"].values())

@@ -1,0 +1,170 @@
+"""RNG/determinism lint (ISSUE 8): every rule is tested in BOTH
+directions -- clean/waived programs stay silent, broken programs trip --
+and the real round-path sources + init functions are certified clean."""
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.rng_lint import (BROKEN_HOST_CLOCK, BROKEN_SEED_COLLISION,
+                                     BROKEN_SET_ITERATION, BROKEN_UNSEEDED,
+                                     broken_key_reuse, key_flow,
+                                     lint_host_source, lint_key_flow)
+from repro.models.layers.dense import dense_init, lora_init
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# key-provenance dataflow
+# ---------------------------------------------------------------------------
+
+def test_clean_split_then_sample_is_silent():
+    def clean(key):
+        k1, k2 = jax.random.split(key)
+        return jax.random.normal(k1, (2,)) + jax.random.uniform(k2, (2,))
+
+    findings, stats = lint_key_flow("clean", clean, jax.random.key(0))
+    assert findings == []
+    assert stats["consumptions"] == 2 and stats["derivations"] == 1
+
+
+def test_key_reuse_trips():
+    findings, _ = lint_key_flow("broken", broken_key_reuse,
+                                jax.random.key(0))
+    assert _rules(findings) == {"rng-key-reuse"}
+
+
+def test_key_reuse_seen_through_old_style_uint32_keys():
+    """random_wrap aliasing: the same raw uint32 key wrapped twice is ONE
+    key identity, so two samplers on it still count as reuse."""
+    def reuse_raw(raw):
+        a = jax.random.normal(raw, (2,))
+        b = jax.random.uniform(raw, (2,))
+        return a + b
+
+    findings, _ = lint_key_flow("raw", reuse_raw, jax.random.PRNGKey(0))
+    assert "rng-key-reuse" in _rules(findings)
+
+
+def test_sample_then_derive_trips():
+    def hazard(key):
+        x = jax.random.normal(key, (2,))
+        child = jax.random.fold_in(key, 1)
+        return x + jax.random.normal(child, (2,))
+
+    findings, _ = lint_key_flow("hazard", hazard, jax.random.key(0))
+    assert "rng-sample-then-derive" in _rules(findings)
+
+
+def test_flow_follows_keys_into_pjit_subjaxprs():
+    @jax.jit
+    def inner(key):
+        return jax.random.normal(key, (2,))
+
+    def outer(key):
+        return inner(key) + inner(key)   # same outer key, two consumers
+
+    findings, _ = lint_key_flow("nested", outer, jax.random.key(0))
+    assert "rng-key-reuse" in _rules(findings)
+
+
+def test_real_init_functions_are_clean():
+    k = jax.random.key(0)
+    for name, fn in [
+            ("dense", lambda key: dense_init(key, 8, 12)),
+            ("lora", lambda key: lora_init(key, 8, 12, 4))]:
+        findings, stats = lint_key_flow(name, fn, k)
+        assert findings == [], name
+        assert stats["eqns"] > 0
+
+
+def test_key_flow_report_counts_keys():
+    rep = key_flow(broken_key_reuse, jax.random.key(0))
+    reused = [k for k in rep.keys if len(k.consumers) >= 2]
+    assert len(reused) == 1
+
+
+# ---------------------------------------------------------------------------
+# host determinism rules -- broken direction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("src,rule", [
+    (BROKEN_HOST_CLOCK, "rng-host-clock"),
+    (BROKEN_UNSEEDED, "rng-unseeded-default-rng"),
+    (BROKEN_SEED_COLLISION, "rng-seed-collision"),
+    (BROKEN_SET_ITERATION, "rng-order-sensitive-iteration")],
+    ids=["clock", "unseeded", "collision", "set-iter"])
+def test_broken_host_sources_trip(src, rule):
+    findings, stats = lint_host_source("broken.py", src)
+    assert rule in _rules(findings)
+    assert stats["ast_nodes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# host determinism rules -- clean/waived direction
+# ---------------------------------------------------------------------------
+
+def test_seeded_rng_and_sorted_iteration_are_silent():
+    clean = (
+        "import numpy as np\n"
+        "def rngs(seed, clients):\n"
+        "    rng = np.random.default_rng(np.random.SeedSequence([seed, 0]))\n"
+        "    return [rng.random() for c in sorted(set(clients))]\n"
+    )
+    findings, _ = lint_host_source("clean.py", clean)
+    assert findings == []
+
+
+def test_same_line_waivers_suppress():
+    waived = (
+        "import time\n"
+        "import numpy as np\n"
+        "def f():\n"
+        "    t = time.time()  # host-clock: ok (wall-clock engines only)\n"
+        "    r = np.random.default_rng()  # rng: ok (throwaway jitter)\n"
+        "    return t, r\n"
+    )
+    findings, _ = lint_host_source("waived.py", waived)
+    assert findings == []
+
+
+def test_waiver_is_tag_specific():
+    """A '# rng: ok' waiver does NOT waive the host-clock rule."""
+    src = (
+        "import time\n"
+        "def f():\n"
+        "    return time.time()  # rng: ok\n"
+    )
+    findings, _ = lint_host_source("wrongtag.py", src)
+    assert _rules(findings) == {"rng-host-clock"}
+
+
+def test_distinct_seed_tags_do_not_collide():
+    src = (
+        "import numpy as np\n"
+        "def a(seed, c):\n"
+        "    return np.random.SeedSequence([seed, 0, c])\n"
+        "def b(seed, c):\n"
+        "    return np.random.SeedSequence([seed, 1, c])\n"
+    )
+    findings, _ = lint_host_source("tagged.py", src)
+    assert findings == []
+
+
+def test_real_round_path_sources_are_clean():
+    """The shipped round path passes the host lint -- the one intentional
+    wall-clock read in server.py carries its waiver."""
+    rel = ("src/repro/federation/events.py",
+           "src/repro/federation/server.py",
+           "src/repro/core/aggregation.py",
+           "src/repro/data/traces.py")
+    for r in rel:
+        with open(os.path.join(_ROOT, r)) as fh:
+            findings, _ = lint_host_source(r, fh.read())
+        assert findings == [], (r, findings)

@@ -37,6 +37,16 @@
 #                            # lowering cache; writes to TEMP paths so the
 #                            # tracked artifacts never churn. Also run as
 #                            # part of `smoke`.
+#   tools/ci.sh verify       # protocol-verification sweep (DESIGN.md §10):
+#                            # exhaustive bounded-interleaving model check
+#                            # of the event round path (checkpoint cuts at
+#                            # every boundary) + the RNG/determinism lint,
+#                            # written to the tracked AUDIT_protocol.json
+#                            # at the repo root. Part of tier-1.
+#   tools/ci.sh verify-fast  # smoke-tier protocol verification: reduced
+#                            # grids/scenarios, written to a TEMP path so
+#                            # the tracked artifact never churns. Also run
+#                            # as part of `smoke`.
 #
 # JAX_PLATFORMS=cpu keeps runs identical on machines that also have
 # accelerators; PYTHONHASHSEED pins dict/hash iteration for determinism.
@@ -55,11 +65,13 @@ tier="${1:-tier1}"
 case "$tier" in
   tier1)
     python -m pytest -x -q
-    exec "$0" certify
+    "$0" certify
+    exec "$0" verify
     ;;
   smoke)
     python -m pytest -x -q -m "not slow" -k "not federation and not dryrun and not sharded_engine and not kernel_engines"
-    exec "$0" lint-fast
+    "$0" lint-fast
+    exec "$0" verify-fast
     ;;
   bench)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
@@ -103,8 +115,17 @@ case "$tier" in
       --out "$scratch/AUDIT_scaling.json" \
       --lint-out "$scratch/AUDIT_program_lint.json"
     ;;
+  verify)
+    exec python tools/verify_protocol.py
+    ;;
+  verify-fast)
+    scratch="$(mktemp -d /tmp/verify_fast.XXXXXX)"
+    trap 'rm -rf "$scratch"' EXIT
+    python tools/verify_protocol.py --fast \
+      --out "$scratch/AUDIT_protocol.json"
+    ;;
   *)
-    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|shard-smoke|kernel-smoke|lint|certify|lint-fast]" >&2
+    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|shard-smoke|kernel-smoke|lint|certify|lint-fast|verify|verify-fast]" >&2
     exit 2
     ;;
 esac

@@ -1,0 +1,300 @@
+#!/usr/bin/env python
+"""Protocol-verification sweep (DESIGN.md §10): exhaustively model-check
+the event-driven round path over bounded interleavings, run the
+RNG/determinism lint over round-path jaxprs and host sources, and write
+the tracked ``AUDIT_protocol.json``.
+
+    PYTHONPATH=src python tools/verify_protocol.py [--out PATH]
+        [--fast] [--verbose]
+
+Matrix:
+
+  protocol   3 trigger families (count / timeout / staleness-bound)
+             x lifecycles {none+symmetric, dropout->rejoin, mid-run join}
+             at 3 clients x 2 plans over a 3-value latency grid, plus a
+             3-plan ladder per trigger on a 2-value grid. Every unique
+             arrival schedule (after partial-order reduction) drives a
+             REAL EventScheduler through the server's consumption
+             protocol; every reachable event boundary is checkpoint-cut
+             and replayed (``--fast``: 2-value grids, no 3-plan ladder).
+  rng-flow   key-provenance dataflow over round-path init jaxprs
+             (dense/LoRA/MLP param init -- the functions that fan one
+             seed out to per-layer streams).
+  rng-host   host-determinism AST rules over every module active while
+             the virtual clock runs (federation/, core aggregation,
+             trace replay, checkpoint I/O, the verifier itself).
+
+Positive controls (the sweep FAILS if any does not trip): an injected
+double-fire (re-delivering consumed arrivals), ghost/absent weight leak,
+cancelled-arrival delivery, a torn checkpoint snapshot, an understated
+staleness bound, a jaxpr key reuse, a host-clock read, an unseeded
+default_rng, a SeedSequence shape collision, and set-order iteration.
+
+Exit status: 0 sweep green + all controls tripped, 1 otherwise, 2 on
+usage errors. ``tools/ci.sh verify`` runs the full sweep (tier-1);
+``verify-fast`` runs ``--fast`` to a temp path inside smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.analysis import rng_lint
+from repro.analysis.protocol import (CancelledDeliveryScheduler,
+                                     DoubleConsumeScheduler, Scenario,
+                                     check_scenario)
+from repro.analysis.report import AuditReport, ProgramAudit
+from repro.federation.events import (ClientLifecycle, CountTrigger,
+                                     LifecycleEvent, StalenessBoundTrigger,
+                                     TimeoutTrigger)
+
+# federation shape of every scenario: 3 clients, heterogeneous ranks and
+# sample counts (weights must conserve under heterogeneity, not just
+# uniformity); the symmetric variant equalizes n_k of clients {0, 2} so
+# the symmetry reduction applies
+NUM_CLIENTS = 3
+RANKS = (8, 4, 8)
+N_K_HET = (3, 1, 2)
+N_K_SYM = (3, 1, 3)
+GRID_FULL = (0.5, 1.5, 2.5)
+GRID_FAST = (0.5, 1.5)
+GRID_LADDER = (0.5, 2.5)
+
+TRIGGERS = {
+    "count": (lambda: CountTrigger(3), None),
+    "timeout": (lambda: TimeoutTrigger(1.5), None),
+    "staleness": (lambda: StalenessBoundTrigger(1), 1),
+}
+
+
+def lc_none() -> ClientLifecycle:
+    return ClientLifecycle()
+
+
+def lc_droprejoin() -> ClientLifecycle:
+    """Client 2 drops mid-window 0 (cancelling its in-flight plan-0
+    arrival on every grid), rejoins before plan 2 would dispatch."""
+    return ClientLifecycle([
+        LifecycleEvent(time=0.4, kind="dropout", client=2),
+        LifecycleEvent(time=1.6, kind="rejoin", client=2),
+    ])
+
+
+def lc_join() -> ClientLifecycle:
+    """A fourth client joins mid-window 0 and is dispatched from plan 1."""
+    return ClientLifecycle([
+        LifecycleEvent(time=0.6, kind="join", client=NUM_CLIENTS,
+                       rank=8, shard=np.arange(2)),
+    ])
+
+
+LIFECYCLES = {"none": lc_none, "droprejoin": lc_droprejoin, "join": lc_join}
+
+
+def build_scenarios(fast: bool):
+    scenarios = []
+    for trig_name, (trig, bound) in sorted(TRIGGERS.items()):
+        for lc_name, lc in sorted(LIFECYCLES.items()):
+            if fast and lc_name == "join":
+                continue
+            sym = lc_name == "none"
+            scenarios.append(Scenario(
+                name=f"protocol/{trig_name}/{lc_name}",
+                num_clients=NUM_CLIENTS, num_plans=2,
+                trigger_fn=trig, lifecycle_fn=lc,
+                grid=GRID_FAST if fast else GRID_FULL,
+                n_k=N_K_SYM if sym else N_K_HET, ranks=RANKS,
+                staleness_bound=bound,
+                symmetric=((0, 2),) if sym else ()))
+        if not fast:
+            # depth ladder: three overlapping plans on a coarser grid
+            scenarios.append(Scenario(
+                name=f"protocol/{trig_name}/none-3plan",
+                num_clients=NUM_CLIENTS, num_plans=3,
+                trigger_fn=trig, lifecycle_fn=lc_none, grid=GRID_LADDER,
+                n_k=N_K_SYM, ranks=RANKS, staleness_bound=bound,
+                symmetric=((0, 2),)))
+    return scenarios
+
+
+def _protocol_sweep(report: AuditReport, fast: bool, verbose: bool) -> None:
+    for sc in build_scenarios(fast):
+        findings, stats, _ = check_scenario(sc)
+        audit = ProgramAudit(sc.name, "protocol", findings, stats.to_json())
+        report.add(audit)
+        if verbose or not audit.ok:
+            for f in findings[:10]:
+                print(f"  {f}")
+        s = stats.to_json()
+        print(f"[prot] {sc.name:32s} {'ok' if audit.ok else 'FAIL'} "
+              f"(schedules={s['unique_schedules']}/{s['assignments']}, "
+              f"fires={s['fires']}, cuts={s['replays']})")
+
+
+def _protocol_controls(report: AuditReport) -> None:
+    """Injected protocol bugs on reduced grids: each invariant's tripwire
+    must be live (a sweep whose rules cannot fail proves nothing)."""
+    small = Scenario(name="control/protocol", num_clients=NUM_CLIENTS,
+                     num_plans=2, trigger_fn=lambda: CountTrigger(3),
+                     lifecycle_fn=lc_none, grid=GRID_FAST,
+                     n_k=N_K_HET, ranks=RANKS)
+    drop = Scenario(name="control/protocol-drop", num_clients=NUM_CLIENTS,
+                    num_plans=2, trigger_fn=lambda: CountTrigger(2),
+                    lifecycle_fn=lc_droprejoin, grid=GRID_FAST,
+                    n_k=N_K_HET, ranks=RANKS)
+    stale = Scenario(name="control/protocol-stale", num_clients=NUM_CLIENTS,
+                     num_plans=2,
+                     trigger_fn=lambda: StalenessBoundTrigger(2),
+                     lifecycle_fn=lc_none, grid=GRID_FAST,
+                     n_k=N_K_HET, ranks=RANKS, staleness_bound=0)
+
+    report.run_control(
+        "double-fire", "proto-exactly-once",
+        lambda: check_scenario(small, replay=False,
+                               sched_cls=DoubleConsumeScheduler)[0],
+        "scheduler re-delivering consumed arrivals")
+    report.run_control(
+        "cancelled-delivery", "proto-cancelled-consumed",
+        lambda: check_scenario(drop, replay=False,
+                               sched_cls=CancelledDeliveryScheduler)[0],
+        "scheduler delivering dropout-cancelled arrivals")
+    report.run_control(
+        "ghost-weight-leak", "proto-ghost-weight",
+        lambda: check_scenario(drop, replay=False, break_present=True)[0],
+        "aggregation ignoring the present mask")
+    report.run_control(
+        "torn-snapshot", "proto-replay-divergence",
+        lambda: check_scenario(small, corrupt_replay=True)[0],
+        "checkpoint snapshot corrupted before replay")
+    report.run_control(
+        "understated-staleness-bound", "proto-staleness-bound",
+        lambda: check_scenario(stale, replay=False)[0],
+        "trigger bound 2 vs declared bound 0")
+
+
+def _rng_flow_sweep(report: AuditReport, verbose: bool) -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.models.layers.dense import dense_init, lora_init
+    from repro.models.layers.mlp import mlp_init
+
+    key = jax.random.PRNGKey(0)
+    rows = [
+        ("rng-flow/dense_init",
+         lambda k: dense_init(k, 16, 24, lora_rank=4), key),
+        ("rng-flow/lora_init",
+         lambda k: lora_init(k, 16, 24, 4), key),
+        ("rng-flow/mlp_init",
+         lambda k: mlp_init(k, 16, 32, "swiglu",
+                            lora_ranks={"up_proj": 4, "down_proj": 4,
+                                        "gate_proj": 4}), key),
+    ]
+    for name, fn, arg in rows:
+        findings, stats = rng_lint.lint_key_flow(name, fn, arg)
+        audit = ProgramAudit(name, "rng-flow", findings, stats)
+        report.add(audit)
+        if verbose or not audit.ok:
+            for f in findings:
+                print(f"  {f}")
+        print(f"[flow] {name:32s} {'ok' if audit.ok else 'FAIL'} "
+              f"(keys={stats['keys']}, draws={stats['consumptions']})")
+
+    report.run_control(
+        "injected-key-reuse", "rng-key-reuse",
+        lambda: rng_lint.lint_key_flow("control/key-reuse",
+                                       rng_lint.broken_key_reuse,
+                                       jax.random.PRNGKey(0))[0],
+        "one key consumed by normal AND uniform")
+
+
+# modules active while the virtual clock runs (launch/ CLIs time their own
+# wall-clock phases and are off the round path by construction)
+ROUND_PATH_FILES = (
+    "src/repro/federation/events.py",
+    "src/repro/federation/server.py",
+    "src/repro/federation/topology.py",
+    "src/repro/federation/experiment.py",
+    "src/repro/core/aggregation.py",
+    "src/repro/data/traces.py",
+    "src/repro/checkpointing/checkpoint.py",
+    "src/repro/analysis/protocol.py",
+)
+
+
+def _rng_host_sweep(report: AuditReport, verbose: bool) -> None:
+    for path in ROUND_PATH_FILES:
+        with open(path) as f:
+            source = f.read()
+        name = f"rng-host/{path.split('src/repro/')[-1]}"
+        findings, stats = rng_lint.lint_host_source(name, source)
+        audit = ProgramAudit(name, "rng-host", findings, stats)
+        report.add(audit)
+        if verbose or not audit.ok:
+            for f in findings:
+                print(f"  {f}")
+        print(f"[host] {name:44s} {'ok' if audit.ok else 'FAIL'}")
+
+    for ctl_name, rule, src, detail in [
+            ("injected-host-clock", "rng-host-clock",
+             rng_lint.BROKEN_HOST_CLOCK, "time.time() on the round path"),
+            ("unseeded-default-rng", "rng-unseeded-default-rng",
+             rng_lint.BROKEN_UNSEEDED, "np.random.default_rng() bare"),
+            ("seed-collision", "rng-seed-collision",
+             rng_lint.BROKEN_SEED_COLLISION,
+             "two SeedSequence([seed, client]) sites"),
+            ("set-order-iteration", "rng-order-sensitive-iteration",
+             rng_lint.BROKEN_SET_ITERATION,
+             "aggregation input built from set(clients)")]:
+        report.run_control(
+            ctl_name, rule,
+            lambda s=src, n=ctl_name:
+                rng_lint.lint_host_source(f"control/{n}", s)[0],
+            detail)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="AUDIT_protocol.json")
+    ap.add_argument("--fast", action="store_true",
+                    help="bounded smoke scope: 2-value grids, no 3-plan "
+                         "ladder, no mid-run-join scenario")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    report = AuditReport(matrix={
+        "clients": NUM_CLIENTS, "ranks": list(RANKS),
+        "n_k": {"het": list(N_K_HET), "sym": list(N_K_SYM)},
+        "triggers": sorted(TRIGGERS),
+        "lifecycles": sorted(LIFECYCLES),
+        "grid": list(GRID_FAST if args.fast else GRID_FULL),
+        "scope": "fast" if args.fast else "full",
+        "round_path_files": list(ROUND_PATH_FILES),
+    })
+
+    _protocol_sweep(report, args.fast, args.verbose)
+    _protocol_controls(report)
+    _rng_flow_sweep(report, args.verbose)
+    _rng_host_sweep(report, args.verbose)
+
+    report.write(args.out)
+    s = report.summary()
+    print(f"[vrfy] {s['programs']} programs, {s['errors']} errors, "
+          f"{s['controls']} controls ({len(s['controls_failed'])} dead) "
+          f"-> {args.out}")
+    if not report.ok:
+        for p in report.failed_programs:
+            print(f"[vrfy] FAIL {p.program}: "
+                  + "; ".join(str(f) for f in p.errors[:3]))
+        for name in report.failed_controls:
+            ctl = report.controls[name]
+            why = ctl.error or "did not trip"
+            print(f"[vrfy] DEAD CONTROL {name}: rule {ctl.rule} {why}")
+        return 1
+    print("[vrfy] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
