@@ -200,6 +200,15 @@ def _entry_lora_apply():
             [(4, 24, 56)])
 
 
+def _entry_batched_lora_apply():
+    from repro.kernels import ops
+    x, w = _sds(5, 40), _sds(40, 56)
+    a_pages, b_pages = _sds(3, 6, 40), _sds(3, 56, 6)
+    scales, ids = _sds(3), _sds(5, dtype=jnp.int32)
+    return (ops.batched_lora_apply, (x, w, a_pages, b_pages, scales, ids),
+            [(5, 56)])
+
+
 def _entry_rank_partition_agg():
     from repro.kernels import ops
     m, d, r, n = 3, 100, 5, 130
@@ -256,6 +265,7 @@ def _entry_flash_attention():
 
 KERNEL_REGISTRY = (
     ("lora_apply", _entry_lora_apply),
+    ("batched_lora_apply", _entry_batched_lora_apply),
     ("rank_partition_agg", _entry_rank_partition_agg),
     ("rank_partition_agg_layered", _entry_rank_partition_agg_layered),
     ("factored_stack_gram", _entry_factored_stack_gram),

@@ -285,6 +285,49 @@ def _check_seed_collision(ctx: ProgramContext):
                    f"{src.name}:{linenos[1]}")
 
 
+# call targets that take a key WITHOUT consuming its entropy
+_KEY_NONCONSUMING = {"split", "fold_in", "PRNGKey", "key_data",
+                     "wrap_key_data", "clone"}
+
+
+@RNG_HOST_RULES.rule(
+    "rng-host-key-reuse",
+    "one PRNGKey variable feeds two or more consuming calls in the same "
+    "function: the draws share a stream and correlate (the init-then-"
+    "sample serving bug) -- jax.random.split first (waiver: '# rng: ok')")
+def _check_host_key_reuse(ctx: ProgramContext):
+    src: HostSource = ctx.payload
+    for fn in ast.walk(src.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        key_names = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)
+                    and _dotted(node.value.func)[-1:] == ("PRNGKey",)):
+                key_names.update(t.id for t in node.targets
+                                 if isinstance(t, ast.Name))
+        if not key_names:
+            continue
+        uses: Dict[str, List[int]] = {}
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if _dotted(node.func)[-1:] and \
+                    _dotted(node.func)[-1] in _KEY_NONCONSUMING:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in key_names:
+                    uses.setdefault(arg.id, []).append(node.lineno)
+        for name, linenos in sorted(uses.items()):
+            live = [ln for ln in sorted(linenos)
+                    if not src.waived(ln, "rng")]
+            if len(live) >= 2:
+                yield (f"PRNGKey variable '{name}' consumed at lines "
+                       f"{live}: the draws share one stream",
+                       f"{src.name}:{live[1]}")
+
+
 @RNG_HOST_RULES.rule(
     "rng-order-sensitive-iteration",
     "iteration directly over a set feeds hash-membership-history order "
@@ -354,6 +397,15 @@ BROKEN_SEED_COLLISION = (
     "    return np.random.default_rng(np.random.SeedSequence([seed, client]))\n"
     "def batch_rng(seed, client):\n"
     "    return np.random.default_rng(np.random.SeedSequence([seed, client]))\n"
+)
+
+BROKEN_HOST_KEY_REUSE = (
+    "import jax\n"
+    "def setup(model, seed):\n"
+    "    key = jax.random.PRNGKey(seed)\n"
+    "    params = model.init(key)\n"
+    "    prompts = jax.random.randint(key, (4, 32), 0, 100)\n"
+    "    return params, prompts\n"
 )
 
 BROKEN_SET_ITERATION = (

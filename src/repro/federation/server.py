@@ -259,6 +259,12 @@ class FederatedLoRA:
         self.schedule = get_schedule(fl.lr_schedule, fl.learning_rate,
                                      fl.num_rounds)
         self.round_idx = 0
+        # serving hot-swap (DESIGN.md §11): every aggregation landing bumps
+        # the adapter version and fires the post-aggregate hooks with the
+        # fresh global factors -- sync engines at round finalize, async /
+        # event engines whenever their buffer fires (incl. drain_pending)
+        self.adapter_version = 0
+        self._post_aggregate_hooks: List[Callable] = []
         self.energy = EnergyTrace(lora.rank_levels)
         self.history: List[RoundStats] = []
         self._extract_jit = None   # lazily-built jitted factor extractor
@@ -357,23 +363,34 @@ class FederatedLoRA:
                 results.mags,
                 bucket_parents=tuple(parents
                                      for parents, _, _ in results.buckets))
-            return
-        from repro.core.lora import _is_lora_path
+        else:
+            from repro.core.lora import _is_lora_path
 
-        def rebuild(path, x):
-            if x is None or not _is_lora_path(path):
-                return x
-            parent = tuple(str(getattr(p, "key", p)) for p in path[:-1])
-            if path[-1].key == "lora_m":
-                m_new = results.get((parent, "m"))
-                return x if m_new is None else m_new.astype(x.dtype)
-            b_g, a_g = results[parent]
-            if path[-1].key == "lora_a":
-                return jnp.swapaxes(b_g, -2, -1).astype(x.dtype)
-            return jnp.swapaxes(a_g, -2, -1).astype(x.dtype)
+            def rebuild(path, x):
+                if x is None or not _is_lora_path(path):
+                    return x
+                parent = tuple(str(getattr(p, "key", p)) for p in path[:-1])
+                if path[-1].key == "lora_m":
+                    m_new = results.get((parent, "m"))
+                    return x if m_new is None else m_new.astype(x.dtype)
+                b_g, a_g = results[parent]
+                if path[-1].key == "lora_a":
+                    return jnp.swapaxes(b_g, -2, -1).astype(x.dtype)
+                return jnp.swapaxes(a_g, -2, -1).astype(x.dtype)
 
-        self.global_lora = jax.tree_util.tree_map_with_path(
-            rebuild, self.global_lora, is_leaf=lambda x: x is None)
+            self.global_lora = jax.tree_util.tree_map_with_path(
+                rebuild, self.global_lora, is_leaf=lambda x: x is None)
+        # round landing: bump the serving adapter version and notify
+        # subscribers (AdapterStore hot-swap) with the new global factors
+        self.adapter_version += 1
+        for hook in self._post_aggregate_hooks:
+            hook(self.adapter_version, self.global_lora)
+
+    def add_post_aggregate_hook(self, hook) -> None:
+        """Register ``hook(adapter_version, global_lora)`` to fire at every
+        aggregation landing, across ALL round engines (the single choke
+        point is ``_write_factors``)."""
+        self._post_aggregate_hooks.append(hook)
 
     def _merge_flora_delta(self, deltas: Dict[tuple, jnp.ndarray]) -> None:
         """FLoRA: fold dW into the base dense weights (cold-start restart)."""
@@ -1098,6 +1115,7 @@ class FederatedLoRA:
         # and round history -- without them a resumed run samples a
         # DIFFERENT client sequence and judges collapse on a truncated trace
         meta = {"round": self.round_idx,
+                "adapter_version": self.adapter_version,
                 "method": self.fl.aggregator,
                 "rng_state": self.rng.bit_generator.state,
                 "energy": self.energy.state_dict(),
@@ -1140,6 +1158,8 @@ class FederatedLoRA:
         meta = load_metadata(path + ".lora")
         if meta:
             self.round_idx = meta.get("round", self.round_idx)
+            self.adapter_version = meta.get("adapter_version",
+                                            self.adapter_version)
             if meta.get("rng_state") is not None:
                 # restore IN PLACE on the server's seeded stream: no fresh
                 # unseeded generator is ever constructed on the round path

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.svd import check_fallback_globals
-from repro.kernels.lora_apply import lora_apply_pallas
+from repro.kernels.lora_apply import (batched_lora_apply_pallas,
+                                      lora_apply_pallas)
 from repro.kernels.rank_partition_agg import (gram_left_layered_pallas,
                                               gram_right_layered_pallas,
                                               rank_partition_agg_layered_pallas,
@@ -58,6 +59,60 @@ def lora_apply(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
                           block_k=min(512, xp.shape[1]),
                           interpret=_INTERPRET)
     return y[:m, :n].reshape(lead + (n,)).astype(x.dtype)
+
+
+@jax.jit
+def batched_lora_apply(x: jnp.ndarray, w: jnp.ndarray,
+                       a_pages: jnp.ndarray, b_pages: jnp.ndarray,
+                       scales: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Multi-adapter fused apply: row t of x (..., K) uses adapter page
+    ``ids[t]`` from a_pages (P, r, K) / b_pages (P, N, r) / scales (P,).
+
+    SGMV-style grouping (DESIGN.md §11): rows are sorted by page id and
+    each group is padded to the ``bm`` row-block boundary, so every kernel
+    row block is single-adapter and the paged kernel gathers its (A, B,
+    scale) once per tile via scalar-prefetched block->page indices. All
+    shapes stay static under jit: the padded row count is bounded by
+    ceil(M/bm) + P blocks, zero filler rows are inert, and the scatter
+    back drops them.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    x2 = x.reshape(-1, k)
+    idf = ids.reshape(-1).astype(jnp.int32)
+    m = x2.shape[0]
+    p = a_pages.shape[0]
+    bm = 8
+    # group rows by page: sorted order, per-page extents, block-aligned
+    # destination offsets (group g starts at a bm multiple)
+    order = jnp.argsort(idf, stable=True)
+    ids_sorted = idf[order]
+    counts = jnp.bincount(idf, length=p)
+    blocks_per = (counts + bm - 1) // bm
+    padded = blocks_per * bm
+    group_start = jnp.cumsum(padded) - padded
+    cum_before = jnp.cumsum(counts) - counts
+    dest = group_start[ids_sorted] + (jnp.arange(m) - cum_before[ids_sorted])
+    m_pad = ((m + bm - 1) // bm + p) * bm           # static worst case
+    x_g = jnp.zeros((m_pad, k), x.dtype).at[dest].set(x2[order])
+    # page of each row block: invert the block-aligned group layout
+    # (trailing unused blocks clip to page P-1; their rows are zero)
+    bounds = jnp.cumsum(blocks_per)
+    block_page = jnp.minimum(
+        jnp.searchsorted(bounds, jnp.arange(m_pad // bm), side="right"),
+        p - 1).astype(jnp.int32)
+    # pad every dim to the kernel's tiling granularity (as in lora_apply)
+    xp = _pad_to(x_g, 1, 128)
+    wp = _pad_to(_pad_to(w, 0, 128), 1, 128)
+    ap = _pad_to(_pad_to(a_pages, 1, 8), 2, 128)
+    bp = _pad_to(_pad_to(b_pages, 1, 128), 2, 8)
+    y_g = batched_lora_apply_pallas(
+        xp, wp, ap, bp, scales, block_page,
+        block_m=bm, block_n=min(512, wp.shape[1]),
+        block_k=min(512, xp.shape[1]), interpret=_INTERPRET)
+    y2 = jnp.zeros((m, n), x.dtype).at[order].set(y_g[dest, :n])
+    return y2.reshape(lead + (n,))
 
 
 @jax.jit

@@ -18,6 +18,27 @@ def lora_apply_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
     return (y + scale * (z @ b.astype(jnp.float32).T)).astype(x.dtype)
 
 
+def batched_lora_apply_ref(x: jnp.ndarray, w: jnp.ndarray,
+                           a_pages: jnp.ndarray, b_pages: jnp.ndarray,
+                           scales: jnp.ndarray,
+                           ids: jnp.ndarray) -> jnp.ndarray:
+    """Per-row paged LoRA apply: row t uses adapter page ``ids[t]``.
+
+    x (..., K); ids (...) int32; a_pages (P, r, K); b_pages (P, N, r);
+    scales (P,) f32.  y[t] = x[t] @ w + s_p * (x[t] @ A_p^T) @ B_p^T.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    idf = ids.reshape(-1)
+    a = a_pages.astype(jnp.float32)[idf]            # (M, r, K)
+    b = b_pages.astype(jnp.float32)[idf]            # (M, N, r)
+    s = scales.astype(jnp.float32)[idf]
+    y = x2 @ w.astype(jnp.float32)
+    z = jnp.einsum("mk,mrk->mr", x2, a)
+    y = y + s[:, None] * jnp.einsum("mr,mnr->mn", z, b)
+    return y.reshape(lead + (w.shape[-1],)).astype(x.dtype)
+
+
 def rank_partition_agg_ref(bs: jnp.ndarray, as_: jnp.ndarray,
                            omega: jnp.ndarray) -> jnp.ndarray:
     """dW = sum_m B_m diag(omega_m) A_m.

@@ -1,7 +1,14 @@
-"""Serving driver: batched greedy decoding with the fine-tuned adapters.
+"""Serving driver: multi-tenant batched greedy decoding with the
+fine-tuned adapters (DESIGN.md §11).
 
-Demonstrates the inference side of the system -- prefill fills the KV/SSM
-cache, then serve_step decodes token-by-token for a batch of requests.
+Runs the serving subsystem end to end -- adapters are staged in an
+``AdapterStore`` (paged, rank-bucketed, versioned) and a ``ServingEngine``
+prefills the KV/SSM cache up front at full ``max_len`` via
+``Model.init_cache`` (path-aware seeding; SSM ``conv``/``ssm`` states
+transfer correctly), then decodes token-by-token.
+
+The serving rank is DERIVED from the LoRA config (``r_max``) -- never
+hardcoded -- so train-side rank-level changes cannot desync serving.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --tokens 32
 """
@@ -13,6 +20,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def main(argv=None) -> int:
@@ -21,12 +29,15 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="number of adapter pages to serve across the batch")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     from repro.configs import LoRAConfig, get_config
-    from repro.launch.steps import build_prefill_step, build_serve_step
+    from repro.core.lora import split_lora
     from repro.models import build_model
+    from repro.serving import AdapterStore, ServingEngine
 
     cfg = get_config(args.arch).reduced()
     if not cfg.supports_decode:
@@ -35,43 +46,48 @@ def main(argv=None) -> int:
     lora = LoRAConfig(rank_levels=(4, 8, 16))
     model = build_model(cfg, lora, dtype=jnp.float32, remat=False,
                         block_q=32, block_kv=32)
+    # independent streams: params and prompts must never share a key
     key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
+    k_init, k_prompts, k_perturb = jax.random.split(key, 3)
+    params = model.init(k_init)
+    _, lora_tree = split_lora(params)
+
+    # stage one tenant per rank level (cycled), highest level = the config's
+    # serving rank r_max -- derived, never hardcoded
+    store = AdapterStore(lora.rank_levels, scaling_fn=lora.scaling)
+    levels = sorted(lora.rank_levels, reverse=True)
+    for t in range(max(1, args.tenants)):
+        perturb = jax.tree.map(
+            lambda x: None if x is None
+            else x + 0.01 * t * jnp.ones_like(x), lora_tree,
+            is_leaf=lambda x: x is None)
+        store.put(f"tenant{t}", perturb, levels[t % len(levels)])
+    store.publish()
 
     b, lp = args.batch, args.prompt_len
-    prompts = jax.random.randint(key, (b, lp), 0, cfg.vocab_size)
-    prefill = jax.jit(build_prefill_step(model, 16))
-    serve = jax.jit(build_serve_step(model, 16))
+    prompts = jax.random.randint(k_prompts, (b, lp), 0, cfg.vocab_size)
+    engine = ServingEngine(model, params, store,
+                           max_len=lp + args.tokens, slots=b)
+    tenant_of = [f"tenant{i % max(1, args.tenants)}" for i in range(b)]
 
-    t0 = time.time()
-    logits, layer_caches = prefill(params, {"tokens": prompts})
-    max_len = lp + args.tokens
+    t0 = time.time()   # host-clock: ok (CLI wall phase timing, off the round path)
+    first = engine.admit(range(b), prompts, tenant_of)
+    t_prefill = time.time() - t0   # host-clock: ok (CLI wall phase timing)
 
-    def grow(x):
-        if x.ndim >= 3 and x.shape[2] == lp:
-            pw = [(0, 0)] * x.ndim
-            pw[2] = (0, max_len - lp)
-            return jnp.pad(x, pw)
-        return x
-
-    cache = {"layers": jax.tree.map(grow, layer_caches),
-             "len": jnp.int32(lp)}
-    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
-    t_prefill = time.time() - t0
-
-    generated = [tok]
-    t0 = time.time()
+    generated = [np.asarray(first)]
+    active = jnp.ones((b,), bool)
+    t0 = time.time()   # host-clock: ok (CLI wall phase timing)
     for _ in range(args.tokens - 1):
-        nxt, cache = serve(params, {"token": tok}, cache)
-        tok = nxt[:, None]
-        generated.append(tok)
-    seqs = jnp.concatenate(generated, axis=1)
-    t_decode = time.time() - t0
-    print(f"arch={cfg.name} batch={b} prefill({lp} toks)={t_prefill:.2f}s "
+        generated.append(np.asarray(engine.decode(active)))
+    seqs = np.stack(generated, axis=1)
+    t_decode = time.time() - t0   # host-clock: ok (CLI wall phase timing)
+    print(f"arch={cfg.name} batch={b} tenants={store.published.num_pages} "
+          f"ranks={store.published.ranks} adapter_v{store.published.version} "
+          f"prefill({lp} toks)={t_prefill:.2f}s "
           f"decode({args.tokens} toks)={t_decode:.2f}s "
           f"[{args.tokens * b / max(t_decode, 1e-9):.1f} tok/s]")
     for i in range(min(b, 2)):
-        print(f"  req{i}: {seqs[i].tolist()}")
+        print(f"  req{i} [{tenant_of[i]}]: {seqs[i].tolist()}")
     return 0
 
 

@@ -48,15 +48,27 @@ def lora_init(key, d_in: int, d_out: int, rank: int, dtype=jnp.float32) -> dict:
 
 
 def dense_apply(params: dict, x: jnp.ndarray, *, lora_rank: int = -1,
-                lora_scale: float = 1.0) -> jnp.ndarray:
+                lora_scale: float = 1.0,
+                use_kernel: bool = False) -> jnp.ndarray:
     """Apply dense + optional LoRA (or DoRA when a magnitude is present).
 
     lora_rank: -1 -> use full factors if present; 0 -> disable adapter;
     r > 0 -> statically truncate factors to the client rank r.
+
+    Per-request (multi-tenant serving) adapters: when the LoRA leaves carry
+    a leading batch axis matching x -- lora_a (B, r, in), lora_b (B, out, r)
+    with x (B, L, in), the substitution layout ``serving/engine`` builds --
+    each batch row applies its own factors. ``use_kernel`` routes that
+    branch through the paged Pallas kernel (kernels/ops.batched_lora_apply);
+    off, it runs the batched-einsum oracle path.
     """
     if lora_rank != 0 and "lora_m" in params and "lora_a" in params:
         return _dora_apply(params, x, lora_rank=lora_rank,
                            lora_scale=lora_scale)
+    if (lora_rank != 0 and "lora_a" in params
+            and params["lora_a"].ndim == 3 and x.ndim == 3
+            and params["lora_a"].shape[0] == x.shape[0]):
+        return _batched_lora_dense(params, x, lora_scale, use_kernel)
     y = x @ params["w"].astype(x.dtype)
     if "b" in params:
         y = y + params["b"].astype(x.dtype)
@@ -69,6 +81,33 @@ def dense_apply(params: dict, x: jnp.ndarray, *, lora_rank: int = -1,
         # low-rank bottleneck in the params' (higher) precision, cast at ends
         z = x @ a.astype(x.dtype).T
         y = y + lora_scale * (z @ b.astype(x.dtype).T)
+    return y
+
+
+def _batched_lora_dense(params: dict, x: jnp.ndarray, lora_scale: float,
+                        use_kernel: bool) -> jnp.ndarray:
+    """Per-request adapters: x (B, L, in); lora_a (B, r, in);
+    lora_b (B, out, r). Rank heterogeneity arrives as omega-style zero
+    columns beyond each request's true rank (AdapterStore packing), so no
+    per-row truncation is needed -- zero columns are inert."""
+    a = params["lora_a"]
+    b_f = params["lora_b"]
+    if use_kernel:
+        from repro.kernels.ops import batched_lora_apply
+        bsz, l, _ = x.shape
+        scales = jnp.broadcast_to(
+            jnp.asarray(lora_scale, jnp.float32), (bsz,))
+        ids = jnp.broadcast_to(
+            jnp.arange(bsz, dtype=jnp.int32)[:, None], (bsz, l))
+        y = batched_lora_apply(x, params["w"].astype(x.dtype), a, b_f,
+                               scales, ids)
+    else:
+        y = x @ params["w"].astype(x.dtype)
+        z = jnp.einsum("bld,brd->blr", x, a.astype(x.dtype))
+        y = y + lora_scale * jnp.einsum("blr,bor->blo", z,
+                                        b_f.astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
     return y
 
 

@@ -205,7 +205,8 @@ class Model:
         cfg = self.cfg
         b, l = x.shape[:2]
         hd = cfg.resolved_head_dim
-        lk = dict(lora_rank=lora_rank, lora_scale=lora_scale)
+        lk = dict(lora_rank=lora_rank, lora_scale=lora_scale,
+                  use_kernel=self.use_kernels)
         q_flat = dense_apply(p["q"], x, **lk)
         if self.attn_q_sharding is not None and not self.attn_repeat_kv:
             # constrain the FLAT (B, L, H*hd) projection: always evenly
@@ -247,7 +248,8 @@ class Model:
         cfg = self.cfg
         b = x.shape[0]
         hd = cfg.resolved_head_dim
-        lk = dict(lora_rank=lora_rank, lora_scale=lora_scale)
+        lk = dict(lora_rank=lora_rank, lora_scale=lora_scale,
+                  use_kernel=self.use_kernels)
         q = dense_apply(p["q"], x, **lk).reshape(b, 1, cfg.num_heads, hd)
         k = dense_apply(p["k"], x, **lk).reshape(b, 1, cfg.num_kv_heads, hd)
         v = dense_apply(p["v"], x, **lk).reshape(b, 1, cfg.num_kv_heads, hd)
@@ -255,10 +257,21 @@ class Model:
         k = self._apply_rope(k, positions)
         s_cache = cache_l["k"].shape[1]
         write_idx = cache_len % s_cache          # ring buffer when S < max_len
-        k_cache = jax.lax.dynamic_update_slice(
-            cache_l["k"], k.astype(cache_l["k"].dtype), (0, write_idx, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(
-            cache_l["v"], v.astype(cache_l["v"].dtype), (0, write_idx, 0, 0))
+        if jnp.ndim(cache_len) == 0:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache_l["k"], k.astype(cache_l["k"].dtype),
+                (0, write_idx, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache_l["v"], v.astype(cache_l["v"].dtype),
+                (0, write_idx, 0, 0))
+        else:
+            # per-slot cache lengths (continuous-batching serving): each
+            # batch row writes its own ring position
+            rows = jnp.arange(b)
+            k_cache = cache_l["k"].at[rows, write_idx].set(
+                k[:, 0].astype(cache_l["k"].dtype))
+            v_cache = cache_l["v"].at[rows, write_idx].set(
+                v[:, 0].astype(cache_l["v"].dtype))
         window = None
         if (cfg.attn_type == ATTN_SLIDING and cfg.sliding_window
                 and s_cache > cfg.sliding_window):
@@ -374,6 +387,9 @@ class Model:
             new_cache.update(conv=conv_s, ssm=ssm_s)
             return x + mixed, new_cache
         if cfg.mla is not None:
+            if jnp.ndim(cache_len) != 0:
+                raise NotImplementedError(
+                    "per-slot cache lengths not supported for MLA decode")
             s_cache = cache_l["ckv"].shape[1]
             attn_out, (ckv, krope) = mla_decode(
                 p["attn"], h, positions[:, 0] if positions.ndim > 1 else positions,
@@ -546,11 +562,15 @@ class Model:
         if self.cfg.kind == "dense" and self.cfg.name.startswith("gemma"):
             x = x * jnp.asarray(self.cfg.d_model ** 0.5, x.dtype)
         b = x.shape[0]
+        # cache["len"] is a scalar (lock-step decode) or (B,) vector
+        # (per-slot lengths under continuous batching) -- both reshape to
+        # one position column
+        pos_col = jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(cache_len, jnp.int32), (-1,)), (b,))[:, None]
         if self.cfg.rope_type == "mrope":
-            positions = jnp.broadcast_to(
-                jnp.full((b, 1), cache_len, jnp.int32), (3, b, 1))
+            positions = jnp.broadcast_to(pos_col, (3, b, 1))
         else:
-            positions = jnp.full((b, 1), cache_len, jnp.int32)
+            positions = pos_col
 
         def group_body(x, inp):
             p_group, cache_group, group_idx = inp
@@ -642,8 +662,11 @@ def _decode_attention_windowed(q, k_cache, v_cache, total, lo, *,
     if softcap > 0.0:
         scores = softcap * jnp.tanh(scores / softcap)
     pos = jnp.arange(s)
-    valid = (pos < total) & (pos >= jnp.maximum(lo, 0))
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    # total / lo are scalars or (B,) per-slot lengths; broadcast over rows
+    total_b = jnp.reshape(jnp.asarray(total), (-1, 1))
+    lo_b = jnp.reshape(jnp.asarray(lo), (-1, 1))
+    valid = (pos[None, :] < total_b) & (pos[None, :] >= jnp.maximum(lo_b, 0))
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, h, d).astype(q.dtype)

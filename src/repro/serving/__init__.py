@@ -1,0 +1,14 @@
+"""Multi-tenant adapter serving (DESIGN.md §11).
+
+The deployment counterpart of the federated training stack: a paged
+adapter cache with atomic round-landing hot-swap (``AdapterStore``), a
+batched multi-adapter inference engine over the paged LoRA kernel
+(``ServingEngine``), and a continuous-batching request scheduler on the
+virtual-clock machinery (``ContinuousBatcher``).
+"""
+from repro.serving.adapter_store import AdapterStore, PublishedAdapters
+from repro.serving.engine import ServingEngine, seed_cache
+from repro.serving.scheduler import ContinuousBatcher, ServeRequest
+
+__all__ = ["AdapterStore", "PublishedAdapters", "ServingEngine",
+           "seed_cache", "ContinuousBatcher", "ServeRequest"]

@@ -63,6 +63,99 @@ class TestLoRAApplyKernel:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=1e-4)
 
+    def test_direct_call_pads_non_divisible(self):
+        """lora_apply_pallas itself (not just the ops wrapper) must accept
+        extents that do not divide the block sizes (PR-4 pad-to-tile
+        convention; ISSUE 9 regression shapes M=300, N=520, r=12)."""
+        key = jax.random.PRNGKey(9)
+        x = jax.random.normal(key, (300, 130))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (130, 520)) * 0.1
+        a = jax.random.normal(jax.random.fold_in(key, 2), (12, 130)) * 0.1
+        b = jax.random.normal(jax.random.fold_in(key, 3), (520, 12)) * 0.1
+        got = lora_apply_pallas(x, w, a, b, 1.7, block_m=256, block_n=512,
+                                block_k=128)
+        want = ref.lora_apply_ref(x, w, a, b, 1.7)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+
+
+class TestBatchedLoRAApplyKernel:
+    """Paged multi-adapter serving kernel (DESIGN.md §11)."""
+
+    def _pages(self, key, p, r8, k, n, ranks):
+        ks = jax.random.split(key, 3)
+        a_pages = jax.random.normal(ks[0], (p, r8, k)) * 0.1
+        b_pages = jax.random.normal(ks[1], (p, n, r8)) * 0.1
+        # heterogeneous effective ranks: omega-style zero columns
+        col = jnp.arange(r8)
+        mask = col[None, :] < jnp.asarray(ranks)[:, None]      # (P, r8)
+        a_pages = a_pages * mask[:, :, None]
+        b_pages = b_pages * mask[:, None, :]
+        scales = jnp.asarray([2.0 / r for r in ranks], jnp.float32)
+        return a_pages, b_pages, scales
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_heterogeneous_ranks_vs_per_request_dense(self, dtype):
+        """Each request row applies its own (A, B, rank, scale); padded
+        rank columns are zero and must be inert. Reference = per-request
+        dense truncation at the page's true rank."""
+        ranks = (4, 8, 16)
+        p, r8, k, n = len(ranks), 16, 72, 56
+        key = jax.random.PRNGKey(11)
+        a_pages, b_pages, scales = self._pages(
+            jax.random.fold_in(key, 0), p, r8, k, n, ranks)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (5, 7, k))
+        ids = jax.random.randint(jax.random.fold_in(key, 2), (5, 7), 0, p)
+        got = ops.batched_lora_apply(
+            x.astype(dtype), jnp.asarray(0.1 * np.eye(k, n), dtype),
+            a_pages.astype(dtype), b_pages.astype(dtype), scales, ids)
+        # per-request dense reference with TRUE truncation (not padding)
+        w = 0.1 * np.eye(k, n, dtype=np.float32)
+        xf = np.asarray(x, np.float32).reshape(-1, k)
+        idf = np.asarray(ids).reshape(-1)
+        want = np.empty((xf.shape[0], n), np.float32)
+        for t in range(xf.shape[0]):
+            pg = int(idf[t])
+            r = ranks[pg]
+            a = np.asarray(a_pages, np.float32)[pg, :r]
+            b = np.asarray(b_pages, np.float32)[pg, :, :r]
+            want[t] = xf[t] @ w + float(scales[pg]) * (xf[t] @ a.T) @ b.T
+        want = want.reshape(5, 7, n)
+        tol = 1e-4 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   atol=tol, rtol=tol)
+
+    def test_matches_ref_oracle_odd_shapes(self):
+        ranks = (8, 16, 4, 8)
+        p, r8, k, n = len(ranks), 16, 100, 72
+        key = jax.random.PRNGKey(23)
+        a_pages, b_pages, scales = self._pages(
+            jax.random.fold_in(key, 0), p, r8, k, n, ranks)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+        x = jax.random.normal(jax.random.fold_in(key, 2), (13, k))
+        ids = jax.random.randint(jax.random.fold_in(key, 3), (13,), 0, p)
+        got = ops.batched_lora_apply(x, w, a_pages, b_pages, scales, ids)
+        want = ref.batched_lora_apply_ref(x, w, a_pages, b_pages, scales,
+                                          ids)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+
+    def test_single_page_equals_single_adapter(self):
+        """One page + uniform ids must reproduce ops.lora_apply exactly
+        (same fused math, different gather path)."""
+        key = jax.random.PRNGKey(31)
+        k, n, r = 64, 64, 8
+        x = jax.random.normal(key, (11, k))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+        a = jax.random.normal(jax.random.fold_in(key, 2), (r, k)) * 0.1
+        b = jax.random.normal(jax.random.fold_in(key, 3), (n, r)) * 0.1
+        got = ops.batched_lora_apply(
+            x, w, a[None], b[None], jnp.ones((1,), jnp.float32),
+            jnp.zeros((11,), jnp.int32))
+        want = ops.lora_apply(x, w, a, b, 1.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
 
 class TestRankPartitionAggKernel:
     @pytest.mark.parametrize("m,d,r,n", [

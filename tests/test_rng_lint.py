@@ -7,7 +7,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.analysis.rng_lint import (BROKEN_HOST_CLOCK, BROKEN_SEED_COLLISION,
+from repro.analysis.rng_lint import (BROKEN_HOST_CLOCK,
+                                     BROKEN_HOST_KEY_REUSE,
+                                     BROKEN_SEED_COLLISION,
                                      BROKEN_SET_ITERATION, BROKEN_UNSEEDED,
                                      broken_key_reuse, key_flow,
                                      lint_host_source, lint_key_flow)
@@ -98,8 +100,9 @@ def test_key_flow_report_counts_keys():
     (BROKEN_HOST_CLOCK, "rng-host-clock"),
     (BROKEN_UNSEEDED, "rng-unseeded-default-rng"),
     (BROKEN_SEED_COLLISION, "rng-seed-collision"),
-    (BROKEN_SET_ITERATION, "rng-order-sensitive-iteration")],
-    ids=["clock", "unseeded", "collision", "set-iter"])
+    (BROKEN_SET_ITERATION, "rng-order-sensitive-iteration"),
+    (BROKEN_HOST_KEY_REUSE, "rng-host-key-reuse")],
+    ids=["clock", "unseeded", "collision", "set-iter", "key-reuse"])
 def test_broken_host_sources_trip(src, rule):
     findings, stats = lint_host_source("broken.py", src)
     assert rule in _rules(findings)
@@ -155,6 +158,43 @@ def test_distinct_seed_tags_do_not_collide():
     )
     findings, _ = lint_host_source("tagged.py", src)
     assert findings == []
+
+
+def test_host_key_reuse_split_is_silent():
+    """The fixed serve.py pattern -- split, then one consumer per subkey --
+    must not trip; passing a key to split/fold_in is not consumption."""
+    clean = (
+        "import jax\n"
+        "def setup(model, seed):\n"
+        "    key = jax.random.PRNGKey(seed)\n"
+        "    k_init, k_data = jax.random.split(key)\n"
+        "    params = model.init(k_init)\n"
+        "    prompts = jax.random.randint(k_data, (4, 32), 0, 100)\n"
+        "    return params, prompts\n"
+    )
+    findings, _ = lint_host_source("clean_split.py", clean)
+    assert findings == []
+
+
+def test_host_key_reuse_waiver_suppresses():
+    src = BROKEN_HOST_KEY_REUSE.replace(
+        "params = model.init(key)",
+        "params = model.init(key)  # rng: ok (regression fixture)")
+    findings, _ = lint_host_source("waived_reuse.py", src)
+    assert findings == []
+
+
+def test_real_serving_path_sources_are_clean():
+    """The serving path (incl. the rewritten serve.py CLI, whose PRNG key
+    reuse this rule was written to catch) passes the host lint."""
+    rel = ("src/repro/serving/adapter_store.py",
+           "src/repro/serving/engine.py",
+           "src/repro/serving/scheduler.py",
+           "src/repro/launch/serve.py")
+    for r in rel:
+        with open(os.path.join(_ROOT, r)) as fh:
+            findings, _ = lint_host_source(r, fh.read())
+        assert findings == [], (r, findings)
 
 
 def test_real_round_path_sources_are_clean():

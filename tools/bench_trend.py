@@ -49,6 +49,15 @@ moves it, but small drifts are expected when trigger constants are
 intentionally retuned. A fresh ``null`` (target energy never reached)
 against a finite baseline is always a regression.
 
+Serving rows (``--serve-baseline``/``--serve-fresh``, the tracked
+``BENCH_serve_latency.json``) are VIRTUAL-time continuous-batching
+outcomes -- deterministic like the event rows -- gated per
+(batch, adapters, swap_every) cell on ``virtual_p95_s`` (up = worse) and
+``virtual_throughput_tok_per_s`` (down = worse) at the same wide
+catastrophic-only bar: only a structural scheduler/engine regression can
+move them, but intentional cost-constant retunes shift every cell a
+little. Wall-clock context fields are never gated.
+
 Exit status: 0 clean, 1 regression, 2 usage/IO error.
 """
 from __future__ import annotations
@@ -118,6 +127,45 @@ def _gate_events(baseline: dict, fresh: dict, ref_threshold: float,
               f"aggs={row.get('aggregations')})")
         if regressed:
             regressions.append((name, ratio))
+
+
+def _serve_rows(artifact: dict) -> dict:
+    """{(batch, adapters, swap_every): row} from BENCH_serve_latency."""
+    return {(r.get("batch"), r.get("adapters"), r.get("swap_every")): r
+            for r in artifact.get("rows") or []}
+
+
+def gate_serve(baseline: dict, fresh: dict, ref_threshold: float,
+               regressions: list) -> None:
+    """Gate serving cells on virtual p95 latency and token throughput at
+    the wide catastrophic-only bar (virtual time is deterministic)."""
+    base_sv, fresh_sv = _serve_rows(baseline), _serve_rows(fresh)
+    if not fresh_sv:
+        return
+    print(f"[bench-trend] {len(fresh_sv)} serving cells (virtual time, "
+          f"bar {ref_threshold:.1f}x)")
+    for key in sorted(fresh_sv, key=str):
+        batch, adapters, swap = key
+        row = fresh_sv[key]
+        name = f"serve/b{batch}_a{adapters}_sw{swap}"
+        if key not in base_sv:
+            print(f"  NEW    {name}: p95={row.get('virtual_p95_s'):.3f}s")
+            continue
+        base = base_sv[key]
+        ratios = []
+        for field, worse_up in (("virtual_p95_s", True),
+                                ("virtual_throughput_tok_per_s", False)):
+            b, f = base.get(field), row.get(field)
+            if not b or not f:
+                continue
+            ratios.append((field, f / b if worse_up else b / f))
+        regressed = any(r > ref_threshold for _, r in ratios)
+        flag = "REGRESS" if regressed else "ok"
+        print(f"  {flag:7s}{name}: "
+              + " ".join(f"{fld}={r:.2f}x" for fld, r in ratios))
+        if regressed:
+            regressions.append(
+                (name, max(r for _, r in ratios)))
 
 
 def compare(baseline: dict, fresh: dict, *, threshold: float,
@@ -190,6 +238,12 @@ def main(argv=None) -> int:
                     help="absolute fail ratio for the engine/batched "
                          "reference row in normalized mode (wide: "
                          "cross-session absolute drift is 2-3x)")
+    ap.add_argument("--serve-baseline", default=None,
+                    help="tracked BENCH_serve_latency.json snapshot "
+                         "(optional; gated only when both serve paths "
+                         "are given)")
+    ap.add_argument("--serve-fresh", default=None,
+                    help="freshly produced serving artifact")
     args = ap.parse_args(argv)
     try:
         with open(args.baseline) as f:
@@ -199,9 +253,28 @@ def main(argv=None) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"[bench-trend] cannot load artifacts: {e}")
         return 2
-    return compare(baseline, fresh, threshold=args.threshold,
-                   absolute=args.absolute,
-                   ref_threshold=args.ref_threshold)
+    rc = compare(baseline, fresh, threshold=args.threshold,
+                 absolute=args.absolute,
+                 ref_threshold=args.ref_threshold)
+    if args.serve_baseline and args.serve_fresh:
+        try:
+            with open(args.serve_baseline) as f:
+                serve_base = json.load(f)
+            with open(args.serve_fresh) as f:
+                serve_fresh = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[bench-trend] cannot load serving artifacts: {e}")
+            return 2
+        serve_reg: list = []
+        gate_serve(serve_base, serve_fresh, args.ref_threshold, serve_reg)
+        if serve_reg:
+            worst = max(serve_reg, key=lambda kv: kv[1])
+            print(f"[bench-trend] FAIL: {len(serve_reg)} serving cell(s) "
+                  f"regressed (worst {worst[0]} {worst[1]:.2f}x)")
+            rc = max(rc, 1)
+        else:
+            print("[bench-trend] OK: no serving regression")
+    return rc
 
 
 if __name__ == "__main__":

@@ -16,6 +16,9 @@
 #                            # regression of existing engine x backend rows
 #                            # (tools/bench_trend.py; event rows append-only)
 #   tools/ci.sh bench-full   # the whole quick benchmark suite (run.py)
+#   tools/ci.sh serve-smoke  # multi-tenant serving subsystem (DESIGN.md
+#                            # §11): adapter store, engine equivalence,
+#                            # hot-swap atomicity, scheduler tests
 #   tools/ci.sh shard-smoke  # sharded round engine equivalence under a
 #                            # forced 8-virtual-device CPU host platform
 #   tools/ci.sh kernel-smoke # backend="kernel" engine matrix (sequential/
@@ -69,7 +72,8 @@ case "$tier" in
     exec "$0" verify
     ;;
   smoke)
-    python -m pytest -x -q -m "not slow" -k "not federation and not dryrun and not sharded_engine and not kernel_engines"
+    python -m pytest -x -q -m "not slow" -k "not federation and not dryrun and not sharded_engine and not kernel_engines and not serving"
+    python -m pytest -x -q -m "not slow" tests/test_serving.py
     "$0" lint-fast
     exec "$0" verify-fast
     ;;
@@ -80,16 +84,24 @@ case "$tier" in
   bench-check)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     baseline="$(mktemp /tmp/bench_baseline.XXXXXX.json)"
-    trap 'rm -f "$baseline"' EXIT
+    serve_baseline="$(mktemp /tmp/bench_serve_baseline.XXXXXX.json)"
+    trap 'rm -f "$baseline" "$serve_baseline"' EXIT
     cp BENCH_round_latency.json "$baseline"
+    cp BENCH_serve_latency.json "$serve_baseline"
     python -m benchmarks.bench_round_latency --engine all
+    python -m benchmarks.bench_serve_latency
     exec_status=0
     python tools/bench_trend.py --baseline "$baseline" \
-      --fresh BENCH_round_latency.json || exec_status=$?
+      --fresh BENCH_round_latency.json \
+      --serve-baseline "$serve_baseline" \
+      --serve-fresh BENCH_serve_latency.json || exec_status=$?
     exit "$exec_status"
     ;;
   bench-full)
     exec python -m benchmarks.run --quick
+    ;;
+  serve-smoke)
+    exec python -m pytest -x -q tests/test_serving.py
     ;;
   shard-smoke)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
@@ -125,7 +137,7 @@ case "$tier" in
       --out "$scratch/AUDIT_protocol.json"
     ;;
   *)
-    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|shard-smoke|kernel-smoke|lint|certify|lint-fast|verify|verify-fast]" >&2
+    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|serve-smoke|shard-smoke|kernel-smoke|lint|certify|lint-fast|verify|verify-fast]" >&2
     exit 2
     ;;
 esac

@@ -222,9 +222,18 @@ ROUND_PATH_FILES = (
     "src/repro/analysis/protocol.py",
 )
 
+# serving-path sources: the hot-swap/decode loop must be as deterministic as
+# the round path (the serve CLI's wall-phase prints carry explicit waivers)
+SERVING_PATH_FILES = (
+    "src/repro/serving/adapter_store.py",
+    "src/repro/serving/engine.py",
+    "src/repro/serving/scheduler.py",
+    "src/repro/launch/serve.py",
+)
+
 
 def _rng_host_sweep(report: AuditReport, verbose: bool) -> None:
-    for path in ROUND_PATH_FILES:
+    for path in ROUND_PATH_FILES + SERVING_PATH_FILES:
         with open(path) as f:
             source = f.read()
         name = f"rng-host/{path.split('src/repro/')[-1]}"
@@ -246,7 +255,10 @@ def _rng_host_sweep(report: AuditReport, verbose: bool) -> None:
              "two SeedSequence([seed, client]) sites"),
             ("set-order-iteration", "rng-order-sensitive-iteration",
              rng_lint.BROKEN_SET_ITERATION,
-             "aggregation input built from set(clients)")]:
+             "aggregation input built from set(clients)"),
+            ("host-key-reuse", "rng-host-key-reuse",
+             rng_lint.BROKEN_HOST_KEY_REUSE,
+             "one PRNGKey feeding init AND randint")]:
         report.run_control(
             ctl_name, rule,
             lambda s=src, n=ctl_name:
@@ -271,6 +283,7 @@ def main(argv=None) -> int:
         "grid": list(GRID_FAST if args.fast else GRID_FULL),
         "scope": "fast" if args.fast else "full",
         "round_path_files": list(ROUND_PATH_FILES),
+        "serving_path_files": list(SERVING_PATH_FILES),
     })
 
     _protocol_sweep(report, args.fast, args.verbose)
