@@ -86,7 +86,8 @@ def _merge_artifact(update: dict) -> dict:
 
 def _make(engine: str, *, rounds: int, d_model: int, batches_per_round: int,
           local_batch_size: int, mesh=None, pipeline_depth: int = 1,
-          server_momentum_beta: float = 0.0, backend: str = "factored"):
+          server_momentum_beta: float = 0.0, backend: str = "factored",
+          transport=None):
     from repro.federation.experiment import build_experiment
     return build_experiment(
         "raflora",
@@ -98,7 +99,7 @@ def _make(engine: str, *, rounds: int, d_model: int, batches_per_round: int,
         samples_per_class=40, num_classes=8, d_model=d_model,
         batches_per_round=batches_per_round, round_engine=engine, mesh=mesh,
         pipeline_depth=pipeline_depth, backend=backend,
-        server_momentum_beta=server_momentum_beta)
+        server_momentum_beta=server_momentum_beta, transport=transport)
 
 
 def _time_blocks(servers: dict, *, blocks: int, rounds_per_block: int,
@@ -340,6 +341,98 @@ def run_kernel_backend(rounds: int = 8, warmup: int = 2, d_model: int = 64,
     return result
 
 
+def _upload_bytes_per_round(server, mode) -> int:
+    """Analytic client->server upload bytes for one full-participation
+    round: per participating client, per LoRA adapter, the factor pair at
+    the client's rank level. f32 ships raw (d*r + r*n)*4; the transport
+    modes ship the QuantFactor payload + f32 per-column scales."""
+    from repro.federation.transport import TransportConfig, UpdateTransport
+    tr = None if mode == "f32" else UpdateTransport(TransportConfig(mode))
+    shapes = []                               # (d, n) per adapter
+    for parent, (b, a) in _adapter_shapes(server):
+        shapes.append((b, a))
+    total = 0
+    for rank in server.registry.ranks:
+        rank = int(rank)                       # np.int64 is not JSON-able
+        for d, n in shapes:
+            if tr is None:
+                total += (d * rank + rank * n) * 4
+            else:
+                total += tr.payload_bytes(d, n, rank)
+    return int(total)
+
+
+def _adapter_shapes(server):
+    import jax
+    flat = jax.tree_util.tree_flatten_with_path(server.global_lora)[0]
+    got = {}
+    for path, leaf in flat:
+        key = tuple(str(getattr(p, "key", p)) for p in path)
+        if key[-1] == "lora_b":
+            got.setdefault(key[:-1], [0, 0])[0] = leaf.shape[-2]
+        elif key[-1] == "lora_a":
+            got.setdefault(key[:-1], [0, 0])[1] = leaf.shape[-1]
+    return sorted(got.items())
+
+
+def run_transport(rounds: int = 8, warmup: int = 2, d_model: int = 64,
+                  batches_per_round: int = 1,
+                  local_batch_size: int = 16) -> dict:
+    """Compressed-transport study (DESIGN.md §12): the batched engine with
+    f32 uploads vs int8 and bf16 quantized transport (error feedback on),
+    interleaved-block-timed like every other study, PLUS the analytic
+    upload bytes per round for each mode -- the ``bytes_per_round`` column
+    the tracked artifact carries for successive PRs. Latency rows are gated
+    by ``tools/bench_trend.py`` at the standard bar; the bytes column is
+    exact (shape arithmetic, nothing to drift)."""
+    from repro.federation.transport import TransportConfig
+    total = rounds + warmup
+    servers = {
+        "batched_f32": _make("batched", rounds=total, d_model=d_model,
+                             batches_per_round=batches_per_round,
+                             local_batch_size=local_batch_size).server,
+        "batched_int8": _make("batched", rounds=total, d_model=d_model,
+                              batches_per_round=batches_per_round,
+                              local_batch_size=local_batch_size,
+                              transport=TransportConfig(mode="int8")).server,
+        "batched_bf16": _make("batched", rounds=total, d_model=d_model,
+                              batches_per_round=batches_per_round,
+                              local_batch_size=local_batch_size,
+                              transport=TransportConfig(mode="bf16")).server,
+    }
+    times = _time_blocks(servers, blocks=rounds, rounds_per_block=1,
+                         warmup=warmup)
+
+    medians = {k: float(np.median(ts)) for k, ts in times.items()}
+    byts = {k: _upload_bytes_per_round(servers[k], k.split("_")[1])
+            for k in servers}
+    result = {
+        "config": {"clients_per_round": 8, "rounds_timed": rounds,
+                   "warmup_rounds": warmup, "d_model": d_model,
+                   "batches_per_round": batches_per_round,
+                   "local_batch_size": local_batch_size,
+                   "rank_levels": [4, 8, 16], "method": "raflora",
+                   "error_feedback": True},
+        "per_round_s": {k: ts for k, ts in times.items()},
+        "median_s": medians,
+        "bytes_per_round": byts,
+        "bytes_reduction_int8":
+            byts["batched_f32"] / byts["batched_int8"],
+        "bytes_reduction_bf16":
+            byts["batched_f32"] / byts["batched_bf16"],
+    }
+    _merge_artifact({"transport": result})
+
+    for k in servers:
+        emit(f"round_latency/{k}", medians[k] * 1e6,
+             f"median_round_ms={medians[k] * 1e3:.1f} "
+             f"upload_MB={byts[k] / 1e6:.2f}")
+    emit("round_latency/bytes_reduction_int8", 0.0,
+         f"{result['bytes_reduction_int8']:.2f}x")
+    print(f"# artifact: {ARTIFACT}")
+    return result
+
+
 def run_event(rounds: int = 10, d_model: int = 32,
               local_batch_size: int = 8,
               straggler_fracs=(0.0, 0.5),
@@ -427,7 +520,7 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=("batched", "sharded", "async",
-                                         "event", "all"),
+                                         "event", "transport", "all"),
                     default="batched")
     ap.add_argument("--backend", choices=("factored", "kernel"),
                     default="factored",
@@ -447,11 +540,14 @@ if __name__ == "__main__":
         run_async()
     elif args.engine == "event":
         run_event()
+    elif args.engine == "transport":
+        run_transport()
     elif args.engine == "all":
         run()
         run_sharded()
         run_async()
         run_kernel_backend()
         run_event()
+        run_transport()
     else:
         run()

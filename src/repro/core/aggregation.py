@@ -50,11 +50,32 @@ class AggregationResult:
     merge_delta: Optional[jnp.ndarray] = None  # FLoRA: dW folded into base
 
 
+def _dq(x):
+    """Dequantize a transport ``QuantFactor`` to f32 (duck-typed so this
+    core module never imports ``repro.federation``); plain factor arrays
+    pass through untouched. The single dequantization point of every
+    stack-build path -- all weighting (omega rows, staleness discounts,
+    the Eq. 8 fallback) happens downstream on dequantized values, so the
+    aggregation math is byte-layout-agnostic (DESIGN.md §12)."""
+    if hasattr(x, "q") and hasattr(x, "scale"):
+        return x.q.astype(jnp.float32) * x.scale
+    return x
+
+
+def _leading(x) -> int:
+    """Leading-axis length of a factor that may be a QuantFactor."""
+    return (x.q if hasattr(x, "q") else x).shape[0]
+
+
 def pad_stack(factors: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
               r_max: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """[(B_k (d, r_k), A_k (r_k, n))] -> padded stacks (M,d,r_max),(M,r_max,n)."""
+    """[(B_k (d, r_k), A_k (r_k, n))] -> padded stacks (M,d,r_max),(M,r_max,n).
+
+    Entries may be transport-quantized (QuantFactor pairs): the sequential
+    reference path dequantizes here, at stack-build time."""
     bs, as_ = [], []
     for b, a in factors:
+        b, a = _dq(b), _dq(a)
         r = b.shape[-1]
         pad_b = [(0, 0)] * b.ndim
         pad_b[-1] = (0, r_max - r)
@@ -327,8 +348,8 @@ def _dispatch_stacked(bs, as_, warg, global_b, global_a, fallback, r_max,
 @functools.partial(jax.jit, static_argnames=("r_max", "backend", "method"))
 def _stacked_core(bs, as_, warg, global_b, global_a, fallback, *,
                   r_max, backend, method):
-    return _dispatch_stacked(bs, as_, warg, global_b, global_a, fallback,
-                             r_max, backend, method)
+    return _dispatch_stacked(_dq(bs), _dq(as_), warg, global_b, global_a,
+                             fallback, r_max, backend, method)
 
 
 def _pad_rank(x, r_max: int, axis: int):
@@ -346,11 +367,15 @@ def _grouped_core(group_bs, group_as, warg, global_bs, global_as, fallback,
     group_bs: tuple over rank groups of tuples over bucket adapters of
     (G, ..., d, r_group) arrays (group_as analogous); global_bs/global_as:
     tuples over bucket adapters of (..., d, r_max)/(..., r_max, n).
+    Transport-quantized entries (QuantFactor) dequantize here, once, at
+    stack-build time.
     """
-    bs = jnp.concatenate([_pad_rank(jnp.stack(bt, axis=1), r_max, -1)
-                          for bt in group_bs])        # (M, P, ..., d, r_max)
-    as_ = jnp.concatenate([_pad_rank(jnp.stack(at, axis=1), r_max, -2)
-                           for at in group_as])       # (M, P, ..., r_max, n)
+    bs = jnp.concatenate(
+        [_pad_rank(jnp.stack([_dq(b) for b in bt], axis=1), r_max, -1)
+         for bt in group_bs])                         # (M, P, ..., d, r_max)
+    as_ = jnp.concatenate(
+        [_pad_rank(jnp.stack([_dq(a) for a in at], axis=1), r_max, -2)
+         for at in group_as])                         # (M, P, ..., r_max, n)
     gb = None if global_bs is None else jnp.stack(global_bs)
     ga = None if global_as is None else jnp.stack(global_as)
     return _dispatch_stacked(bs, as_, warg, gb, ga, fallback, r_max,
@@ -408,6 +433,72 @@ def _realloc_gram_lead(u_c, v_c, g_u, g_v, r_max):
             s.reshape(lead + (r_max,)))
 
 
+def _sharded_partial_quantized(group_bs, group_as, group_w, *, r_max,
+                               axis, axes, axis_sizes):
+    """Quantized factored/kernel partial: all-reduce the COMPRESSED bytes.
+
+    Instead of dequantizing locally and psumming f32 stacks, each shard
+    zero-scatters its raw int8/bf16 payload block into the full
+    (…, d, S*width) stack -- mirroring ``factored_stack_batched``'s column
+    layout exactly (column index = client*r_max + rank) -- together with a
+    tiny f32 per-column weight vector folding ``scale * sqrt(omega)``.
+    Disjoint blocks mean the payload psum is an all-gather in disguise
+    (every position has exactly one nonzero contributor, so int8 never
+    overflows), and the wire bytes drop by ~4x at int8 / 2x at bf16: the
+    claim ``launch/fl_dryrun.py --transport`` verifies. Dequantization
+    happens ONCE, after the reduction, so the returned (u_c, v_c) are the
+    same f32 stacks the unquantized path reduces -- the Eq. 8 fallback
+    append and the SVD realloc downstream are untouched, and the kernel
+    backend shares this staging (its Gram grids consume the reduced,
+    replicated stack exactly as in the unquantized sharded path).
+    """
+    qs = jnp.concatenate(
+        [_pad_rank(jnp.stack([f.q for f in bt], axis=1), r_max, -1)
+         for bt in group_bs])           # (m_loc, P, ..., d, r_max) payload
+    sb = jnp.concatenate(
+        [_pad_rank(jnp.stack([f.scale for f in bt], axis=1), r_max, -1)
+         for bt in group_bs])           # (m_loc, P, ..., 1, r_max) f32
+    qa = jnp.concatenate(
+        [_pad_rank(jnp.stack([f.q for f in at], axis=1), r_max, -2)
+         for at in group_as])           # (m_loc, P, ..., r_max, n) payload
+    sa = jnp.concatenate(
+        [_pad_rank(jnp.stack([f.scale for f in at], axis=1), r_max, -2)
+         for at in group_as])           # (m_loc, P, ..., r_max, 1) f32
+    w = jnp.concatenate(group_w)        # (m_loc, r_max) omega rows
+    m, r = qs.shape[0], qs.shape[-1]
+    lead = qs.shape[1:-2]
+    sq = jnp.sqrt(jnp.maximum(w, 0.0)).astype(jnp.float32)
+    sqr = sq.reshape((m,) + (1,) * len(lead) + (r,))
+    colw_u = sb[..., 0, :] * sqr        # (m, *lead, r): scale * sqrt(omega)
+    colw_v = sa[..., 0] * sqr
+    # factored_stack_batched layout: column index = client*r_max + rank
+    u_pay = jnp.moveaxis(qs, 0, -2).reshape(lead + (qs.shape[-2], m * r))
+    v_pay = jnp.moveaxis(qa, 0, -3).reshape(lead + (m * r, qa.shape[-1]))
+    cu = jnp.moveaxis(colw_u, 0, -2).reshape(lead + (m * r,))
+    cv = jnp.moveaxis(colw_v, 0, -2).reshape(lead + (m * r,))
+    width = m * r
+    shard_idx = jnp.int32(0)            # flat shard index over the axes
+    n_shards = 1
+    for a, size in zip(axes, axis_sizes):
+        shard_idx = shard_idx * size + jax.lax.axis_index(a)
+        n_shards *= size
+    off = shard_idx * width
+
+    def scatter(x, ax):
+        shape = list(x.shape)
+        shape[ax] = n_shards * width
+        full = jnp.zeros(tuple(shape), x.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(full, x, off, axis=ax)
+
+    u_full = jax.lax.psum(scatter(u_pay, -1), axis)
+    v_full = jax.lax.psum(scatter(v_pay, -2), axis)
+    cu_full = jax.lax.psum(scatter(cu, -1), axis)
+    cv_full = jax.lax.psum(scatter(cv, -1), axis)
+    u_c = u_full.astype(jnp.float32) * cu_full[..., None, :]
+    v_c = v_full.astype(jnp.float32) * cv_full[..., :, None]
+    return u_c, v_c
+
+
 def _sharded_partial(group_bs, group_as, group_w, gb, ga, *, r_max,
                      backend, method, axes, axis_sizes):
     """Per-shard body (runs INSIDE shard_map): assemble the shard's local
@@ -422,6 +513,21 @@ def _sharded_partial(group_bs, group_as, group_w, gb, ga, *, r_max,
     pod axis shares the work instead of replicating it).
     """
     axis = axes if len(axes) > 1 else axes[0]
+    quantized = any(hasattr(b, "q") for bt in group_bs for b in bt)
+    svd_family = method not in ("fedavg", "hetlora", "ffa", "flora")
+    if quantized and svd_family and backend in ("factored", "kernel"):
+        # quantized collective: psum the raw int8/bf16 payload blocks plus
+        # a tiny f32 per-column weight vector; dequantize AFTER the
+        # reduction (DESIGN.md §12)
+        return _sharded_partial_quantized(
+            group_bs, group_as, group_w, r_max=r_max, axis=axis,
+            axes=axes, axis_sizes=axis_sizes)
+    if quantized:
+        # avg family / flora / dense backend consume full-precision stacks
+        # before their reduction -- dequantize locally (no collective-byte
+        # saving on these paths; documented in DESIGN.md §12)
+        group_bs = tuple(tuple(_dq(b) for b in bt) for bt in group_bs)
+        group_as = tuple(tuple(_dq(a) for a in at) for at in group_as)
     bs = jnp.concatenate([_pad_rank(jnp.stack(bt, axis=1), r_max, -1)
                           for bt in group_bs])        # (m_loc, P, ..., d, r)
     as_ = jnp.concatenate([_pad_rank(jnp.stack(at, axis=1), r_max, -2)
@@ -717,7 +823,7 @@ class Aggregator:
         event-driven engine's partial cohorts ride the same ghost rule).
         """
         n_shards = mesh.shape["data"]
-        sizes = [bt[0].shape[0] for bt in group_bs]
+        sizes = [_leading(bt[0]) for bt in group_bs]
         assert all(g % n_shards == 0 for g in sizes), (sizes, n_shards)
         n_arr = staleness_discount(n_k, staleness, gamma)
         # ghosts and absent clients share ONE masking rule

@@ -97,10 +97,15 @@ def build_experiment(method: str = "raflora", *,
                      pipeline_depth: int = 1,
                      staleness_gamma: float = 1.0,
                      event_scheduler=None,
+                     transport=None,
                      data_seed: int = 0) -> FLExperiment:
     """``event_scheduler``: an ``events.EventScheduler`` switching the
     async engine from the fixed ``pipeline_depth`` cadence to arrival-event
-    buffer triggers on the virtual clock (DESIGN.md §7)."""
+    buffer triggers on the virtual clock (DESIGN.md §7).
+
+    ``transport``: a ``transport.UpdateTransport``/``TransportConfig``
+    compressing client factor uploads (int8/bf16 + error feedback,
+    DESIGN.md §12); None ships f32."""
     fl = FLConfig(aggregator=method, num_clients=20, participation=0.25,
                   num_rounds=40, local_batch_size=32, learning_rate=2e-3,
                   partition="pathological", dirichlet_alpha=1.0,
@@ -160,7 +165,8 @@ def build_experiment(method: str = "raflora", *,
                            round_engine=round_engine, mesh=mesh,
                            pipeline_depth=pipeline_depth,
                            staleness_gamma=staleness_gamma,
-                           event_scheduler=event_scheduler)
+                           event_scheduler=event_scheduler,
+                           transport=transport)
     test_batch = _to_batch(x_te[:512], y_te[:512], data.patches)
     return FLExperiment(server=server, model=model, test_batch=test_batch,
                         registry=registry)

@@ -74,6 +74,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
@@ -89,6 +90,8 @@ from repro.core.energy import EnergyTrace
 from repro.core.lora import merge_lora, split_lora
 from repro.federation.client import LocalTrainer, _stack_steps
 from repro.federation.topology import ClientRegistry
+from repro.federation.transport import (QuantFactor, TransportConfig,
+                                        UpdateTransport)
 from repro.models.transformer import Model
 from repro.optim import get_schedule
 
@@ -206,7 +209,8 @@ class FederatedLoRA:
                  mesh=None,
                  pipeline_depth: int = 1,
                  staleness_gamma: float = 1.0,
-                 event_scheduler=None):
+                 event_scheduler=None,
+                 transport=None):
         """batch_fn(client_id, rng) -> list of training batches (dicts).
 
         ``round_engine="sharded"`` runs the batched engine's dispatches as
@@ -225,6 +229,12 @@ class FederatedLoRA:
         ``events.EventScheduler`` replacing the fixed cadence with
         arrival-event buffer triggers on the virtual clock (see module
         docstring / DESIGN.md §7).
+
+        ``transport``: a ``transport.UpdateTransport`` (or
+        ``TransportConfig``) compressing client->server factor uploads:
+        int8/bf16 per-column quantization with per-client error-feedback
+        accumulators, dequantized once at aggregation stack-build time
+        (DESIGN.md §12). None ships f32 factors unchanged.
         """
         assert round_engine in ("batched", "sequential", "sharded",
                                 "async"), round_engine
@@ -252,6 +262,11 @@ class FederatedLoRA:
         self.base, self.global_lora = split_lora(params)
         self.trainer = LocalTrainer(model, weight_decay=fl.weight_decay,
                                     freeze_a=(fl.aggregator == "ffa"))
+        if isinstance(transport, TransportConfig):
+            transport = UpdateTransport(transport)
+        assert transport is None or isinstance(transport, UpdateTransport), \
+            transport
+        self.transport = transport
         self.server_momentum = server_momentum  # FactoredServerMomentum|None
         self.aggregator = Aggregator(fl.aggregator, lora.rank_levels,
                                      backend=backend,
@@ -381,10 +396,21 @@ class FederatedLoRA:
             self.global_lora = jax.tree_util.tree_map_with_path(
                 rebuild, self.global_lora, is_leaf=lambda x: x is None)
         # round landing: bump the serving adapter version and notify
-        # subscribers (AdapterStore hot-swap) with the new global factors
+        # subscribers (AdapterStore hot-swap) with the new global factors.
+        # Hooks degrade to skip-and-warn: a run whose adapters are not
+        # servable (DoRA magnitudes rejected by the AdapterStore, non-LoRA
+        # variants refused by the serving engine) must not take down the
+        # round loop from inside its own landing notification.
         self.adapter_version += 1
         for hook in self._post_aggregate_hooks:
-            hook(self.adapter_version, self.global_lora)
+            try:
+                hook(self.adapter_version, self.global_lora)
+            except Exception as e:  # noqa: BLE001 -- hooks are best-effort
+                warnings.warn(
+                    f"post-aggregate hook {hook!r} failed at adapter "
+                    f"version {self.adapter_version} ({e}); skipping -- "
+                    "the round loop continues, the subscriber keeps its "
+                    "previous snapshot", RuntimeWarning, stacklevel=2)
 
     def add_post_aggregate_hook(self, hook) -> None:
         """Register ``hook(adapter_version, global_lora)`` to fire at every
@@ -411,18 +437,22 @@ class FederatedLoRA:
 
     # -- local training (both engines) --------------------------------------
 
-    def _train_sequential(self, client_batches, ranks, lr):
+    def _train_sequential(self, client_batches, ranks, lr, clients):
         """Reference path: one ``trainer.train`` call per sampled client."""
         client_factors: List[Dict[tuple, tuple]] = []
         losses = []
-        for batches, rank in zip(client_batches, ranks):
+        for batches, rank, cid in zip(client_batches, ranks, clients):
             trained, metrics = self.trainer.train(
                 self.base, self.global_lora, rank, batches, lr)
-            client_factors.append(self._extract_factors(trained, rank))
+            factors = self._extract_factors(trained, rank)
+            if self.transport is not None:
+                factors = self.transport.encode_client(cid, factors)
+            client_factors.append(factors)
             losses.append(float(metrics.get("loss", jnp.nan)))
         return client_factors, losses
 
-    def _train_grouped(self, client_batches, ranks, lr, *, sharded: bool):
+    def _train_grouped(self, client_batches, ranks, lr, clients, *,
+                       sharded: bool):
         """Batched AND sharded engines: ONE vmapped, jitted multi-client
         dispatch per step-count group trains every sampled client
         regardless of rank (``train_group_masked``: factors zero-masked
@@ -487,9 +517,17 @@ class FederatedLoRA:
             # is exactly the zero-padded (G, ..., d, r_max) stack layout the
             # grouped aggregation expects; _extract_factors is shape-
             # agnostic in the leading axes
-            group_factors.append((members, r_max,
-                                  self._extract_factors_batched(lora_g,
-                                                                r_max)))
+            factors = self._extract_factors_batched(lora_g, r_max)
+            if self.transport is not None:
+                # compress the group's upload: error-feedback accumulators
+                # are keyed by GLOBAL client id (the same client carries
+                # its residual across rounds); ghosts (-1) get zeros in and
+                # their residual out is discarded. Quantization preserves
+                # the zero columns beyond each client's rank (absmax 0 ->
+                # scale 0), so the grouped stack layout is unchanged.
+                gids = [clients[i] if i >= 0 else -1 for i in members]
+                factors = self.transport.encode_group(gids, factors)
+            group_factors.append((members, r_max, factors))
             loss_parts.append((members, loss_g))
         return group_factors, loss_parts
 
@@ -710,10 +748,10 @@ class FederatedLoRA:
         reference trains eagerly."""
         if self.round_engine == "sequential":
             plan.client_factors, plan.losses = self._train_sequential(
-                plan.client_batches, plan.ranks, plan.lr)
+                plan.client_batches, plan.ranks, plan.lr, plan.clients)
         else:
             plan.group_factors, plan.loss_parts = self._train_grouped(
-                plan.client_batches, plan.ranks, plan.lr,
+                plan.client_batches, plan.ranks, plan.lr, plan.clients,
                 sharded=self._sharded_dispatch)
         plan.client_batches = None     # free the host-side batch copies
 
@@ -1046,7 +1084,19 @@ class FederatedLoRA:
     # are checkpointed (flat arrays, no pytree template needed on load).
     # Key encoding: "g{gi}/P/{adapter path}/b|a" for factor pairs,
     # "g{gi}/M/{adapter path}" for DoRA magnitudes, "g{gi}/loss" for the
-    # per-group loss vector.
+    # per-group loss vector. Transport-quantized pairs store payload and
+    # scale separately ("bq"/"bs" and "aq"/"as" leaves) so a mid-buffer
+    # checkpoint round-trips the COMPRESSED plan bit-exactly (int8 payload
+    # + f32 scales) instead of a dequantized approximation.
+
+    @staticmethod
+    def _factor_arrays(arrays: Dict[str, np.ndarray], key: str, val,
+                       leaf: str) -> None:
+        if isinstance(val, QuantFactor) or hasattr(val, "q"):
+            arrays[f"{key}/{leaf}q"] = np.asarray(val.q)
+            arrays[f"{key}/{leaf}s"] = np.asarray(val.scale)
+        else:
+            arrays[f"{key}/{leaf}"] = np.asarray(val)
 
     @staticmethod
     def _plan_arrays(plan: RoundPlan) -> Dict[str, np.ndarray]:
@@ -1059,8 +1109,8 @@ class FederatedLoRA:
                 else:
                     b, a = val
                     key = f"g{gi}/P/" + "/".join(parent)
-                    arrays[key + "/b"] = np.asarray(b)
-                    arrays[key + "/a"] = np.asarray(a)
+                    FederatedLoRA._factor_arrays(arrays, key, b, "b")
+                    FederatedLoRA._factor_arrays(arrays, key, a, "a")
         for gi, (_, loss_g) in enumerate(plan.loss_parts):
             if loss_g is not None:
                 arrays[f"g{gi}/loss"] = np.asarray(loss_g)
@@ -1094,7 +1144,11 @@ class FederatedLoRA:
                     pairs.setdefault(tuple(path.split("/")), {})[leaf] = \
                         jnp.asarray(arr)
             for parent, ba in pairs.items():
-                factors[parent] = (ba["b"], ba["a"])
+                factors[parent] = (
+                    QuantFactor(ba["bq"], ba["bs"]) if "bq" in ba
+                    else ba["b"],
+                    QuantFactor(ba["aq"], ba["as"]) if "aq" in ba
+                    else ba["a"])
             members = [int(m) for m in g["members"]]
             group_factors.append((members, int(g["r_max"]), factors))
             loss = arrays.get(prefix + "loss")
@@ -1127,6 +1181,13 @@ class FederatedLoRA:
             save_flat(path + ".momentum",
                       self.server_momentum.state_arrays())
             meta["momentum"] = True
+        # compressed transport: per-client error-feedback accumulators ride
+        # as flat f32 arrays (bit-exact) -- without them a resumed run
+        # re-quantizes from zero residual and diverges from the
+        # uninterrupted compressed run
+        if self.transport is not None:
+            save_flat(path + ".transport", self.transport.state_arrays())
+            meta["transport"] = True
         # async engine: dispatched-but-unaggregated plans ride along so a
         # resumed run aggregates the SAME trained factors the uninterrupted
         # run would have
@@ -1155,6 +1216,8 @@ class FederatedLoRA:
         self._pending.clear()
         if self.server_momentum is not None:
             self.server_momentum.state = None
+        if self.transport is not None:
+            self.transport.reset()
         meta = load_metadata(path + ".lora")
         if meta:
             self.round_idx = meta.get("round", self.round_idx)
@@ -1174,6 +1237,20 @@ class FederatedLoRA:
             if meta.get("momentum") and self.server_momentum is not None:
                 self.server_momentum.load_state_arrays(
                     load_flat(path + ".momentum"))
+            if self.transport is not None:
+                if meta.get("transport"):
+                    self.transport.load_state_arrays(
+                        load_flat(path + ".transport"))
+                else:
+                    # back-compat: a checkpoint written before the
+                    # compressed transport existed carries no accumulator
+                    # state -- resume with zero residuals instead of
+                    # KeyError'ing (the telescoping restarts at e_0 = 0)
+                    warnings.warn(
+                        "checkpoint predates the compressed update "
+                        "transport; error-feedback accumulators "
+                        "initialize to zero", RuntimeWarning,
+                        stacklevel=2)
             for i, pm in enumerate(meta.get("pending") or []):
                 self._pending.append(self._plan_from_arrays(
                     pm, load_flat(path + f".pending{i}")))

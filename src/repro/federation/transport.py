@@ -1,0 +1,288 @@
+"""Compressed update transport with error feedback (DESIGN.md §12).
+
+Clients ship quantized U/V factors instead of f32: each paper-layout
+factor pair (B (…, d, r), A (…, r, n)) is encoded per RANK COLUMN with
+absmax scales -- B's scale is the absmax over its d rows per column
+((…, 1, r)), A's the absmax over its n entries per row ((…, r, 1)) --
+so the quantization grid adapts per rank direction and a zero column
+(every column beyond a client's rank level r_k in the masked-training
+layout) gets scale 0 and decodes to EXACTLY zero. Rank-level awareness
+therefore costs nothing: the omega zero-columns of Eq. 6/7 stay zero
+bit-for-bit, and the rank-partition weighting math downstream is
+unchanged because every consumer dequantizes BEFORE weighting (the
+Eq. 8 fallback client and async staleness discounts act on dequantized
+contributions).
+
+Error feedback (the EF-SGD / 1-bit-Adam residual trick): the encoder
+compresses x' = x + e where e is the client's accumulated quantization
+residual from its previous participation, then stores e' = x' - deq(q).
+Summed over K rounds the residuals telescope,
+
+    sum_t deq(q_t) = sum_t x_t + e_0 - e_K,
+
+so the compressed update SUM tracks the uncompressed sum to within one
+residual -- compression noise does not accumulate. Accumulators are
+host-side f32 numpy per (client, adapter), flushed lazily from device
+handles so the async engine's non-blocking dispatch discipline is
+preserved, and ride ``save()``/``restore()`` bit-exactly via the flat
+npz machinery.
+
+Optional top-k rank sparsification drops all but the k most energetic
+rank columns (energy = ||B_col|| * ||A_row||) before quantization; the
+dropped mass lands in the error-feedback residual and re-enters next
+round.
+
+``QuantFactor`` is a NamedTuple (= a jax pytree node), so quantized
+pairs flow through the existing plan buffers, jit dispatches and
+shard_map programs untouched; dequantization happens ONCE at
+stack-build time inside ``core/aggregation.py`` / ``kernels/ops.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MODES = ("int8", "bf16")
+
+
+class QuantFactor(NamedTuple):
+    """One quantized factor: integer/bf16 payload + f32 per-column scales.
+
+    ``q``      -- payload, int8 (absmax grid) or bf16 (scale == 1)
+    ``scale``  -- f32, (…, 1, r) for B factors / (…, r, 1) for A factors;
+                  exactly 0.0 for all-zero columns so they decode to 0
+    """
+    q: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def is_quantized(x) -> bool:
+    """Duck-typed: True for QuantFactor (incl. across module reloads)."""
+    return hasattr(x, "q") and hasattr(x, "scale")
+
+
+def dequantize(x):
+    """QuantFactor -> f32 array; plain arrays pass through untouched."""
+    if is_quantized(x):
+        return x.q.astype(jnp.float32) * x.scale
+    return x
+
+
+def _quantize(x: jnp.ndarray, axis: int, mode: str) -> QuantFactor:
+    """Per-column absmax quantization along ``axis`` (kept as size 1)."""
+    if mode == "bf16":
+        ones = jnp.ones_like(jnp.max(x, axis=axis, keepdims=True))
+        return QuantFactor(x.astype(jnp.bfloat16), ones)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    q = jnp.where(scale > 0, q, jnp.zeros_like(q))
+    return QuantFactor(q, scale)
+
+
+def _topk_mask(b: jnp.ndarray, a: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(…, r) keep-mask of the k most energetic rank columns."""
+    eb = jnp.sqrt(jnp.sum(b * b, axis=-2))          # (…, r)
+    ea = jnp.sqrt(jnp.sum(a * a, axis=-1))          # (…, r)
+    energy = eb * ea
+    thr = -jnp.sort(-energy, axis=-1)[..., k - 1:k]  # k-th largest
+    # strictly-positive threshold only: when fewer than k columns are
+    # nonzero the threshold is 0 and every nonzero column survives
+    return ((energy >= thr) | (thr <= 0)).astype(b.dtype)
+
+
+@partial(jax.jit, static_argnames=("mode", "top_k"))
+def _encode_pair(b, a, eb, ea, *, mode: str, top_k: Optional[int]):
+    """Quantize one (B, A) pair with error feedback.
+
+    Returns (qb, qa, rb, ra): the QuantFactor pair and the NEW residuals
+    (x + e - deq), all as unmaterialized device handles -- callers must
+    not block on them (async overlap discipline, DESIGN.md §6)."""
+    xb = b.astype(jnp.float32) + eb
+    xa = a.astype(jnp.float32) + ea
+    yb, ya = xb, xa
+    if top_k is not None and top_k < b.shape[-1]:
+        mask = _topk_mask(xb, xa, top_k)
+        yb = xb * mask[..., None, :]
+        ya = xa * mask[..., :, None]
+    qb = _quantize(yb, axis=-2, mode=mode)          # B: absmax over d rows
+    qa = _quantize(ya, axis=-1, mode=mode)          # A: absmax over n cols
+    rb = xb - dequantize(qb)
+    ra = xa - dequantize(qa)
+    return qb, qa, rb, ra
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportConfig:
+    """Client->server update compression knobs.
+
+    ``mode``            -- "int8" (per-column absmax grid) or "bf16"
+    ``error_feedback``  -- carry per-client residual accumulators
+    ``top_k``           -- keep only the k most energetic rank columns
+                           per adapter (None: keep all)
+    """
+    mode: str = "int8"
+    error_feedback: bool = True
+    top_k: Optional[int] = None
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+        assert self.top_k is None or self.top_k >= 1, self.top_k
+
+
+def _is_magnitude(parent) -> bool:
+    """DoRA magnitude entries ((parent, "m")) ship uncompressed: they are
+    (…, out)-shaped FedAvg'd vectors, not rank-structured factors."""
+    return (isinstance(parent, tuple) and len(parent) == 2
+            and parent[1] == "m")
+
+
+class UpdateTransport:
+    """Stateful encoder: per-client error-feedback accumulators + the
+    jitted quantizer, shared by all five round engines.
+
+    Accumulators are HOST numpy ((eb, ea) f32 per (client, adapter)),
+    but freshly-encoded residuals enter a pending list as device handles
+    and materialize lazily (``_flush``) at the NEXT encode / state read:
+    between dispatches the host stays jax-free, so the async engine's
+    in-flight overlap survives compression."""
+
+    def __init__(self, config: Optional[TransportConfig] = None, **kw):
+        self.cfg = config if config is not None else TransportConfig(**kw)
+        # cid -> parent -> (eb, ea) f32 numpy
+        self._acc: Dict[int, Dict[tuple, Tuple[np.ndarray, np.ndarray]]] = {}
+        # (client ids per stacked position | [cid], {parent: (rb, ra)},
+        #  stacked?) -- residual handles awaiting materialization
+        self._pending: List[tuple] = []
+
+    # -- encoding ------------------------------------------------------------
+
+    def encode_group(self, client_ids: List[int],
+                     factors: Dict[tuple, object]) -> Dict[tuple, object]:
+        """Encode one grouped-engine factor stack ({parent: (B, A)} with
+        leading client axis). ``client_ids[j]`` is the GLOBAL client id at
+        stacked position j, or -1 for a sharded ghost (zero residual in,
+        residual out discarded)."""
+        self._flush()
+        out: Dict[tuple, object] = {}
+        residuals: Dict[tuple, tuple] = {}
+        for parent, val in factors.items():
+            if _is_magnitude(parent):
+                out[parent] = val
+                continue
+            b, a = val
+            eb, ea = self._residual_stack(client_ids, parent, b.shape,
+                                          a.shape)
+            qb, qa, rb, ra = _encode_pair(b, a, eb, ea, mode=self.cfg.mode,
+                                          top_k=self.cfg.top_k)
+            out[parent] = (qb, qa)
+            residuals[parent] = (rb, ra)
+        if self.cfg.error_feedback and residuals:
+            self._pending.append((list(client_ids), residuals, True))
+        return out
+
+    def encode_client(self, cid: int,
+                      factors: Dict[tuple, object]) -> Dict[tuple, object]:
+        """Sequential-engine variant: one client's per-rank factors
+        ((…, d, r_k) / (…, r_k, n), no client axis)."""
+        self._flush()
+        out: Dict[tuple, object] = {}
+        residuals: Dict[tuple, tuple] = {}
+        for parent, val in factors.items():
+            if _is_magnitude(parent):
+                out[parent] = val
+                continue
+            b, a = val
+            eb, ea = self._residual_one(cid, parent, b.shape, a.shape)
+            qb, qa, rb, ra = _encode_pair(b, a, eb, ea, mode=self.cfg.mode,
+                                          top_k=self.cfg.top_k)
+            out[parent] = (qb, qa)
+            residuals[parent] = (rb, ra)
+        if self.cfg.error_feedback and residuals:
+            self._pending.append(([cid], residuals, False))
+        return out
+
+    # -- error-feedback accumulators ----------------------------------------
+
+    def _residual_stack(self, client_ids, parent, b_shape, a_shape):
+        """Previous residuals stacked in client order (zeros when absent
+        or shape-mismatched, e.g. a client re-encoding at a new r_max)."""
+        eb = np.zeros(b_shape, np.float32)
+        ea = np.zeros(a_shape, np.float32)
+        for j, cid in enumerate(client_ids):
+            got = self._acc.get(cid, {}).get(parent)
+            if got is not None and got[0].shape == b_shape[1:] \
+                    and got[1].shape == a_shape[1:]:
+                eb[j], ea[j] = got
+        return eb, ea
+
+    def _residual_one(self, cid, parent, b_shape, a_shape):
+        got = self._acc.get(cid, {}).get(parent)
+        if got is not None and got[0].shape == tuple(b_shape) \
+                and got[1].shape == tuple(a_shape):
+            return got
+        return (np.zeros(b_shape, np.float32), np.zeros(a_shape, np.float32))
+
+    def _flush(self) -> None:
+        """Materialize pending residual handles into the accumulators.
+        Called lazily (next encode / state read), so the handles are a
+        full round old and the transfer never stalls in-flight work."""
+        for client_ids, residuals, stacked in self._pending:
+            for parent, (rb, ra) in residuals.items():
+                rb = np.asarray(rb, dtype=np.float32)
+                ra = np.asarray(ra, dtype=np.float32)
+                if stacked:
+                    for j, cid in enumerate(client_ids):
+                        if cid >= 0:    # sharded ghosts carry no residual
+                            self._acc.setdefault(cid, {})[parent] = \
+                                (rb[j], ra[j])
+                else:
+                    self._acc.setdefault(client_ids[0], {})[parent] = \
+                        (rb, ra)
+        self._pending = []
+
+    # -- checkpoint state (flat npz, bit-exact f32) --------------------------
+
+    def has_state(self) -> bool:
+        return bool(self._acc) or bool(self._pending)
+
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        """{"c{cid}/{adapter path}/b|a": residual} -- sorted, flat,
+        np.float32 throughout, so save_flat/load_flat round-trips the
+        accumulators bit-exactly."""
+        self._flush()
+        out: Dict[str, np.ndarray] = {}
+        for cid in sorted(self._acc):
+            for parent, (eb, ea) in self._acc[cid].items():
+                key = f"c{cid}/" + "/".join(parent)
+                out[key + "/b"] = eb
+                out[key + "/a"] = ea
+        return out
+
+    def load_state_arrays(self, arrays: Dict[str, np.ndarray]) -> None:
+        self.reset()
+        pairs: Dict[tuple, dict] = {}
+        for key, arr in arrays.items():
+            cid_s, rest = key.split("/", 1)
+            path, leaf = rest.rsplit("/", 1)
+            pairs.setdefault((int(cid_s[1:]), tuple(path.split("/"))),
+                             {})[leaf] = np.asarray(arr, dtype=np.float32)
+        for (cid, parent), ba in pairs.items():
+            self._acc.setdefault(cid, {})[parent] = (ba["b"], ba["a"])
+
+    def reset(self) -> None:
+        self._acc = {}
+        self._pending = []
+
+    # -- reporting -----------------------------------------------------------
+
+    def payload_bytes(self, d: int, n: int, r: int) -> int:
+        """Wire bytes of one encoded (B, A) adapter pair at (d, r, n)."""
+        itemsize = 1 if self.cfg.mode == "int8" else 2
+        return (d * r + r * n) * itemsize + (r + r) * 4   # payload + scales

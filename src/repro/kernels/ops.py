@@ -177,6 +177,18 @@ def rank_partition_agg_layered(bs: jnp.ndarray, as_: jnp.ndarray,
 # These helpers are plain traced functions (no own jit) so the aggregation
 # pipelines can call them inside their jitted / shard_map'd bodies.
 
+def _dequant(x):
+    """Accept the compressed-transport layout (QuantFactor: int8/bf16
+    payload + f32 per-column scales, DESIGN.md §12) at every factor-stack
+    entry point. Duck-typed so kernels/ never imports repro.federation;
+    plain f32 stacks pass through untouched. The payload->f32 multiply is
+    elementwise staging the Pallas grids consume directly -- the grids
+    themselves stay layout-agnostic."""
+    if hasattr(x, "q") and hasattr(x, "scale"):
+        return x.q.astype(jnp.float32) * x.scale
+    return x
+
+
 def _append_fallback_client(bs, as_, omega, global_b, global_a, fallback,
                             *, layer_axes: int):
     """Concatenate the global factors as client M+1 carrying ``fallback``.
@@ -237,6 +249,7 @@ def factored_stack_lead(bs: jnp.ndarray, as_: jnp.ndarray,
     bs (M, *B, d, r); as_ (M, *B, r, n); omega (M, r). Returns
     u_c (*B, d, M*r8), v_c (*B, M*r8, n) -- the layout the sharded round
     engine zero-scatters and psums (DESIGN.md §5), built on-chip."""
+    bs, as_ = _dequant(bs), _dequant(as_)
     m, r = bs.shape[0], bs.shape[-1]
     d, n = bs.shape[-2], as_.shape[-1]
     lead = bs.shape[1:-2]
@@ -279,6 +292,7 @@ def factored_stack_gram(bs: jnp.ndarray, as_: jnp.ndarray,
     bs (M, d, r); as_ (M, r, n); omega (M, r); optional global factors
     enter as one extra "client" carrying the Eq. 8 fallback indicator.
     """
+    bs, as_ = _dequant(bs), _dequant(as_)
     bs, as_, omega = _append_fallback_client(bs, as_, omega, global_b,
                                              global_a, fallback,
                                              layer_axes=0)
@@ -298,6 +312,7 @@ def factored_stack_gram_layered(bs: jnp.ndarray, as_: jnp.ndarray,
     """Layer-batched ``factored_stack_gram``: one kernel launch per shape
     bucket. bs (L, M, d, r); as_ (L, M, r, n); omega (M, r) shared across
     layers; global factors (L, d, r)/(L, r, n)."""
+    bs, as_ = _dequant(bs), _dequant(as_)
     bs, as_, omega = _append_fallback_client(bs, as_, omega, global_b,
                                              global_a, fallback,
                                              layer_axes=1)

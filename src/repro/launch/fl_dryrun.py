@@ -72,16 +72,36 @@ def check_kernel_parity(texts: dict, tag: str) -> int:
 
 
 def lower_aggregation(*, d: int, n: int, clients: int, r_max: int,
-                      multi_pod: bool, backend: str):
+                      multi_pod: bool, backend: str,
+                      transport: str = "none"):
     """Lower the live sharded-bucket pipeline for one single-adapter bucket
     (one client group, no Eq. 8 fallback active this round). Clients shard
     over ALL batch axes -- ("pod", "data") in multi-pod -- so the pod axis
-    shares the reduction instead of replicating it."""
+    shares the reduction instead of replicating it.
+
+    ``transport`` != "none" lowers the QUANTIZED collective (DESIGN.md
+    §12): client uploads arrive as transport ``QuantFactor`` payloads
+    (int8/bf16 + f32 per-column scales) and the program all-reduces the
+    compressed bytes, dequantizing once after the psum."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     baxes = batch_axes(mesh)
     cl = NamedSharding(mesh, client_spec(baxes))
-    bs = jax.ShapeDtypeStruct((clients, d, r_max), jnp.float32, sharding=cl)
-    as_ = jax.ShapeDtypeStruct((clients, r_max, n), jnp.float32, sharding=cl)
+    if transport != "none":
+        from repro.federation.transport import QuantFactor
+        pay = jnp.int8 if transport == "int8" else jnp.bfloat16
+        bs = QuantFactor(
+            jax.ShapeDtypeStruct((clients, d, r_max), pay, sharding=cl),
+            jax.ShapeDtypeStruct((clients, 1, r_max), jnp.float32,
+                                 sharding=cl))
+        as_ = QuantFactor(
+            jax.ShapeDtypeStruct((clients, r_max, n), pay, sharding=cl),
+            jax.ShapeDtypeStruct((clients, r_max, 1), jnp.float32,
+                                 sharding=cl))
+    else:
+        bs = jax.ShapeDtypeStruct((clients, d, r_max), jnp.float32,
+                                  sharding=cl)
+        as_ = jax.ShapeDtypeStruct((clients, r_max, n), jnp.float32,
+                                   sharding=cl)
     omega = jax.ShapeDtypeStruct((clients, r_max), jnp.float32, sharding=cl)
     fn = sharded_grouped_fn(mesh, r_max, backend, "raflora", axes=baxes)
     lowered = fn.lower(((bs,),), ((as_,),), (omega,), None, None, None)
@@ -113,6 +133,64 @@ def simulate_trigger_cohorts(trigger: str, *, clients_per_round: int,
     return counts
 
 
+def transport_gate(args, chips: int) -> int:
+    """Lower the quantized collective next to the f32 factored program and
+    GATE: the compressed program's collective bytes must be STRICTLY below
+    the f32 factored baseline, else exit 1. At int8 the payload is 1/4 the
+    f32 stack plus a tiny f32 per-column scale*sqrt(omega) vector, so the
+    ratio lands near 4x (bf16 near 2x); a ratio <= 1 means the quantized
+    staging regressed into shipping full-precision bytes."""
+    from repro.launch.hlo_walker import analyze_hlo
+    merged = args.clients * args.pipeline_depth
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    tag = f"d{args.d}xn{args.n}xM{merged}"
+    # Byte accounting is asymmetric ON PURPOSE. The f32 factored baseline
+    # moves real f32 stacks on TPU too, so it gates on RAW HLO collective
+    # bytes. The quantized rows gate on the tpu-corrected figure
+    # (``collective_bytes_tpu`` halves the f32 share): XLA:CPU upcasts the
+    # bf16 payload psum to f32 (emulation artifact -- a TPU moves bf16),
+    # and the int8 payload stays s8 either way, so the correction touches
+    # exactly the emulated bytes plus the negligible f32 scale vectors.
+    lowered, compiled, _ = lower_aggregation(
+        d=args.d, n=args.n, clients=merged, r_max=args.r_max,
+        multi_pod=args.multi_pod, backend="factored")
+    base = analyze_compiled(lowered, compiled, arch="fl-agg-factored",
+                            shape=tag, mesh_name=mesh_name, chips=chips)
+    base_raw = analyze_hlo(compiled.as_text()).total_collective_bytes * chips
+    print(f"[OK] fl-transport baseline  f32/factored   "
+          f"tx={base.t_collective*1e6:9.2f}us "
+          f"coll={base_raw/1e6:8.1f}MB")
+    texts = {}
+    raws = {}
+    for backend in ("factored", "kernel"):
+        lowered, compiled, _ = lower_aggregation(
+            d=args.d, n=args.n, clients=merged, r_max=args.r_max,
+            multi_pod=args.multi_pod, backend=backend,
+            transport=args.transport)
+        texts[backend] = compiled.as_text()
+        rep = analyze_compiled(
+            lowered, compiled, arch=f"fl-agg-tx-{backend}",
+            shape=f"{tag}{args.transport}", mesh_name=mesh_name,
+            chips=chips)
+        raw = analyze_hlo(texts[backend]).collective_bytes_tpu * chips
+        raws[backend] = raw
+        print(f"[OK] fl-transport {args.transport}/{backend:9s} "
+              f"tx={rep.t_collective*1e6:9.2f}us "
+              f"coll={raw/1e6:8.1f}MB "
+              f"reduction={base_raw/max(raw, 1):5.2f}x")
+    findings = check_kernel_parity(texts, f"{tag}{args.transport}")
+    worst = max(raws.values())
+    if worst >= base_raw:
+        print(f"[GATE FAIL] quantized collective moves {worst/1e6:.1f}MB, "
+              f"not strictly below the f32 factored "
+              f"{base_raw/1e6:.1f}MB")
+        return 1
+    print(f"[OK] fl-transport gate: {args.transport} collective "
+          f"{worst/1e6:.1f}MB < f32 factored {base_raw/1e6:.1f}MB "
+          f"({base_raw/max(worst, 1):.2f}x reduction)")
+    return 1 if findings else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--d", type=int, default=4096)
@@ -128,9 +206,17 @@ def main(argv=None) -> int:
                     help="lower the EVENT-DRIVEN buffered step at the "
                          "simulated trigger's p50/p95 cohort sizes")
     ap.add_argument("--straggler-fraction", type=float, default=0.25)
+    ap.add_argument("--transport", choices=("none", "int8", "bf16"),
+                    default="none",
+                    help="lower the COMPRESSED update collective "
+                         "(DESIGN.md §12) and gate its bytes against the "
+                         "f32 factored program")
     args = ap.parse_args(argv)
 
     chips = 512 if args.multi_pod else 256
+
+    if args.transport != "none":
+        return transport_gate(args, chips)
 
     if args.trigger is not None:
         counts = simulate_trigger_cohorts(

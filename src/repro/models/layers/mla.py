@@ -121,13 +121,22 @@ def mla_decode(params: dict, x: jnp.ndarray, position: jnp.ndarray,
     pos2d = position[:, None]
     q_rope = apply_rope(q_rope, pos2d, rope_theta)
     k_rope_new = apply_rope(k_rope_new[:, :, None, :], pos2d, rope_theta)[:, :, 0]
-    # write the new latent into the cache (uniform across batch; ring index
-    # when the cache is window-sized)
-    cl = jnp.asarray(cache_len if write_idx is None else write_idx).reshape(-1)[0]
-    cache_ckv = jax.lax.dynamic_update_slice(
-        cache_ckv, c_kv_new.astype(cache_ckv.dtype), (0, cl, 0))
-    cache_krope = jax.lax.dynamic_update_slice(
-        cache_krope, k_rope_new.astype(cache_krope.dtype), (0, cl, 0))
+    # write the new latent into the cache: scalar index (single-sequence
+    # decode; ring index when the cache is window-sized) or per-slot (B,)
+    # indices (continuous-batching serving with ragged slot lengths) --
+    # mirroring the per-head attention path in transformer._attn_decode
+    wi = jnp.asarray(cache_len if write_idx is None else write_idx)
+    if jnp.ndim(wi) == 0:
+        cache_ckv = jax.lax.dynamic_update_slice(
+            cache_ckv, c_kv_new.astype(cache_ckv.dtype), (0, wi, 0))
+        cache_krope = jax.lax.dynamic_update_slice(
+            cache_krope, k_rope_new.astype(cache_krope.dtype), (0, wi, 0))
+    else:
+        rows = jnp.arange(b_)
+        cache_ckv = cache_ckv.at[rows, wi].set(
+            c_kv_new[:, 0].astype(cache_ckv.dtype))
+        cache_krope = cache_krope.at[rows, wi].set(
+            k_rope_new[:, 0].astype(cache_krope.dtype))
     # absorbed attention: expand latent to per-head K/V for scoring.
     k_nope_c, v_c = _expand_kv(params, cache_ckv, num_heads, cfg)  # (B,S,H,*)
     k_rope_b = jnp.broadcast_to(

@@ -387,9 +387,9 @@ class Model:
             new_cache.update(conv=conv_s, ssm=ssm_s)
             return x + mixed, new_cache
         if cfg.mla is not None:
-            if jnp.ndim(cache_len) != 0:
-                raise NotImplementedError(
-                    "per-slot cache lengths not supported for MLA decode")
+            # cache_len may be scalar (single-sequence decode) or (B,)
+            # per-slot lengths (continuous-batching serving): mla_decode
+            # vectorizes the cache write, decode_attention the mask
             s_cache = cache_l["ckv"].shape[1]
             attn_out, (ckv, krope) = mla_decode(
                 p["attn"], h, positions[:, 0] if positions.ndim > 1 else positions,

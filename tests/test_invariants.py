@@ -143,7 +143,7 @@ class TestStragglerRankCollapse:
     raFLoRA's rank-partitioned weights keep the higher-rank energy alive.
     """
 
-    def _run(self, method):
+    def _run(self, method, transport=None):
         from repro.federation.events import (EventScheduler,
                                              StragglerTailLatency,
                                              TimeoutTrigger)
@@ -154,7 +154,7 @@ class TestStragglerRankCollapse:
                           "participation": 0.5},
             samples_per_class=60, num_classes=12, d_model=96,
             batches_per_round=1, round_engine="async",
-            staleness_gamma=0.6)
+            staleness_gamma=0.6, transport=transport)
         # stragglers = every client above the minimum rank level: the
         # high-rank updates always arrive one-to-several windows late
         high = np.flatnonzero(
@@ -176,6 +176,21 @@ class TestStragglerRankCollapse:
         # high-rank updates DO arrive (late, discounted); raFLoRA holds it
         assert ratios["flexlora"][-1] < 0.5 * ratios["flexlora"][0]
         assert ratios["raflora"][-1] > 0.8 * ratios["raflora"][0]
+        assert ratios["raflora"][-1] > 2.0 * ratios["flexlora"][-1]
+
+    def test_collapse_contrast_survives_int8_error_feedback(self):
+        """The paper's straggler contrast must SURVIVE the compressed
+        update transport (DESIGN.md §12): with int8 quantization + error
+        feedback on every upload, staleness discounting acting on
+        DEQUANTIZED contributions, raFLoRA still holds the higher-rank
+        energy (absolute floor 0.4) while FlexLoRA still collapses."""
+        from repro.federation.transport import TransportConfig
+        tx = TransportConfig(mode="int8", error_feedback=True)
+        ratios = {m: self._run(m, transport=tx).higher_rank_ratio
+                  for m in ("flexlora", "raflora")}
+        assert ratios["raflora"][-1] >= 0.4, ratios["raflora"]
+        assert ratios["flexlora"][-1] < 0.5 * ratios["flexlora"][0], \
+            ratios["flexlora"]
         assert ratios["raflora"][-1] > 2.0 * ratios["flexlora"][-1]
 
 

@@ -70,6 +70,13 @@ def ssm_setup():
     return cfg, model, params
 
 
+@pytest.fixture(scope="module")
+def mla_setup():
+    cfg, model = _reduced("deepseek-v2-236b")
+    params = model.init(jax.random.PRNGKey(5))
+    return cfg, model, params
+
+
 # ---------------------------------------------------------------------------
 # AdapterStore
 # ---------------------------------------------------------------------------
@@ -236,6 +243,46 @@ def test_e2e_greedy_matches_full_forward(setup_name, request):
                                       err_msg=f"slot {row} rank {rank}")
 
 
+def test_e2e_mla_ragged_slots_matches_full_forward(mla_setup):
+    """deepseek-style MLA serving with RAGGED per-slot cache lengths: slot 1
+    admits mid-stream with a shorter prompt, so ``cache["len"]`` is a
+    heterogeneous vector when both slots decode together -- the shape that
+    used to raise NotImplementedError in the MLA decode path. Every slot's
+    greedy continuation must still match the full-sequence forward."""
+    cfg, model, params = mla_setup
+    base, lora_tree = split_lora(params)
+    tree_hi = _rand_lora(lora_tree, jax.random.PRNGKey(7))
+    tree_lo = _rand_lora(lora_tree, jax.random.PRNGKey(8))
+
+    store = AdapterStore(LORA.rank_levels)
+    store.put("hi", tree_hi, 16)
+    store.put("lo", tree_lo, 4)
+    store.publish()
+
+    lp0, lp1 = 8, 5
+    key = jax.random.PRNGKey(9)
+    prompt0 = jax.random.randint(key, (1, lp0), 0, cfg.vocab_size)
+    prompt1 = jax.random.randint(jax.random.fold_in(key, 1), (1, lp1), 0,
+                                 cfg.vocab_size)
+    engine = ServingEngine(model, params, store, max_len=lp0 + 6, slots=2)
+    gen0 = [int(engine.admit([0], prompt0, ["hi"])[0])]
+    gen0.append(int(engine.decode(jnp.array([True, False]))[0]))
+    gen1 = [int(engine.admit([1], prompt1, ["lo"])[0])]
+    lens = np.asarray(engine.slot_len())
+    assert lens[0] != lens[1], "slots must be genuinely ragged"
+    for _ in range(2):
+        toks = engine.decode(jnp.array([True, True]))
+        gen0.append(int(toks[0]))
+        gen1.append(int(toks[1]))
+
+    for row, (tree, rank, prompt, gen) in enumerate(
+            [(tree_hi, 16, prompt0, gen0), (tree_lo, 4, prompt1, gen1)]):
+        merged = merge_lora(base, _mask_rank(tree, rank))
+        want = _greedy_reference(model, merged, prompt[0], len(gen))
+        np.testing.assert_array_equal(
+            gen, want, err_msg=f"slot {row} rank {rank} (ragged decode)")
+
+
 # ---------------------------------------------------------------------------
 # hot-swap atomicity at a round landing
 # ---------------------------------------------------------------------------
@@ -376,9 +423,10 @@ def _tiny_experiment(**kw):
     fl = {"num_clients": 4, "participation": 1.0, "num_rounds": 8,
           "local_batch_size": 4}
     fl.update(kw.pop("fl_overrides", {}))
+    lora = {"rank_levels": (4, 8), "rank_probs": (0.5, 0.5)}
+    lora.update(kw.pop("lora_overrides", {}))
     return build_experiment(
-        "raflora", fl_overrides=fl,
-        lora_overrides={"rank_levels": (4, 8), "rank_probs": (0.5, 0.5)},
+        "raflora", fl_overrides=fl, lora_overrides=lora,
         num_classes=4, d_model=32, samples_per_class=8,
         batches_per_round=1, **kw)
 
@@ -409,6 +457,22 @@ class TestRoundLandingHook:
         assert store.version >= 1
         log = store.published
         assert log is not None and log.version == store.version
+
+    def test_unservable_adapters_skip_and_warn(self):
+        """A DoRA run with a bound AdapterStore: the store rejects DoRA
+        magnitudes at publish(), so the post-aggregate hook raises inside
+        the round loop. The hook must degrade to skip-and-warn -- training
+        continues, the store simply never publishes -- instead of taking
+        down the round. (Regression: the hook exception used to propagate
+        out of ``_write_factors`` and abort ``run()``.)"""
+        exp = _tiny_experiment(round_engine="batched",
+                               lora_overrides={"variant": "dora"})
+        store = AdapterStore((4, 8))
+        store.bind_server(exp.server)
+        with pytest.warns(RuntimeWarning, match="post-aggregate hook"):
+            exp.server.run(2)
+        assert exp.server.adapter_version == 2    # the round loop survived
+        assert store.published is None            # nothing ever servable
 
     def test_served_factors_track_global(self):
         exp = _tiny_experiment(round_engine="batched")

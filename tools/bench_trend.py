@@ -12,6 +12,7 @@ Rows compared (each a seconds-per-round statistic):
   sharded/<shards>                         ``sharded`` study
   async/<depth-or-batched>                 ``async`` study
   kernel/<config>                          ``kernel_backend`` study
+  transport/<mode>                         ``transport`` study (ISSUE 10)
 
 Defenses against shared-CPU noise (which drifts 2-3x between sessions
 and is one-sided -- contention only ADDS time):
@@ -80,7 +81,8 @@ def _rows(artifact: dict) -> dict:
     out = {}
     _section_rows(out, artifact, "engine")
     for key, prefix in (("sharded", "sharded"), ("async", "async"),
-                        ("kernel_backend", "kernel")):
+                        ("kernel_backend", "kernel"),
+                        ("transport", "transport")):
         _section_rows(out, artifact.get(key) or {}, prefix)
     return out
 

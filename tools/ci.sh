@@ -24,6 +24,11 @@
 #   tools/ci.sh kernel-smoke # backend="kernel" engine matrix (sequential/
 #                            # batched/sharded/async x every METHODS) under
 #                            # a forced 8-virtual-device CPU host platform
+#   tools/ci.sh transport    # compressed update transport (DESIGN.md §12):
+#                            # quantize/error-feedback property + engine
+#                            # matrix + checkpoint tests under 8 virtual
+#                            # devices, then the fl_dryrun byte gate (int8
+#                            # collective bytes must beat f32 factored)
 #   tools/ci.sh lint         # program-audit sweep (DESIGN.md §8): hlo /
 #                            # jaxpr / pallas / dispatch lint rules over
 #                            # every engine x backend x method program plus
@@ -111,6 +116,13 @@ case "$tier" in
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python -m pytest -x -q tests/test_kernel_engines.py
     ;;
+  transport)
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+      python -m pytest -x -q tests/test_transport.py
+    # byte gate lowers its own 512-device mesh; do NOT export the 8-device
+    # XLA_FLAGS override above it
+    exec python -m repro.launch.fl_dryrun --transport int8
+    ;;
   lint)
     export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
     exec python tools/lint_programs.py
@@ -137,7 +149,7 @@ case "$tier" in
       --out "$scratch/AUDIT_protocol.json"
     ;;
   *)
-    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|serve-smoke|shard-smoke|kernel-smoke|lint|certify|lint-fast|verify|verify-fast]" >&2
+    echo "usage: tools/ci.sh [tier1|smoke|bench|bench-check|bench-full|serve-smoke|shard-smoke|kernel-smoke|transport|lint|certify|lint-fast|verify|verify-fast]" >&2
     exit 2
     ;;
 esac

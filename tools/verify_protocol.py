@@ -216,6 +216,7 @@ ROUND_PATH_FILES = (
     "src/repro/federation/server.py",
     "src/repro/federation/topology.py",
     "src/repro/federation/experiment.py",
+    "src/repro/federation/transport.py",
     "src/repro/core/aggregation.py",
     "src/repro/data/traces.py",
     "src/repro/checkpointing/checkpoint.py",
